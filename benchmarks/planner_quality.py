@@ -1,0 +1,43 @@
+"""Planner quality + overhead: DP vs exhaustive optimality, planning time
+(paper: <10 s scheduling overhead)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import csv_row, default_tasks
+from repro.configs import get_config
+from repro.core import CostModel, ExecutionPlanner, ParallelismSpec, fuse_tasks
+from repro.core.fusion import fuse_exhaustive
+
+
+def run() -> list[str]:
+    rows = []
+    cfg = get_config("llama3.2-3b")
+    par = ParallelismSpec(num_stages=4, chips_per_stage=1)
+
+    for m in (4, 6, 8):
+        tasks = default_tasks(m)
+        cm = CostModel(cfg, tasks, par)
+        t0 = time.perf_counter()
+        res = fuse_tasks(tasks, cm, n_micro=4)
+        dp_t = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        _, best = fuse_exhaustive(tasks, cm, n_micro=4)
+        ex_t = time.perf_counter() - t0
+        gap = res.latency_estimate / best - 1.0
+        rows.append(csv_row(
+            f"planner/dp_vs_exhaustive/M_{m}", dp_t * 1e6,
+            f"optimality_gap={gap:.2e};dp_s={dp_t:.4f};exhaustive_s={ex_t:.4f}",
+        ))
+
+    for m in (8, 16, 32):
+        tasks = default_tasks(m)
+        planner = ExecutionPlanner(cfg, par)
+        t0 = time.perf_counter()
+        plan = planner.plan(tasks, n_micro=4)
+        dt = time.perf_counter() - t0
+        rows.append(csv_row(
+            f"planner/overhead/M_{m}", dt * 1e6,
+            f"seconds={dt:.3f};under_10s={'yes' if dt < 10 else 'NO'}",
+        ))
+    return rows

@@ -1,0 +1,45 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: each module maps to one paper table/figure.
+
+  Fig 14/15 -> throughput     Fig 16 -> breakdown    Fig 17 -> memory
+  Fig 18/19 -> orchestration  Fig 20 -> alignment    Fig 21 -> scalability
+  Eq 3-6    -> planner_quality            kernels -> grouped-kernel claim
+  §Roofline -> roofline (reads artifacts/dryrun)
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    mods = [
+        "alignment",
+        "planner_quality",
+        "memory",
+        "orchestration",
+        "scalability",
+        "kernels",
+        "breakdown",
+        "throughput",
+        "roofline",
+    ]
+    only = sys.argv[1:] or None
+    print("name,us_per_call,derived")
+    for name in mods:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception as e:
+            traceback.print_exc(file=sys.stderr)
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

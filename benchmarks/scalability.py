@@ -1,0 +1,72 @@
+"""Fig. 21 analogue: (a) up-only vs up-then-out scaling; (b) cluster-level
+trace replay — Philly-style workload on a simulated 128-chip cluster, FCFS."""
+from __future__ import annotations
+
+import heapq
+import math
+
+import numpy as np
+
+from benchmarks.common import csv_row, default_tasks
+from repro.configs import get_config
+from repro.core import CostModel, ParallelismSpec, build_htask
+from repro.data import make_task
+from repro.peft.adapters import AdapterConfig, LORA
+
+
+def _instance_throughput(cfg, tasks, chips: int, multiplexed: bool) -> float:
+    """Tokens/s of one instance from the cost model."""
+    par = ParallelismSpec(num_stages=1, chips_per_stage=chips, tp=chips)
+    cm = CostModel(cfg, tasks, par)
+    if multiplexed:
+        h, _ = build_htask(tasks, list(range(len(tasks))), "chunked")
+        return h.effective_tokens / cm.stage_latency(h)
+    tot = 0.0
+    for i in range(len(tasks)):
+        h, _ = build_htask(tasks, [i], "zero_pad")
+        tot += h.effective_tokens / (cm.stage_latency(h) * len(tasks))
+    return tot
+
+
+def run() -> list[str]:
+    rows = []
+    cfg = get_config("llama3.2-3b")
+
+    # (a) scaling strategies: n tasks on n chips
+    for n in (1, 2, 4, 8):
+        tasks = default_tasks(n, micro_batch=2)
+        up_mux = _instance_throughput(cfg, tasks, n, True)
+        up_sep = _instance_throughput(cfg, tasks, n, False)
+        # up-then-out: replicate 1-chip instances
+        out_mux = n * _instance_throughput(cfg, tasks[:1], 1, True)
+        rows.append(csv_row(
+            f"scalability/up_only/chips_{n}", 0.0,
+            f"muxtune_tok_s={up_mux:.2e};separate_tok_s={up_sep:.2e};"
+            f"gain=x{up_mux/max(up_sep,1e-12):.2f}",
+        ))
+        rows.append(csv_row(
+            f"scalability/up_then_out/chips_{n}", 0.0,
+            f"muxtune_tok_s={max(up_mux,out_mux):.2e}",
+        ))
+
+    # (b) cluster replay: Philly-style trace on a simulated 128-chip cluster
+    from repro.cluster import ClusterSim, philly_style_trace
+
+    trace = philly_style_trace(horizon_min=24 * 60, seed=0)
+    base = ClusterSim(multiplexed=False, max_colocate=1).run(trace)
+    systems = (
+        ("hf_peft", dict(multiplexed=False, max_colocate=1, policy="fcfs")),
+        ("nemo", dict(multiplexed=False, max_colocate=1, policy="fcfs")),
+        ("slora", dict(multiplexed=True, max_colocate=4, policy="fcfs")),
+        ("muxtune", dict(multiplexed=True, max_colocate=8, policy="fcfs")),
+        ("muxtune_bestfit", dict(multiplexed=True, max_colocate=8, policy="best_fit")),
+    )
+    for name, kw in systems:
+        r = ClusterSim(**kw).run(trace)
+        rows.append(csv_row(
+            f"scalability/cluster/{name}", 0.0,
+            f"served_task_min={r['served_task_min']:.0f};"
+            f"admission={r['admission_rate']:.2f};"
+            f"gain_vs_single=x{r['served_task_min']/max(base['served_task_min'],1e-9):.2f}",
+        ))
+    return rows

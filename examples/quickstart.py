@@ -1,0 +1,71 @@
+"""Quickstart: multiplex three tenant PEFT tasks on one shared backbone.
+
+Runs on CPU in ~a minute.  Shows the full MuxTune flow:
+  tasks -> ExecutionPlanner (fusion/grouping/template/alignment)
+        -> ModelGenerator.register_tasks (dynamic adapter attachment)
+        -> PEFTEngine (fused spatial batches, temporal interleaving).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core import ExecutionPlanner, ModelGenerator, ParallelismSpec, PEFTEngine
+from repro.data import HTaskLoader, make_task
+from repro.peft.adapters import ADAPTER_TUNING, LORA, AdapterConfig
+
+
+def main():
+    # Three tenants: different datasets, PEFT types, ranks, learning rates.
+    tasks = [
+        make_task("tenant-a", "sst2", micro_batch=2,
+                  adapter=AdapterConfig(LORA, rank=8, lr=1e-3), seed=0),
+        make_task("tenant-b", "qa", micro_batch=2,
+                  adapter=AdapterConfig(LORA, rank=16, lr=5e-4), seed=1),
+        make_task("tenant-c", "rte", micro_batch=1,
+                  adapter=AdapterConfig(ADAPTER_TUNING, rank=8, lr=1e-3), seed=2),
+    ]
+
+    cfg = smoke_config("llama3.2-3b")  # reduced llama-family backbone
+    planner = ExecutionPlanner(cfg, ParallelismSpec(num_stages=2, chips_per_stage=1))
+    plan = planner.plan(tasks, n_micro=2)
+
+    print("== plan ==")
+    for k, v in plan.summary().items():
+        print(f"  {k}: {v}")
+    for i, h in enumerate(plan.htasks):
+        print(f"  hTask{i}: tasks={h.task_ids} rows={h.rows} row_len={h.row_len} "
+              f"chunk={h.chunk} effective={h.effective_tokens}/{h.tokens}")
+
+    gen = ModelGenerator(cfg)
+    gen.register_tasks(tasks)          # dynamic attachment — no backbone reinit
+    engine = PEFTEngine(gen, plan, lr=1e-3)
+    loaders = {i: HTaskLoader(tasks, plan.alignment[i], cfg.vocab_size)
+               for i in range(len(plan.htasks))}
+
+    print("== training ==")
+    for step in range(5):
+        m = engine.run_iteration(loaders)
+        tp = engine.throughput(m)
+        print(f"  step {step}: loss={m.loss:.3f} "
+              f"per-task={np.round(m.per_task_loss, 3)} "
+              f"tok/s={tp['tokens_per_s']:.0f} eff-tok/s={tp['effective_tokens_per_s']:.0f}")
+
+    # a fourth tenant arrives mid-flight
+    print("== tenant-d arrives ==")
+    t4 = make_task("tenant-d", "qa", 1, AdapterConfig(LORA, rank=8), seed=3)
+    gen.register_tasks([t4])
+    plan2 = planner.plan(tasks + [t4], n_micro=2)
+    engine2 = PEFTEngine(gen, plan2, lr=1e-3)
+    loaders2 = {i: HTaskLoader(tasks + [t4], plan2.alignment[i], cfg.vocab_size)
+                for i in range(len(plan2.htasks))}
+    m = engine2.run_iteration(loaders2)
+    print(f"  step 0 (4 tenants): loss={m.loss:.3f} tasks={len(plan2.tasks)}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

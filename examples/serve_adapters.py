@@ -1,0 +1,58 @@
+"""Serving example: batched decode with a KV cache over the shared backbone.
+
+Demonstrates the serve path the decode_* dry-run cells lower: init a decode
+state, prefill a short prompt token-by-token, then decode continuations for
+a batch of requests.
+
+  PYTHONPATH=src python examples/serve_adapters.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models.transformer import build_model
+
+
+def main():
+    cfg = smoke_config("llama3.2-3b")
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+
+    B, prompt_len, gen_len, max_len = 4, 8, 16, 32
+    prompts = jax.random.randint(key, (B, prompt_len), 0, cfg.vocab_size)
+
+    serve_step = jax.jit(model.decode_step, donate_argnums=(1,))
+    state = model.init_decode_state(params, B, max_len)
+
+    print(f"== serving {B} requests (prompt {prompt_len}, gen {gen_len}) ==")
+    t0 = time.perf_counter()
+    # prefill token-by-token through the decode path (cache warms up)
+    logits = None
+    for t in range(prompt_len):
+        logits, state = serve_step(params, state, prompts[:, t : t + 1])
+    # greedy decode
+    outs = []
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    for _ in range(gen_len):
+        outs.append(np.asarray(tok)[:, 0])
+        logits, state = serve_step(params, state, tok)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    dt = time.perf_counter() - t0
+    gen = np.stack(outs, axis=1)
+    print(f"  generated {B}x{gen_len} tokens in {dt:.2f}s "
+          f"({B * (prompt_len + gen_len) / dt:.0f} tok/s incl. compile)")
+    for b in range(B):
+        print(f"  req{b}: {gen[b].tolist()}")
+    assert int(state["pos"]) == prompt_len + gen_len
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.cluster.simulator import (  # noqa: F401
+    ClusterSim,
+    Instance,
+    TaskArrival,
+    philly_style_trace,
+)

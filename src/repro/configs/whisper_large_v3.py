@@ -1,0 +1,27 @@
+"""whisper-large-v3 [audio] — enc-dec, conv frontend (stub)
+[arXiv:2212.04356; unverified].
+
+The conv1d/mel frontend is a STUB per the assignment: ``input_specs``
+provides precomputed frame embeddings [batch, 1500, d_model].  Decode cells
+exercise the decoder with a growing self-attention KV cache plus the fixed
+1500-frame cross-attention KV.
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-large-v3",
+    family="audio",
+    num_layers=32,  # decoder layers
+    num_encoder_layers=32,
+    d_model=1280,
+    num_heads=20,
+    num_kv_heads=20,
+    head_dim=64,
+    d_ff=5120,
+    vocab_size=51866,
+    is_encoder_decoder=True,
+    max_source_positions=1500,
+    gated_mlp=False,  # GELU fc1/fc2
+    attention_bias=True,
+    tie_embeddings=True,
+)

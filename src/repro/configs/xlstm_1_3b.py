@@ -1,0 +1,26 @@
+"""xlstm-1.3b [ssm] — sLSTM + mLSTM blocks [arXiv:2405.04517; unverified].
+
+48 blocks arranged as super-blocks of ``slstm_period`` (7 mLSTM : 1 sLSTM).
+mLSTM is matrix-memory (chunked gated linear attention); sLSTM is scalar
+memory with a strict time recurrence.  d_ff=0: xLSTM blocks embed their own
+up/down projections instead of a separate MLP.
+"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=512,
+    d_ff=0,
+    vocab_size=50304,
+    ssm_state=512,  # mLSTM matrix memory dim == head_dim
+    ssm_head_dim=512,
+    ssm_expand=2,
+    ssm_chunk=256,
+    slstm_period=8,  # one sLSTM per 8 blocks
+    attention="none",
+)

@@ -1,0 +1,17 @@
+# MuxTune's primary contribution: spatial-temporal backbone multiplexing via
+# hierarchical co-scheduling (task fusion -> bucket grouping -> structured
+# pipeline -> subgraph orchestration) over modularized PEFT representations.
+from repro.core.task import Bucket, HTask, ParallelismSpec, PEFTTask  # noqa: F401
+from repro.core.cost_model import CostModel, HardwareProfile  # noqa: F401
+from repro.core.fusion import FusionResult, fuse_tasks, build_htask  # noqa: F401
+from repro.core.grouping import balance_buckets, make_buckets  # noqa: F401
+from repro.core.pipeline_template import (  # noqa: F401
+    PipelineTemplate,
+    best_template,
+    generate_template,
+    simulate,
+)
+from repro.core.alignment import AlignmentPlan, align_tasks, chunk_size_for  # noqa: F401
+from repro.core.planner import ExecutionPlan, ExecutionPlanner  # noqa: F401
+from repro.core.registry import ModelGenerator, RegisteredTasks  # noqa: F401
+from repro.core.engine import PEFTEngine, StepMetrics  # noqa: F401

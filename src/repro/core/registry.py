@@ -1,0 +1,181 @@
+"""ModelGenerator + ``register_tasks()`` — dynamic multi-task attachment (§3.2).
+
+The functional analogue of the paper's hook-based on-the-fly registration:
+the backbone is instantiated ONCE; task arrival/completion rebuilds only the
+stacked adapter pytree (migrating surviving tasks' adapter values and
+optimizer moments into the new stack) and invalidates the step cache for the
+new task-set signature.  No backbone re-init, ever.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, get_config
+from repro.core.task import PEFTTask
+from repro.models.transformer import Model, build_model
+from repro.peft.multitask import MultiTaskAdapters
+from repro.train.optimizer import AdamWState, adamw_init
+
+
+def _task_axis(depth: int) -> int:
+    return depth  # stacking prepends `depth` layer dims before the task dim
+
+
+def _group_depths(cfg: ArchConfig) -> Dict[str, int]:
+    if cfg.family in ("dense", "vlm", "moe", "audio"):
+        return {"": 1}
+    if cfg.family == "hybrid":
+        return {"mamba": 2, "shared_attn": 0}
+    if cfg.family == "ssm":
+        return {"mlstm": 2, "slstm": 1}
+    raise ValueError(cfg.family)
+
+
+@dataclass
+class RegisteredTasks:
+    tasks: List[PEFTTask]
+    mta: MultiTaskAdapters
+    adapter_params: Any
+    opt_state: AdamWState
+
+    def signature(self) -> Tuple:
+        return tuple((t.task_id, t.adapter.kind, t.adapter.rank) for t in self.tasks)
+
+
+class ModelGenerator:
+    """Builds the PEFT model for an instance and manages task registration."""
+
+    def __init__(self, arch: str | ArchConfig, tp_size: int = 1, seed: int = 0):
+        self.cfg = get_config(arch) if isinstance(arch, str) else arch
+        self.model: Model = build_model(self.cfg, tp_size=tp_size)
+        self._key = jax.random.PRNGKey(seed)
+        self.backbone_params: Optional[Any] = None
+        self.registered: Optional[RegisteredTasks] = None
+
+    # ------------------------------------------------------------------
+
+    def init_backbone(self) -> Any:
+        if self.backbone_params is None:
+            self._key, k = jax.random.split(self._key)
+            self.backbone_params = self.model.init(k)
+        return self.backbone_params
+
+    # ------------------------------------------------------------------
+
+    def register_tasks(self, new_tasks: Sequence[PEFTTask]) -> RegisteredTasks:
+        """Add tasks to (or rebuild) the in-flight instance — §3.2 API."""
+        old = self.registered
+        tasks = list(old.tasks) if old else []
+        existing = {t.task_id for t in tasks}
+        for t in new_tasks:
+            if t.task_id in existing:
+                raise ValueError(f"duplicate task_id {t.task_id}")
+            tasks.append(t)
+        return self._rebuild(tasks, old)
+
+    def deregister_tasks(self, task_ids: Sequence[str]) -> RegisteredTasks:
+        old = self.registered
+        assert old is not None
+        drop = set(task_ids)
+        tasks = [t for t in old.tasks if t.task_id not in drop]
+        return self._rebuild(tasks, old)
+
+    # ------------------------------------------------------------------
+
+    def _rebuild(self, tasks: List[PEFTTask], old: Optional[RegisteredTasks]) -> RegisteredTasks:
+        mta = MultiTaskAdapters(self.cfg, [t.adapter for t in tasks])
+        self._key, k = jax.random.split(self._key)
+        params = mta.init(k)
+        opt = adamw_init(params)
+        if old is not None and old.tasks:
+            params, opt = self._migrate(old, mta, params, opt, tasks)
+        self.registered = RegisteredTasks(tasks, mta, params, opt)
+        return self.registered
+
+    def _migrate(
+        self,
+        old: RegisteredTasks,
+        new_mta: MultiTaskAdapters,
+        new_params: Any,
+        new_opt: AdamWState,
+        tasks: List[PEFTTask],
+    ) -> Tuple[Any, AdamWState]:
+        """Copy surviving tasks' adapter values + moments into the new stacks."""
+        old_ids = {t.task_id: i for i, t in enumerate(old.tasks)}
+        depths = _group_depths(self.cfg)
+
+        def migrate_group(old_tree, new_tree, old_m, new_m, kind, depth):
+            old_slots = {}
+            for tid_new, t in enumerate(tasks):
+                if t.adapter.kind != kind or t.task_id not in old_ids:
+                    continue
+                old_global = old_ids[t.task_id]
+                if old.tasks[old_global].adapter.kind != kind:
+                    continue
+                new_slot = new_mta.task_slot[tid_new]
+                old_slot = old.mta.task_slot[old_global]
+                old_slots[int(new_slot)] = int(old_slot)
+            if not old_slots:
+                return new_tree, new_m
+
+            ax = _task_axis(depth)
+
+            def copy_leaf(new_leaf, old_leaf):
+                if old_leaf is None or new_leaf is None:
+                    return new_leaf
+                same_tail = new_leaf.shape[ax + 1:] == old_leaf.shape[ax + 1:]
+                same_head = new_leaf.shape[:ax] == old_leaf.shape[:ax]
+                if not (same_tail and same_head):
+                    return new_leaf  # rank/shape changed: keep fresh init
+                out = new_leaf
+                for ns, os in old_slots.items():
+                    src = jax.lax.index_in_dim(old_leaf, os, axis=ax, keepdims=False)
+                    out = out.at[(slice(None),) * ax + (ns,)].set(src.astype(out.dtype))
+                return out
+
+            merged = jax.tree.map(copy_leaf, new_tree, old_tree,
+                                  is_leaf=lambda x: x is None)
+            merged_m = jax.tree.map(copy_leaf, new_m, old_m,
+                                    is_leaf=lambda x: x is None)
+            return merged, merged_m
+
+        def walk(new_p, old_p, new_m, old_m, new_v, old_v, group_key, depth):
+            # group level: {kind: {target: {leaf}}}
+            out_p, out_m, out_v = new_p, new_m, new_v
+            for kind in list(new_p.keys()):
+                if old_p is None or kind not in old_p:
+                    continue
+                # only migrate when ranks match (shape compatibility)
+                np_, nm = migrate_group(old_p[kind], new_p[kind],
+                                        old_m[kind] if old_m else None,
+                                        new_m[kind] if new_m else None,
+                                        kind, depth)
+                _, nv = migrate_group(old_p[kind], new_p[kind],
+                                      old_v[kind] if old_v else None,
+                                      new_v[kind] if new_v else None,
+                                      kind, depth)
+                out_p = dict(out_p, **{kind: np_})
+                out_m = dict(out_m, **{kind: nm})
+                out_v = dict(out_v, **{kind: nv})
+            return out_p, out_m, out_v
+
+        depths_map = depths
+        if "" in depths_map:
+            p2, m2, v2 = walk(new_params, old.adapter_params,
+                              new_opt.m, old.opt_state.m,
+                              new_opt.v, old.opt_state.v, "", depths_map[""])
+            return p2, AdamWState(new_opt.step, m2, v2)
+        p_out, m_out, v_out = dict(new_params), dict(new_opt.m), dict(new_opt.v)
+        for gk, depth in depths_map.items():
+            if gk not in new_params or gk not in old.adapter_params:
+                continue
+            p2, m2, v2 = walk(new_params[gk], old.adapter_params[gk],
+                              new_opt.m[gk], old.opt_state.m[gk],
+                              new_opt.v[gk], old.opt_state.v[gk], gk, depth)
+            p_out[gk], m_out[gk], v_out[gk] = p2, m2, v2
+        return p_out, AdamWState(new_opt.step, m_out, v_out)

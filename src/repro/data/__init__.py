@@ -1,0 +1,2 @@
+from repro.data.synthetic import DATASETS, make_task, sample_lengths  # noqa: F401
+from repro.data.loader import HTaskLoader  # noqa: F401

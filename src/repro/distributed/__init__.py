@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (  # noqa: F401
+    ShardingRules,
+    activate_rules,
+    active_rules,
+    shard,
+    logical_to_spec,
+    named_sharding,
+)

@@ -1,0 +1,168 @@
+"""Checkpointing: atomic, async, content-verified, elastic-reshardable.
+
+Layout (one directory per step):
+    <dir>/step_<n>.tmp/...   -> written, fsynced, manifest-hashed
+    <dir>/step_<n>/          -> atomic rename commits the checkpoint
+
+Every leaf is a raw ``.npy`` plus a JSON manifest carrying the tree
+structure, dtypes, shapes and a crc32 per leaf — restore verifies
+integrity, so a preempted/partial write can never be loaded (fault
+tolerance requirement).  ``AsyncCheckpointer`` moves serialization off the
+training thread.  Restore is *elastic*: arrays are loaded host-side and
+``jax.device_put`` with the NEW mesh's NamedShardings — a checkpoint saved
+on mesh A restores onto mesh B (different axis sizes) as long as the
+logical shapes match, which is what elastic scaling needs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, extra: Optional[Dict] = None) -> str:
+    """Atomic checkpoint write; returns the committed path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat, _ = _flatten_with_paths(tree)
+    manifest: Dict[str, Any] = {"step": step, "leaves": {}, "extra": extra or {},
+                                "time": time.time()}
+    for i, (key, leaf) in enumerate(flat):
+        arr = np.asarray(leaf)
+        orig_dtype = str(arr.dtype)
+        if arr.dtype.kind == "V" or orig_dtype in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
+            # numpy can't serialize ml_dtypes natively; widen losslessly
+            arr = np.asarray(leaf, dtype=np.float32)
+        fname = f"leaf_{i:05d}.npy"
+        path = os.path.join(tmp, fname)
+        with open(path, "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
+        manifest["leaves"][key] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": orig_dtype,
+            "crc32": zlib.crc32(arr.tobytes()),
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "manifest.json")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    directory: str,
+    step: int,
+    like: Any,
+    shardings: Any = None,
+    verify: bool = True,
+) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``like``; optionally device_put with
+    ``shardings`` (elastic: any mesh whose shardings fit the logical shapes)."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat, treedef = _flatten_with_paths(like)
+    shard_flat = None
+    if shardings is not None:
+        sf, _ = _flatten_with_paths(shardings)
+        shard_flat = dict(sf)
+    leaves = []
+    for key, leaf in flat:
+        meta = manifest["leaves"].get(key)
+        if meta is None:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = np.load(os.path.join(path, meta["file"]))
+        if verify and zlib.crc32(arr.tobytes()) != meta["crc32"]:
+            raise IOError(f"checksum mismatch for {key} — corrupt checkpoint")
+        if list(arr.shape) != list(np.shape(leaf)):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {np.shape(leaf)}")
+        if str(arr.dtype) != meta["dtype"]:
+            import ml_dtypes  # lossless narrow back (bf16 saved as f32)
+
+            arr = arr.astype(np.dtype(getattr(ml_dtypes, meta["dtype"], meta["dtype"])))
+        if shard_flat is not None and key in shard_flat:
+            leaves.append(jax.device_put(arr, shard_flat[key]))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return jax.tree.unflatten(treedef, leaves), manifest["extra"]
+
+
+def prune_checkpoints(directory: str, keep: int = 3) -> None:
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(directory)
+        if n.startswith("step_") and not n.endswith(".tmp")
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"), ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Serializes checkpoints on a background thread (training never stalls
+    beyond the device->host copy)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # sync copy out of device
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra)
+                prune_checkpoints(self.directory, self.keep)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

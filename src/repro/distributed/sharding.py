@@ -1,0 +1,160 @@
+"""Logical-axis sharding rules (DP/TP/SP/EP/CP) for the production mesh.
+
+Models annotate tensors with *logical* axis names ("batch", "seq", "heads",
+"ff", "vocab", "experts", ...).  A :class:`ShardingRules` maps each logical
+name to a mesh axis (or tuple of axes, or ``None`` for replicated).  The
+mapping is what the perf hillclimb iterates on — models never hard-code mesh
+axes.
+
+``activate_rules`` installs rules + mesh in a context; ``shard(x, *axes)``
+then applies ``jax.lax.with_sharding_constraint``.  With no active rules the
+call is the identity, so all model code runs unmodified on one device.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisTarget = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Logical axis name -> mesh axis target.
+
+    The defaults implement the baseline layout described in DESIGN.md §5:
+    batch over ("pod","data"), sequence-parallel residual + CP attention over
+    "model", Megatron TP for MLP/vocab/experts over "model".
+    """
+
+    rules: Tuple[Tuple[str, AxisTarget], ...] = (
+        ("batch", ("pod", "data")),
+        ("seq", "model"),          # sequence-sharded residual stream (SP)
+        ("kv_seq", None),          # attention KV after gather: replicated
+        ("heads", "model"),        # head-sharded attention (heads mode)
+        ("kv_heads", None),
+        ("head_dim", None),
+        ("embed", None),
+        ("ff", "model"),           # MLP TP
+        ("vocab", "model"),        # vocab-sharded embedding + logits
+        ("experts", "model"),      # expert parallelism
+        ("expert_ff", None),
+        ("cache_batch", ("pod", "data")),
+        ("cache_seq", None),
+        ("ssm_inner", "model"),
+        ("ssm_heads", "model"),
+        ("ssm_state", None),
+        ("layers", None),          # stacked-scan leading dim
+        ("stage", None),
+    )
+
+    def lookup(self, name: Optional[str]) -> AxisTarget:
+        if name is None:
+            return None
+        for k, v in self.rules:
+            if k == name:
+                return v
+        return None
+
+    def with_updates(self, **kw: AxisTarget) -> "ShardingRules":
+        d = dict(self.rules)
+        d.update(kw)
+        return ShardingRules(tuple(d.items()))
+
+    # rule keys whose values are execution flags, not mesh axes
+    FLAG_KEYS = ("moe_impl", "moe_wire", "attn_impl")
+
+    def mesh_axes(self, mesh: Mesh) -> "ShardingRules":
+        """Drop rule targets that reference axes absent from ``mesh``
+        (e.g. "pod" on the single-pod mesh).  Flag-valued keys pass through."""
+        names = set(mesh.axis_names)
+
+        def fix(k: str, t: AxisTarget) -> AxisTarget:
+            if k in self.FLAG_KEYS or t is None:
+                return t
+            if isinstance(t, str):
+                return t if t in names else None
+            kept = tuple(a for a in t if a in names)
+            return kept if kept else None
+
+        return ShardingRules(tuple((k, fix(k, v)) for k, v in self.rules))
+
+
+class _Env(threading.local):
+    def __init__(self) -> None:
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[ShardingRules] = None
+
+
+_ENV = _Env()
+
+
+@contextlib.contextmanager
+def activate_rules(mesh: Optional[Mesh], rules: Optional[ShardingRules]):
+    """Install (mesh, rules) for ``shard`` calls inside the context."""
+    prev = (_ENV.mesh, _ENV.rules)
+    _ENV.mesh = mesh
+    _ENV.rules = rules.mesh_axes(mesh) if (rules is not None and mesh is not None) else rules
+    try:
+        yield
+    finally:
+        _ENV.mesh, _ENV.rules = prev
+
+
+def active_rules() -> Tuple[Optional[Mesh], Optional[ShardingRules]]:
+    return _ENV.mesh, _ENV.rules
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], rules: ShardingRules) -> P:
+    """Translate logical axes (one per tensor dim) to a PartitionSpec.
+
+    A mesh axis may appear at most once in a PartitionSpec; later duplicate
+    uses fall back to replicated for that dim.
+    """
+    used: set = set()
+    out = []
+    for name in axes:
+        target = rules.lookup(name)
+        if target is None:
+            out.append(None)
+            continue
+        tgt = (target,) if isinstance(target, str) else tuple(target)
+        free = tuple(a for a in tgt if a not in used)
+        if len(free) != len(tgt):
+            out.append(None)
+            continue
+        used.update(free)
+        out.append(free[0] if len(free) == 1 else free)
+    return P(*out)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axes; identity w/o active rules."""
+    mesh, rules = _ENV.mesh, _ENV.rules
+    if mesh is None or rules is None:
+        return x
+    if x.ndim != len(axes):
+        raise ValueError(f"shard(): rank {x.ndim} vs {len(axes)} logical axes")
+    spec = logical_to_spec(axes, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, rules: ShardingRules, axes: Sequence[Optional[str]]) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(axes, rules.mesh_axes(mesh)))
+
+
+def divisible(dim: int, mesh: Mesh, target: AxisTarget) -> bool:
+    """Whether ``dim`` divides evenly over the mesh axes in ``target``."""
+    if target is None:
+        return True
+    tgt = (target,) if isinstance(target, str) else target
+    size = 1
+    for a in tgt:
+        if a in mesh.axis_names:
+            size *= mesh.shape[a]
+    return dim % size == 0

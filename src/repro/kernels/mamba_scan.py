@@ -1,0 +1,124 @@
+"""Chunked SSD / gated-linear-attention scan kernel (TPU Pallas).
+
+Hot-spot for the zamba2/xlstm cells (incl. ``long_500k``): the recurrence
+  H_t = exp(la_t) H_{t-1} + exp(li_t) k_t (x) v_t ;  y_t = q_t . H_t
+is evaluated chunk-parallel — intra-chunk via a decay-masked block product
+(two MXU matmuls per chunk) and inter-chunk via a VMEM-resident state that
+carries across the innermost grid dimension.  This is the TPU re-think of
+the Mamba2 SSD CUDA kernel: no warp-level shuffles, just grid-carried VMEM
+state + MXU tiles.
+
+Grid: (B*H, n_chunks); chunk dim innermost so the [dk, dv] f32 state scratch
+persists across chunks of one (batch, head) program.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    q_ref,   # [1, Q, 1, dk]
+    k_ref,   # [1, Q, 1, dk]
+    v_ref,   # [1, Q, 1, dv]
+    la_ref,  # [1, Q, 1]
+    li_ref,  # [1, Q, 1]
+    y_ref,   # [1, Q, 1, dv]
+    hout_ref,  # [1, 1, dk, dv] final state out
+    h_ref,   # scratch [dk, dv] f32
+    *,
+    n_chunks: int,
+    chunk: int,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)  # [Q, dk]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)  # [Q, dv]
+    la = la_ref[0, :, 0]
+    li = li_ref[0, :, 0]
+
+    cum = jnp.cumsum(la)  # [Q]
+    gain = jnp.exp(li)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+    dec = jnp.exp((cum[:, None] - cum[None, :]) * tri) * tri * gain[None, :]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y_intra = jax.lax.dot_general(s * dec, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    qd = q * jnp.exp(cum)[:, None]
+    y_inter = jax.lax.dot_general(qd, h_ref[...], (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    total = cum[-1]
+    w = jnp.exp(total - cum) * gain  # [Q]
+    kd = k * w[:, None]
+    h_ref[...] = jnp.exp(total) * h_ref[...] + jax.lax.dot_general(
+        kd, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    @pl.when(j == n_chunks - 1)
+    def _emit():
+        hout_ref[0, 0] = h_ref[...]
+
+
+def mamba_scan_pallas(
+    q: jax.Array,         # [B, S, H, dk]
+    k: jax.Array,
+    v: jax.Array,         # [B, S, H, dv]
+    log_decay: jax.Array,  # [B, S, H]
+    log_input: jax.Array,
+    *,
+    chunk: int = 256,
+    h0: Optional[jax.Array] = None,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    assert h0 is None, "initial state not supported in the kernel path"
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    n = S // Q
+    grid = (B * H, n)
+
+    def xmap(bh, j):
+        return (bh // H, j, bh % H, 0)
+
+    def gmap(bh, j):
+        return (bh // H, j, bh % H)
+
+    def smap(bh, j):
+        return (bh // H, bh % H, 0, 0)
+
+    y, h = pl.pallas_call(
+        functools.partial(_kernel, n_chunks=n, chunk=Q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, dk), xmap),
+            pl.BlockSpec((1, Q, 1, dk), xmap),
+            pl.BlockSpec((1, Q, 1, dv), xmap),
+            pl.BlockSpec((1, Q, 1), gmap),
+            pl.BlockSpec((1, Q, 1), gmap),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, dv), xmap),
+            pl.BlockSpec((1, 1, dk, dv), smap),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(v.shape, q.dtype),
+            jax.ShapeDtypeStruct((B, H, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, log_decay.astype(jnp.float32), log_input.astype(jnp.float32))
+    return y, h

@@ -1,0 +1,137 @@
+"""Jit-ready wrappers around the compute hot-spot kernels.
+
+Each op has three execution paths:
+  * ``xla``     — pure-jnp formulation (gather-einsum / flash-scan) that XLA
+                  compiles well and GSPMD shards; default on CPU and in the
+                  512-device dry-run.
+  * ``pallas``  — the TPU-target ``pl.pallas_call`` kernel (BlockSpec VMEM
+                  tiling); selected via ``set_impl("pallas")`` on TPU.
+  * ``pallas_interpret`` — the same kernel body executed in interpret mode;
+                  used by the CPU test suite to validate the kernel against
+                  ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+
+class _Impl(threading.local):
+    def __init__(self) -> None:
+        self.name = "xla"
+
+
+_IMPL = _Impl()
+
+
+def set_impl(name: str) -> None:
+    assert name in ("xla", "pallas", "pallas_interpret"), name
+    _IMPL.name = name
+
+
+def get_impl() -> str:
+    return _IMPL.name
+
+
+# ---------------------------------------------------------------------------
+# grouped LoRA (multi-task fused adapter GEMM — paper §3.4.3 grouped kernels)
+# ---------------------------------------------------------------------------
+
+
+def grouped_lora(
+    x: jax.Array,        # [B, S, d_in]  (task constant per batch row)
+    a: jax.Array,        # [T, d_in, r]
+    b: jax.Array,        # [T, r, d_out]
+    row_task: jax.Array, # [B] int32 (-1 => no adapter)
+    scale: jax.Array,    # [T] f32
+    *,
+    block_m: int = 128,
+) -> jax.Array:
+    impl = _IMPL.name
+    B, S, d_in = x.shape
+    if impl == "xla":
+        # Batch-row gather: adapters indexed per row (B small), never per
+        # token — the [B*S, d_in, r] row-gather would dominate HBM.
+        t = jnp.maximum(row_task, 0)
+        gate = (row_task >= 0).astype(jnp.float32) * scale[t]  # [B]
+        a_r = a[t]  # [B, d_in, r]
+        b_r = b[t]  # [B, r, d_out]
+        h = jnp.einsum("bsd,bdr->bsr", x, a_r, preferred_element_type=jnp.float32)
+        y = jnp.einsum("bsr,bro->bso", h, b_r.astype(jnp.float32))
+        return (y * gate[:, None, None]).astype(x.dtype)
+    from repro.kernels.grouped_lora import grouped_lora_pallas
+
+    xf = x.reshape(B * S, d_in)
+    rows = jnp.repeat(row_task, S)
+    out = grouped_lora_pallas(
+        xf, a, b, rows, scale, block_m=block_m,
+        interpret=(impl == "pallas_interpret"),
+    )
+    return out.reshape(B, S, -1)
+
+
+# ---------------------------------------------------------------------------
+# packed (segment-masked) flash attention — §3.5 alignment consumer
+# ---------------------------------------------------------------------------
+
+
+def packed_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    segment_ids: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+    causal: bool = True,
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    impl = _IMPL.name
+    if impl == "xla":
+        from repro.models.attention import flash_attention_pairs
+
+        return flash_attention_pairs(
+            q, k, v, block=block_q, causal=causal,
+            segment_ids=segment_ids, positions=positions,
+        )
+    from repro.kernels.packed_attention import packed_attention_pallas
+
+    return packed_attention_pallas(
+        q, k, v, segment_ids=segment_ids, positions=positions, causal=causal,
+        block_q=block_q, block_k=block_k,
+        interpret=(impl == "pallas_interpret"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD/GLA scan — zamba2/xlstm hot-spot
+# ---------------------------------------------------------------------------
+
+
+def mamba_scan(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    log_decay: jax.Array,
+    log_input: jax.Array,
+    *,
+    chunk: int = 256,
+    h0: Optional[jax.Array] = None,
+):
+    impl = _IMPL.name
+    if impl == "xla":
+        from repro.models.ssm import chunked_gla
+
+        return chunked_gla(q, k, v, log_decay, log_input, chunk, h0=h0)
+    from repro.kernels.mamba_scan import mamba_scan_pallas
+
+    return mamba_scan_pallas(
+        q, k, v, log_decay, log_input, chunk=chunk, h0=h0,
+        interpret=(impl == "pallas_interpret"),
+    )

@@ -1,0 +1,154 @@
+"""Packed flash attention kernel (TPU Pallas) — §3.5 alignment consumer.
+
+Flash attention with *segment-id* masking so chunk-packed batches (multiple
+original sequences packed per row) never attend across sequence boundaries —
+the paper's "wasted attention computation across sequences" is eliminated
+structurally.  Causal + segment masks; GQA by indexing the KV head as
+``h // group`` in the BlockSpec index maps.
+
+Grid: (batch*heads, n_q, n_k), n_k innermost so the online-softmax scratch
+(m, l, acc) carries across KV tiles of one Q tile.  Fully-masked KV tiles
+(j beyond the causal frontier) are skipped with ``pl.when`` — on TPU the
+block still iterates but skips the MXU work, which is the grid-pruning
+analogue of flash attention's triangular traversal.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref,    # [1, block_q, 1, dh]
+    k_ref,    # [1, block_k, 1, dh]
+    v_ref,    # [1, block_k, 1, dh]
+    qpos_ref,  # [1, block_q]
+    kpos_ref,  # [1, block_k]
+    qseg_ref,  # [1, block_q]
+    kseg_ref,  # [1, block_k]
+    o_ref,    # [1, block_q, 1, dh]
+    m_ref,    # [block_q] f32 scratch
+    l_ref,    # [block_q] f32 scratch
+    acc_ref,  # [block_q, dh] f32 scratch
+    *,
+    n_k: int,
+    causal: bool,
+    scale: float,
+    block_q: int,
+    block_k: int,
+):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal frontier: skip tiles strictly above the diagonal band
+    run = (not causal) or (j * block_k <= (i + 1) * block_q - 1)
+    should_run = jnp.asarray(True) if run is True else jnp.asarray(run)
+
+    @pl.when(should_run)
+    def _tile():
+        q = q_ref[0, :, 0, :]
+        k = k_ref[0, :, 0, :]
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [block_q, block_k]
+        mask = jnp.ones((block_q, block_k), bool)
+        if causal:
+            mask &= qpos_ref[0][:, None] >= kpos_ref[0][None, :]
+        mask &= qseg_ref[0][:, None] == kseg_ref[0][None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        pv = jax.lax.dot_general(
+            p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(j == n_k - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def packed_attention_pallas(
+    q: jax.Array,  # [B, S, H, dh]
+    k: jax.Array,  # [B, S, Hkv, dh]
+    v: jax.Array,
+    segment_ids: Optional[jax.Array] = None,  # [B, S]
+    positions: Optional[jax.Array] = None,    # [B, S]
+    causal: bool = True,
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, H, dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0
+    n_q, n_k = S // block_q, S // block_k
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if segment_ids is None:
+        segment_ids = jnp.zeros((B, S), jnp.int32)
+
+    grid = (B * H, n_q, n_k)
+
+    def qmap(bh, i, j):
+        return (bh // H, i, bh % H, 0)
+
+    def kmap(bh, i, j):
+        return (bh // H, j, (bh % H) // G, 0)
+
+    def rowmap_q(bh, i, j):
+        return (bh // H, i)
+
+    def rowmap_k(bh, i, j):
+        return (bh // H, j)
+
+    fn = pl.pallas_call(
+        functools.partial(
+            _kernel, n_k=n_k, causal=causal, scale=1.0 / np.sqrt(dh),
+            block_q=block_q, block_k=block_k,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, dh), qmap),
+            pl.BlockSpec((1, block_k, 1, dh), kmap),
+            pl.BlockSpec((1, block_k, 1, dh), kmap),
+            pl.BlockSpec((1, block_q), rowmap_q),
+            pl.BlockSpec((1, block_k), rowmap_k),
+            pl.BlockSpec((1, block_q), rowmap_q),
+            pl.BlockSpec((1, block_k), rowmap_k),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, dh), qmap),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    return fn(q, k, v, positions, positions, segment_ids, segment_ids)

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (and the XLA fallback path).
+
+These are the semantics contracts: kernel tests sweep shapes/dtypes and
+assert_allclose against these functions.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def grouped_lora_ref(
+    x: jax.Array,        # [M, d_in]   rows of the spatially-fused batch
+    a: jax.Array,        # [T, d_in, r]
+    b: jax.Array,        # [T, r, d_out]
+    row_task: jax.Array, # [M] int32 — task id per row (-1 => no adapter)
+    scale: jax.Array,    # [T] f32 — per-task lora alpha/r
+) -> jax.Array:
+    """Segment-wise LoRA: y[m] = (x[m] @ a[t]) @ b[t] * scale[t], t=row_task[m]."""
+    t = jnp.maximum(row_task, 0)
+    gate = (row_task >= 0).astype(jnp.float32) * scale[t]
+    a_r = a[t]  # [M, d_in, r]
+    b_r = b[t]  # [M, r, d_out]
+    h = jnp.einsum("md,mdr->mr", x.astype(jnp.float32), a_r.astype(jnp.float32))
+    y = jnp.einsum("mr,mro->mo", h, b_r.astype(jnp.float32))
+    return (y * gate[:, None]).astype(x.dtype)
+
+
+def packed_attention_ref(
+    q: jax.Array,  # [B, S, H, dh]
+    k: jax.Array,  # [B, S, Hkv, dh]
+    v: jax.Array,  # [B, S, Hkv, dh]
+    segment_ids: Optional[jax.Array] = None,  # [B, S]
+    positions: Optional[jax.Array] = None,    # [B, S]
+    causal: bool = True,
+) -> jax.Array:
+    """Dense reference attention with segment + causal masking."""
+    B, S, H, dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q5 = q.reshape(B, S, Hkv, G, dh)
+    s = jnp.einsum("bqkgd,bpkd->bqkgp", q5, k, preferred_element_type=jnp.float32)
+    s = s / np.sqrt(dh)
+    mask = jnp.ones((B, S, S), bool)
+    if causal:
+        mask &= positions[:, :, None] >= positions[:, None, :]
+    if segment_ids is not None:
+        mask &= segment_ids[:, :, None] == segment_ids[:, None, :]
+    s = jnp.where(mask[:, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgp,bpkd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, dh).astype(q.dtype)
+
+
+def mamba_scan_ref(
+    q: jax.Array,         # [B, S, H, dk]  (C in mamba terms)
+    k: jax.Array,         # [B, S, H, dk]  (B in mamba terms)
+    v: jax.Array,         # [B, S, H, dv]  (x heads)
+    log_decay: jax.Array, # [B, S, H]
+    log_input: jax.Array, # [B, S, H]
+    h0: Optional[jax.Array] = None,  # [B, H, dk, dv]
+):
+    """Sequential (unchunked) gated-linear-attention recurrence oracle."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+
+    def step(h, xs):
+        qt, kt, vt, la, li = xs
+        a = jnp.exp(la.astype(jnp.float32))[..., None, None]
+        g = jnp.exp(li.astype(jnp.float32))[..., None, None]
+        kv = jnp.einsum("bhd,bhv->bhdv", kt.astype(jnp.float32), vt.astype(jnp.float32))
+        h = a * h + g * kv
+        y = jnp.einsum("bhd,bhdv->bhv", qt.astype(jnp.float32), h)
+        return h, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, log_decay, log_input))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(q.dtype), h

@@ -1,0 +1,376 @@
+"""Attention: GQA with RoPE/M-RoPE, memory-O(S) flash formulations, decode.
+
+Two training-time flash formulations, selected by the sharding plan:
+
+* ``pairs``  — scan over lower-triangular (q-block, kv-block) pairs, exact
+  causal FLOPs.  Used when attention is head-sharded TP ("heads" mode): the
+  sequence dim of the carry is unsharded, so per-block dynamic updates stay
+  local.
+* ``kvscan`` — scan over kv blocks updating all q blocks with an exact
+  causal mask.  GSPMD-clean when q is sequence-sharded over the model axis
+  (context-parallel "cp" mode).  Counts ~2x causal FLOPs in HLO (masked
+  upper triangle is still computed); the §Perf hillclimb replaces it with a
+  shard_map striped-CP variant for the chosen cells.
+
+Both support segment ids (chunk-packed batches from §3.5 alignment).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import ParamSpec, apply_mrope, apply_rope, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def attention_spec(cfg: ArchConfig, cross: bool = False) -> Dict[str, ParamSpec]:
+    d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim()
+    s = {
+        "w_q": ParamSpec((d, h, dh), ("embed", "heads", "head_dim")),
+        "w_k": ParamSpec((d, hkv, dh), ("embed", "kv_heads", "head_dim")),
+        "w_v": ParamSpec((d, hkv, dh), ("embed", "kv_heads", "head_dim")),
+        "w_o": ParamSpec((h, dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.attention_bias:
+        s["b_q"] = ParamSpec((h, dh), ("heads", "head_dim"), init="zeros")
+        s["b_k"] = ParamSpec((hkv, dh), ("kv_heads", "head_dim"), init="zeros")
+        s["b_v"] = ParamSpec((hkv, dh), ("kv_heads", "head_dim"), init="zeros")
+        s["b_o"] = ParamSpec((d,), ("embed",), init="zeros")
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec((dh,), ("head_dim",), init="ones")
+        s["k_norm"] = ParamSpec((dh,), ("head_dim",), init="ones")
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Flash attention, "pairs" variant (exact causal FLOPs)
+# ---------------------------------------------------------------------------
+
+
+def _block_pairs(n_q: int, n_k: int, causal: bool, ratio: int) -> np.ndarray:
+    """Static (i, j) block pair list; for causal, j*kb <= end of q block i."""
+    pairs = []
+    for i in range(n_q):
+        for j in range(n_k):
+            if not causal or j <= (i + 1) * ratio - 1:
+                pairs.append((i, j))
+    return np.asarray(pairs, dtype=np.int32)
+
+
+
+def _fit_block(S: int, want: int) -> int:
+    """Largest divisor of S that is <= want (block sizes must tile S)."""
+    want = max(1, min(want, S))
+    if S % want == 0:
+        return want
+    best = 1
+    d = 1
+    while d * d <= S:
+        if S % d == 0:
+            if d <= want:
+                best = max(best, d)
+            if S // d <= want:
+                best = max(best, S // d)
+        d += 1
+    return best
+
+
+def flash_attention_pairs(
+    q: jax.Array,  # [B, S, H, dh]
+    k: jax.Array,  # [B, S, Hkv, dh]
+    v: jax.Array,
+    *,
+    block: int,
+    causal: bool = True,
+    segment_ids: Optional[jax.Array] = None,  # [B, S]
+    positions: Optional[jax.Array] = None,  # [B, S] (packed: within-segment)
+) -> jax.Array:
+    B, S, H, dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    blk = _fit_block(S, block)
+    n = S // blk
+    scale = 1.0 / np.sqrt(dh)
+
+    qb = q.reshape(B, n, blk, Hkv, G, dh)
+    kb = k.reshape(B, n, blk, Hkv, dh)
+    vb = v.reshape(B, n, blk, Hkv, dh)
+    segb = segment_ids.reshape(B, n, blk) if segment_ids is not None else None
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    posb = positions.reshape(B, n, blk)
+
+    o = jnp.zeros((B, n, blk, Hkv, G, dh), jnp.float32)
+    m = jnp.full((B, n, blk, Hkv, G), NEG_INF, jnp.float32)
+    l = jnp.zeros((B, n, blk, Hkv, G), jnp.float32)
+
+    pairs = jnp.asarray(_block_pairs(n, n, causal, 1))
+
+    def step(carry, pair):
+        o, m, l = carry
+        i, j = pair[0], pair[1]
+        qi = jax.lax.dynamic_index_in_dim(qb, i, axis=1, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(kb, j, axis=1, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vb, j, axis=1, keepdims=False)
+        s = jnp.einsum("bqkgd,bpkd->bqkgp", qi, kj, preferred_element_type=jnp.float32)
+        s = s * scale  # [B, blk_q, Hkv, G, blk_k]
+        mask = jnp.ones((B, blk, blk), bool)
+        if causal:
+            qpos = jax.lax.dynamic_index_in_dim(posb, i, axis=1, keepdims=False)
+            kpos = jax.lax.dynamic_index_in_dim(posb, j, axis=1, keepdims=False)
+            mask &= qpos[:, :, None] >= kpos[:, None, :]
+        if segb is not None:
+            sq = jax.lax.dynamic_index_in_dim(segb, i, axis=1, keepdims=False)
+            sk = jax.lax.dynamic_index_in_dim(segb, j, axis=1, keepdims=False)
+            mask &= sq[:, :, None] == sk[:, None, :]
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+
+        mi = jax.lax.dynamic_index_in_dim(m, i, axis=1, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, i, axis=1, keepdims=False)
+        oi = jax.lax.dynamic_index_in_dim(o, i, axis=1, keepdims=False)
+        m_new = jnp.maximum(mi, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(mi - m_new)
+        l_new = li * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bqkgp,bpkd->bqkgd", p, vj.astype(jnp.float32))
+        o_new = oi * alpha[..., None] + pv
+
+        o = jax.lax.dynamic_update_index_in_dim(o, o_new, i, axis=1)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, axis=1)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, axis=1)
+        return (o, m, l), None
+
+    from repro.models.flags import cost_unroll
+
+    (o, m, l), _ = jax.lax.scan(step, (o, m, l), pairs, unroll=cost_unroll())
+    out = o / jnp.maximum(l[..., None], 1e-20)
+    return out.reshape(B, S, H, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention, "kvscan" variant (CP/GSPMD-friendly)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_kvscan(
+    q: jax.Array,  # [B, S, H, dh]  (seq may be sharded)
+    k: jax.Array,  # [B, Sk, Hkv, dh] (replicated/gathered)
+    v: jax.Array,
+    *,
+    kv_block: int,
+    causal: bool = True,
+    segment_ids: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,  # [B, S]
+) -> jax.Array:
+    B, S, H, dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    blk = _fit_block(Sk, kv_block)
+    n = Sk // blk
+    scale = 1.0 / np.sqrt(dh)
+
+    q5 = q.reshape(B, S, Hkv, G, dh)
+    kb = k.reshape(B, n, blk, Hkv, dh)
+    vb = v.reshape(B, n, blk, Hkv, dh)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        k_positions = jnp.broadcast_to(jnp.arange(Sk, dtype=jnp.int32), (B, Sk))
+    else:
+        assert S == Sk, "packed positions require self-attention (S == Sk)"
+        k_positions = positions
+    kposb = k_positions.reshape(B, n, blk)
+    segb = segment_ids.reshape(B, n, blk) if segment_ids is not None else None
+
+    o = jnp.zeros((B, S, Hkv, G, dh), jnp.float32)
+    m = jnp.full((B, S, Hkv, G), NEG_INF, jnp.float32)
+    l = jnp.zeros((B, S, Hkv, G), jnp.float32)
+
+    def step(carry, j):
+        o, m, l = carry
+        kj = jax.lax.dynamic_index_in_dim(kb, j, axis=1, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vb, j, axis=1, keepdims=False)
+        s = jnp.einsum("bqkgd,bpkd->bqkgp", q5, kj, preferred_element_type=jnp.float32)
+        s = s * scale  # [B, S, Hkv, G, blk]
+        kpos = jax.lax.dynamic_index_in_dim(kposb, j, axis=1, keepdims=False)
+        mask = jnp.ones((B, S, blk), bool)
+        if causal:
+            mask &= positions[:, :, None] >= kpos[:, None, :]
+        if segb is not None:
+            sk = jax.lax.dynamic_index_in_dim(segb, j, axis=1, keepdims=False)
+            mask &= segment_ids[:, :, None] == sk[:, None, :]
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bqkgp,bpkd->bqkgd", p, vj.astype(jnp.float32))
+        o_new = o * alpha[..., None] + pv
+        return (o_new, m_new, l_new), None
+
+    from repro.models.flags import cost_unroll
+
+    (o, m, l), _ = jax.lax.scan(step, (o, m, l), jnp.arange(n), unroll=cost_unroll())
+    out = o / jnp.maximum(l[..., None], 1e-20)
+    return out.reshape(B, S, H, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (one query token over a KV cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: jax.Array,  # [B, 1, H, dh]
+    k_cache: jax.Array,  # [B, Smax, Hkv, dh]
+    v_cache: jax.Array,
+    cache_len: jax.Array,  # [] or [B] int32 — number of valid positions
+) -> jax.Array:
+    B, _, H, dh = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = 1.0 / np.sqrt(dh)
+    q5 = q.reshape(B, Hkv, G, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", q5, k_cache, preferred_element_type=jnp.float32)
+    s = s * scale  # [B, Hkv, G, Smax]
+    pos = jnp.arange(Smax, dtype=jnp.int32)
+    valid = pos[None, :] < jnp.reshape(cache_len, (-1, 1))  # [B or 1, Smax]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    out = out / p.sum(axis=-1)[..., None]
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (projections + rope + flash / decode)
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(p, x, cfg: ArchConfig, positions, mrope_positions):
+    from repro.peft.hooks import apply_base_op
+
+    q = apply_base_op("attn_q", x, p["w_q"], "bsd,dhk->bshk", bias=p.get("b_q"))
+    k = apply_base_op("attn_k", x, p["w_k"], "bsd,dhk->bshk", bias=p.get("b_k"))
+    v = apply_base_op("attn_v", x, p["w_v"], "bsd,dhk->bshk", bias=p.get("b_v"))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.attention != "none" and positions is not None:
+        if cfg.mrope and mrope_positions is not None:
+            q = apply_mrope(q, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_apply(
+    p: Dict[str, jax.Array],
+    x: jax.Array,  # [B, S, d]
+    cfg: ArchConfig,
+    *,
+    mode: str = "pairs",  # pairs | kvscan
+    causal: bool = True,
+    positions: Optional[jax.Array] = None,
+    mrope_positions: Optional[jax.Array] = None,
+    segment_ids: Optional[jax.Array] = None,
+    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,  # cross-attn
+) -> jax.Array:
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q, k, v = _project_qkv(p, x, cfg, positions, mrope_positions)
+    if kv_override is not None:
+        k, v = kv_override
+        # Cross-attention: q/kv lengths differ -> kvscan handles ragged Sk.
+        out = flash_attention_kvscan(q, k, v, kv_block=cfg.attn_kv_block, causal=False)
+        from repro.peft.hooks import apply_base_op
+        return apply_base_op("attn_o", out, p["w_o"], "bshk,hkd->bsd", bias=p.get("b_o"))
+    if mode == "striped_cp":
+        # §Perf: exact-causal load-balanced CP (striped seq layout inputs)
+        from repro.distributed.sharding import active_rules
+        from repro.models.cp_attention import striped_cp_attention
+
+        mesh, _ = active_rules()
+        q = shard(q, "batch", "seq", None, None)
+        k = shard(k, "batch", "seq", None, None)
+        v = shard(v, "batch", "seq", None, None)
+        # block small enough that each rank sees >=4 kv chunks — otherwise
+        # the triangular chunk scan degenerates to full-S masked compute
+        P_sz = mesh.shape["model"] if (mesh and "model" in mesh.axis_names) else 1
+        blk = max(min(cfg.attn_q_block, 256, S // (4 * P_sz)), 16)
+        out = striped_cp_attention(
+            q, k, v, positions, segment_ids, mesh, axis="model", block=blk,
+        )
+        out = shard(out, "batch", "seq", None, None)
+    elif mode == "pairs":
+        q = shard(q, "batch", None, "heads", None)
+        k = shard(k, "batch", None, "kv_heads", None)
+        v = shard(v, "batch", None, "kv_heads", None)
+        out = flash_attention_pairs(
+            q, k, v, block=cfg.attn_q_block, causal=causal,
+            segment_ids=segment_ids, positions=positions if causal else None,
+        )
+        out = shard(out, "batch", None, "heads", None)
+    else:  # kvscan (CP): q stays seq-sharded, kv gathered
+        q = shard(q, "batch", "seq", None, None)
+        k = shard(k, "batch", "kv_seq", None, None)
+        v = shard(v, "batch", "kv_seq", None, None)
+        out = flash_attention_kvscan(
+            q, k, v, kv_block=cfg.attn_kv_block, causal=causal,
+            segment_ids=segment_ids, positions=positions if causal else None,
+        )
+        out = shard(out, "batch", "seq", None, None)
+    from repro.peft.hooks import apply_base_op
+
+    y = apply_base_op("attn_o", out, p["w_o"], "bshk,hkd->bsd", bias=p.get("b_o"))
+    return y
+
+
+def attention_decode_apply(
+    p: Dict[str, jax.Array],
+    x: jax.Array,  # [B, 1, d]
+    cfg: ArchConfig,
+    cache: Dict[str, jax.Array],  # {"k": [B,Smax,Hkv,dh], "v": ..., "len": []}
+    *,
+    mrope_positions: Optional[jax.Array] = None,
+    update_cache: bool = True,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    pos = cache["len"]  # scalar int32: current length
+    positions = jnp.reshape(pos, (1,)).astype(jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, mrope_positions)
+    if update_cache:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+        new_len = pos + 1
+    else:  # cross-attention: cache fixed
+        k_cache, v_cache, new_len = cache["k"], cache["v"], pos
+    out = decode_attention(q, k_cache, v_cache, new_len)
+    from repro.peft.hooks import apply_base_op
+
+    y = apply_base_op("attn_o", out, p["w_o"], "bshk,hkd->bsd", bias=p.get("b_o"))
+    new_cache = {"k": k_cache, "v": v_cache, "len": new_len}
+    return y, new_cache
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim()
+    return {
+        "k": jnp.zeros((batch, max_len, hkv, dh), dtype),
+        "v": jnp.zeros((batch, max_len, hkv, dh), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,35 @@
+"""Execution flags shared by model internals.
+
+``cost_unroll()``: when True, inner ``lax.scan`` loops in flash attention
+and the chunked GLA fully unroll so ``compiled.cost_analysis()`` counts
+every iteration (XLA's HloCostAnalysis visits while bodies once).  Used only
+by the dry-run's small-L cost-measurement compiles — production compiles
+keep compact scan HLO.  sLSTM's strict time recurrence is never unrolled;
+its (negligible) FLOPs are added analytically by the roofline builder.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+
+class _Flags(threading.local):
+    def __init__(self) -> None:
+        self.cost_unroll = False
+
+
+_F = _Flags()
+
+
+def cost_unroll() -> bool:
+    return _F.cost_unroll
+
+
+@contextlib.contextmanager
+def cost_unroll_scans(enable: bool = True):
+    prev = _F.cost_unroll
+    _F.cost_unroll = enable
+    try:
+        yield
+    finally:
+        _F.cost_unroll = prev

@@ -1,0 +1,637 @@
+"""Unified backbone assembly for all assigned architecture families.
+
+One ``Model`` facade supports: dense/VLM llama-style GQA, fine-grained MoE,
+Zamba2-style hybrid (Mamba2 + weight-shared attention block), xLSTM
+(mLSTM/sLSTM super-blocks), and Whisper-style encoder-decoder (stub conv
+frontend — precomputed frame embeddings in).
+
+Layers are stored stacked ``[L, ...]`` and executed with ``lax.scan`` (+
+optional ``jax.checkpoint`` remat) for compact HLO and O(1) per-layer
+activation memory; ``cfg.scan_layers=False`` unrolls (smoke tests).
+
+Adapters (multi-task PEFT) enter as an explicit pytree argument mirroring
+the stacked layout; inside the scan each layer's slice is installed into the
+BaseOp hook scope, so ``jax.grad`` w.r.t. the adapter argument yields
+adapter-only gradients — the backbone is frozen by construction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig, ShapeSpec
+from repro.distributed.sharding import shard
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.layers import (
+    ParamSpec,
+    abstract,
+    embed_apply,
+    embed_spec,
+    layer_norm,
+    materialize,
+    mlp_apply,
+    mlp_spec,
+    pad_vocab,
+    rms_norm,
+    sinusoidal_positions,
+    softmax_xent,
+    spec_logical_axes,
+    unembed_apply,
+)
+from repro.models.moe import moe_apply, moe_spec
+from repro.peft.hooks import adapter_scope
+
+CtxFactory = Callable[[Any], Any]  # layer-adapter slice -> AdapterContext
+
+
+def _norm_spec(d: int, audio: bool) -> Dict[str, ParamSpec]:
+    if audio:
+        return {
+            "w": ParamSpec((d,), ("embed",), init="ones"),
+            "b": ParamSpec((d,), ("embed",), init="zeros"),
+        }
+    return {"w": ParamSpec((d,), ("embed",), init="ones")}
+
+
+def _apply_norm(p: Dict[str, jax.Array], x: jax.Array, eps: float) -> jax.Array:
+    if "b" in p:
+        return layer_norm(x, p["w"], p["b"], eps)
+    return rms_norm(x, p["w"], eps)
+
+
+def _stack_specs(spec: Any, n: int) -> Any:
+    """Prefix every ParamSpec in the tree with a stacked layer dim."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale, s.dtype),
+        spec,
+        is_leaf=lambda s: isinstance(s, ParamSpec),
+    )
+
+
+def _slice_layer(tree: Any, i) -> Any:
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _scan_or_loop(body, carry, xs, length: int, use_scan: bool):
+    """lax.scan when compact HLO is wanted; unrolled loop for cost
+    extrapolation (cost_analysis counts while bodies once) and smoke tests."""
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(length):
+        xi = jax.tree.map(lambda a: a[i] if a is not None else None, xs,
+                          is_leaf=lambda v: v is None)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    stacked = None
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked
+
+
+class Model:
+    """Backbone facade.  ``attn_mode`` in {"pairs", "kvscan"} (DESIGN.md §5)."""
+
+    def __init__(self, cfg: ArchConfig, attn_mode: str = "pairs"):
+        self.cfg = cfg
+        self.attn_mode = attn_mode
+        self.vocab_padded = pad_vocab(cfg.vocab_size)
+        self._spec = self._build_spec()
+
+    # ------------------------------------------------------------------
+    # Parameter specs
+    # ------------------------------------------------------------------
+
+    def _layer_spec(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        audio = cfg.family == "audio"
+        s: Dict[str, Any] = {
+            "ln1": _norm_spec(cfg.d_model, audio),
+            "attn": attn.attention_spec(cfg),
+            "ln2": _norm_spec(cfg.d_model, audio),
+        }
+        if cfg.family == "moe":
+            s["moe"] = moe_spec(cfg)
+            if cfg.num_shared_experts:
+                s["shared_mlp"] = mlp_spec(
+                    cfg.d_model, cfg.num_shared_experts * cfg.expert_d_ff, cfg.gated_mlp
+                )
+        else:
+            s["mlp"] = mlp_spec(cfg.d_model, cfg.d_ff, cfg.gated_mlp, bias=audio and cfg.attention_bias)
+        return s
+
+    def _build_spec(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        spec: Dict[str, Any] = {
+            "embed": embed_spec(self.vocab_padded, cfg.d_model, cfg.tie_embeddings),
+            "final_norm": _norm_spec(cfg.d_model, cfg.family == "audio"),
+        }
+        if cfg.family in ("dense", "vlm", "moe"):
+            spec["layers"] = _stack_specs(self._layer_spec(), cfg.num_layers)
+        elif cfg.family == "hybrid":
+            n_super = cfg.num_layers // cfg.hybrid_period
+            per = cfg.hybrid_period - 1
+            mamba_layer = {"ln": _norm_spec(cfg.d_model, False), "mamba": ssm.mamba2_spec(cfg)}
+            spec["blocks"] = {"mamba": _stack_specs(_stack_specs(mamba_layer, per), n_super)}
+            shared = self._layer_spec()
+            if cfg.shared_attention:
+                spec["shared_attn"] = shared  # one copy, reused per super-block
+            else:
+                spec["blocks"]["attn"] = _stack_specs(shared, n_super)
+        elif cfg.family == "ssm":
+            n_super = cfg.num_layers // cfg.slstm_period
+            per = cfg.slstm_period - 1
+            mlstm_layer = {"ln": _norm_spec(cfg.d_model, False), "mlstm": ssm.mlstm_spec(cfg)}
+            slstm_layer = {"ln": _norm_spec(cfg.d_model, False), "slstm": ssm.slstm_spec(cfg)}
+            spec["blocks"] = {
+                "mlstm": _stack_specs(_stack_specs(mlstm_layer, per), n_super),
+                "slstm": _stack_specs(slstm_layer, n_super),
+            }
+        elif cfg.family == "audio":
+            enc_layer = {
+                "ln1": _norm_spec(cfg.d_model, True),
+                "attn": attn.attention_spec(cfg),
+                "ln2": _norm_spec(cfg.d_model, True),
+                "mlp": mlp_spec(cfg.d_model, cfg.d_ff, cfg.gated_mlp, bias=True),
+            }
+            dec_layer = dict(self._layer_spec())
+            dec_layer["ln_cross"] = _norm_spec(cfg.d_model, True)
+            dec_layer["cross"] = attn.attention_spec(cfg)
+            spec["encoder"] = _stack_specs(enc_layer, cfg.num_encoder_layers)
+            spec["enc_final_norm"] = _norm_spec(cfg.d_model, True)
+            spec["layers"] = _stack_specs(dec_layer, cfg.num_layers)
+        else:
+            raise ValueError(cfg.family)
+        return spec
+
+    def spec(self):
+        return self._spec
+
+    def init(self, key: jax.Array):
+        return materialize(self._spec, key)
+
+    def abstract_params(self):
+        return abstract(self._spec)
+
+    def logical_axes(self):
+        return spec_logical_axes(self._spec)
+
+    # ------------------------------------------------------------------
+    # Blocks
+    # ------------------------------------------------------------------
+
+    def _attn_mlp_block(
+        self, lp, x, *, causal, positions, mrope_positions, segment_ids, aux_sink
+    ):
+        cfg = self.cfg
+        h = _apply_norm(lp["ln1"], x, cfg.norm_eps)
+        a = attn.attention_apply(
+            lp["attn"], h, cfg,
+            mode=self.attn_mode, causal=causal, positions=positions,
+            mrope_positions=mrope_positions, segment_ids=segment_ids,
+        )
+        x = shard(x + a, "batch", "seq", None)
+        h = _apply_norm(lp["ln2"], x, cfg.norm_eps)
+        if cfg.family == "moe" and "moe" in lp:
+            y, aux = moe_apply(lp["moe"], h, cfg)
+            if "shared_mlp" in lp:
+                y = y + mlp_apply(lp["shared_mlp"], h, cfg.gated_mlp, prefix="shared_mlp")
+            for k, v in aux.items():
+                aux_sink[k] = aux_sink.get(k, 0.0) + v
+        else:
+            y = mlp_apply(lp["mlp"], h, cfg.gated_mlp)
+        return shard(x + y, "batch", "seq", None)
+
+    # ------------------------------------------------------------------
+    # Forward (training / prefill)
+    # ------------------------------------------------------------------
+
+    def forward(
+        self,
+        params: Dict[str, Any],
+        batch: Dict[str, jax.Array],
+        adapters: Any = None,
+        ctx_factory: Optional[CtxFactory] = None,
+        return_logits: bool = False,
+    ) -> Dict[str, Any]:
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return self._forward_audio(params, batch, adapters, ctx_factory, return_logits)
+
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = batch.get("positions")
+        segment_ids = batch.get("segment_ids")
+        mrope_positions = batch.get("mrope_positions") if cfg.mrope else None
+        reset = batch.get("reset")  # SSM segment-boundary resets
+
+        x = embed_apply(params["embed"], tokens)
+        x = shard(x, "batch", "seq", None)
+        aux: Dict[str, jax.Array] = {}
+
+        if cfg.family in ("dense", "vlm", "moe"):
+            x, aux = self._run_stack(
+                params["layers"], x, adapters, ctx_factory,
+                positions=positions, mrope_positions=mrope_positions,
+                segment_ids=segment_ids,
+            )
+        elif cfg.family == "hybrid":
+            x, aux = self._run_hybrid(
+                params, x, adapters, ctx_factory,
+                positions=positions, segment_ids=segment_ids, reset=reset,
+            )
+        elif cfg.family == "ssm":
+            x, aux = self._run_xlstm(params, x, adapters, ctx_factory, reset=reset)
+
+        x = _apply_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = self._logits(params, x)
+        out: Dict[str, Any] = {"aux": aux}
+        if return_logits:
+            out["logits"] = logits
+        if "labels" in batch:
+            out["per_token_loss"] = self._per_token_loss(logits, batch)
+        return out
+
+    def _logits(self, params, x):
+        logits = unembed_apply(params["embed"], x)
+        if self.vocab_padded != self.cfg.vocab_size:
+            pad_mask = jnp.arange(self.vocab_padded) >= self.cfg.vocab_size
+            logits = jnp.where(pad_mask, -1e9, logits.astype(jnp.float32)).astype(logits.dtype)
+        return shard(logits, "batch", "seq", "vocab")
+
+    def _per_token_loss(self, logits, batch):
+        labels = batch["labels"]
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        ll = jnp.take_along_axis(lf, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones_like(labels, jnp.float32)
+        return (lse - ll) * mask.astype(jnp.float32)
+
+    # ---- dense / vlm / moe stack ----
+
+    def _run_stack(self, layers, x, adapters, ctx_factory, **kw):
+        cfg = self.cfg
+        aux: Dict[str, jax.Array] = {}
+
+        def body(x, lp, ad):
+            sink: Dict[str, jax.Array] = {}
+            with adapter_scope(ctx_factory(ad) if ctx_factory and ad is not None else None):
+                y = self._attn_mlp_block(lp, x, causal=True, aux_sink=sink, **kw)
+            return y, sink
+
+        if cfg.scan_layers:
+            def scan_body(x, xs):
+                lp, ad = xs
+                fn = jax.checkpoint(body) if cfg.remat else body
+                return fn(x, lp, ad)
+
+            xs = (layers, adapters)
+            x, sinks = jax.lax.scan(scan_body, x, xs)
+            aux = {k: v.sum() for k, v in sinks.items()} if sinks else {}
+        else:
+            n = cfg.num_layers
+            for i in range(n):
+                x, sink = body(x, _slice_layer(layers, i),
+                               _slice_layer(adapters, i) if adapters is not None else None)
+                for k, v in sink.items():
+                    aux[k] = aux.get(k, 0.0) + v
+        return x, aux
+
+    # ---- hybrid (zamba2) ----
+
+    def _run_hybrid(self, params, x, adapters, ctx_factory, *, positions, segment_ids, reset):
+        cfg = self.cfg
+        blocks = params["blocks"]
+        shared = params.get("shared_attn")
+        ad_mamba = adapters.get("mamba") if isinstance(adapters, dict) else None
+        ad_shared = adapters.get("shared_attn") if isinstance(adapters, dict) else None
+        per = cfg.hybrid_period - 1
+        aux: Dict[str, jax.Array] = {}
+
+        def super_block(x, mb, ad):
+            for i in range(per):
+                lp = _slice_layer(mb, i)
+                adi = _slice_layer(ad, i) if ad is not None else None
+                with adapter_scope(ctx_factory(adi) if ctx_factory and adi is not None else None):
+                    h = _apply_norm(lp["ln"], x, cfg.norm_eps)
+                    y, _ = ssm.mamba2_apply(lp["mamba"], h, cfg, reset=reset)
+                x = shard(x + y, "batch", "seq", None)
+            sink: Dict[str, jax.Array] = {}
+            with adapter_scope(ctx_factory(ad_shared) if ctx_factory and ad_shared is not None else None):
+                x = self._attn_mlp_block(
+                    shared, x, causal=True, positions=positions,
+                    mrope_positions=None, segment_ids=segment_ids, aux_sink=sink,
+                )
+            return x, sink
+
+        n_super = cfg.num_layers // cfg.hybrid_period
+        if cfg.scan_layers:
+            def scan_body(x, xs):
+                mb, ad = xs
+                fn = jax.checkpoint(super_block) if cfg.remat else super_block
+                return fn(x, mb, ad)
+
+            x, sinks = jax.lax.scan(scan_body, x, (blocks["mamba"], ad_mamba))
+            aux = {k: v.sum() for k, v in sinks.items()} if sinks else {}
+        else:
+            for i in range(n_super):
+                x, sink = super_block(
+                    x, _slice_layer(blocks["mamba"], i),
+                    _slice_layer(ad_mamba, i) if ad_mamba is not None else None,
+                )
+                for k, v in sink.items():
+                    aux[k] = aux.get(k, 0.0) + v
+        return x, aux
+
+    # ---- xlstm ----
+
+    def _run_xlstm(self, params, x, adapters, ctx_factory, *, reset):
+        cfg = self.cfg
+        blocks = params["blocks"]
+        ad_m = adapters.get("mlstm") if isinstance(adapters, dict) else None
+        ad_s = adapters.get("slstm") if isinstance(adapters, dict) else None
+        per = cfg.slstm_period - 1
+
+        def super_block(x, xs):
+            mb, sb, adm, ads = xs
+            for i in range(per):
+                lp = _slice_layer(mb, i)
+                adi = _slice_layer(adm, i) if adm is not None else None
+                with adapter_scope(ctx_factory(adi) if ctx_factory and adi is not None else None):
+                    h = _apply_norm(lp["ln"], x, cfg.norm_eps)
+                    y, _ = ssm.mlstm_apply(lp["mlstm"], h, cfg, reset=reset)
+                x = shard(x + y, "batch", "seq", None)
+            with adapter_scope(ctx_factory(ads) if ctx_factory and ads is not None else None):
+                h = _apply_norm(sb["ln"], x, cfg.norm_eps)
+                y, _ = ssm.slstm_apply(sb["slstm"], h, cfg)
+            x = shard(x + y, "batch", "seq", None)
+            return x, {}
+
+        n_super = cfg.num_layers // cfg.slstm_period
+        xs = (blocks["mlstm"], blocks["slstm"], ad_m, ad_s)
+        if cfg.scan_layers:
+            def scan_body(x, xs):
+                fn = jax.checkpoint(super_block) if cfg.remat else super_block
+                return fn(x, xs)
+            x, _ = jax.lax.scan(scan_body, x, xs)
+        else:
+            for i in range(n_super):
+                x, _ = super_block(x, jax.tree.map(lambda a: a[i] if a is not None else None, xs,
+                                                   is_leaf=lambda v: v is None))
+        return x, {}
+
+    # ---- audio (whisper) ----
+
+    def _encode_audio(self, params, audio_embed):
+        cfg = self.cfg
+        S = audio_embed.shape[1]
+        pos = sinusoidal_positions(S, cfg.d_model).astype(audio_embed.dtype)
+        x = shard(audio_embed + pos[None], "batch", "seq", None)
+
+        def body(x, lp):
+            h = _apply_norm(lp["ln1"], x, cfg.norm_eps)
+            a = attn.attention_apply(lp["attn"], h, cfg, mode=self.attn_mode, causal=False)
+            x = shard(x + a, "batch", "seq", None)
+            h = _apply_norm(lp["ln2"], x, cfg.norm_eps)
+            y = mlp_apply(lp["mlp"], h, cfg.gated_mlp)
+            return shard(x + y, "batch", "seq", None), None
+
+        if cfg.scan_layers:
+            fn = jax.checkpoint(body) if cfg.remat else body
+            x, _ = jax.lax.scan(fn, x, params["encoder"])
+        else:
+            for i in range(cfg.num_encoder_layers):
+                x, _ = body(x, _slice_layer(params["encoder"], i))
+        return _apply_norm(params["enc_final_norm"], x, cfg.norm_eps)
+
+    def _forward_audio(self, params, batch, adapters, ctx_factory, return_logits):
+        cfg = self.cfg
+        enc = self._encode_audio(params, batch["audio_embed"])
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = embed_apply(params["embed"], tokens)
+        pos = sinusoidal_positions(S, cfg.d_model).astype(x.dtype)
+        x = shard(x + pos[None], "batch", "seq", None)
+
+        def body(x, lp, ad):
+            with adapter_scope(ctx_factory(ad) if ctx_factory and ad is not None else None):
+                h = _apply_norm(lp["ln1"], x, cfg.norm_eps)
+                a = attn.attention_apply(lp["attn"], h, cfg, mode=self.attn_mode, causal=True)
+                x = shard(x + a, "batch", "seq", None)
+                h = _apply_norm(lp["ln_cross"], x, cfg.norm_eps)
+                kc = attn.attention_apply(
+                    lp["cross"], h, cfg, mode=self.attn_mode,
+                    kv_override=self._cross_kv(lp["cross"], enc),
+                )
+                x = shard(x + kc, "batch", "seq", None)
+                h = _apply_norm(lp["ln2"], x, cfg.norm_eps)
+                y = mlp_apply(lp["mlp"], h, cfg.gated_mlp)
+            return shard(x + y, "batch", "seq", None), None
+
+        if cfg.scan_layers:
+            def scan_body(x, xs):
+                lp, ad = xs
+                fn = jax.checkpoint(body) if cfg.remat else body
+                return fn(x, lp, ad)
+            x, _ = jax.lax.scan(scan_body, x, (params["layers"], adapters))
+        else:
+            for i in range(cfg.num_layers):
+                x, _ = body(x, _slice_layer(params["layers"], i),
+                            _slice_layer(adapters, i) if adapters is not None else None)
+
+        x = _apply_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = self._logits(params, x)
+        out: Dict[str, Any] = {"aux": {}}
+        if return_logits:
+            out["logits"] = logits
+        if "labels" in batch:
+            out["per_token_loss"] = self._per_token_loss(logits, batch)
+        return out
+
+    @staticmethod
+    def _cross_kv(p, enc):
+        k = jnp.einsum("bsd,dhk->bshk", enc, p["w_k"])
+        v = jnp.einsum("bsd,dhk->bshk", enc, p["w_v"])
+        if "b_k" in p:
+            k, v = k + p["b_k"], v + p["b_v"]
+        return k, v
+
+    # ------------------------------------------------------------------
+    # Decode (serving)
+    # ------------------------------------------------------------------
+
+    def init_decode_state(
+        self, params, batch: int, max_len: int, audio_embed: Optional[jax.Array] = None,
+        cache_dtype=jnp.bfloat16,
+    ) -> Dict[str, Any]:
+        cfg = self.cfg
+        hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim()
+
+        def kv(n):
+            return {
+                "k": jnp.zeros((n, batch, max_len, hkv, dh), cache_dtype),
+                "v": jnp.zeros((n, batch, max_len, hkv, dh), cache_dtype),
+            }
+
+        state: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+        if cfg.family in ("dense", "vlm", "moe"):
+            state["kv"] = kv(cfg.num_layers)
+        elif cfg.family == "hybrid":
+            n_super = cfg.num_layers // cfg.hybrid_period
+            per = cfg.hybrid_period - 1
+            ms = ssm.mamba2_init_state(cfg, batch)
+            state["mamba"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_super, per) + a.shape), ms
+            )
+            state["kv"] = kv(n_super)
+        elif cfg.family == "ssm":
+            n_super = cfg.num_layers // cfg.slstm_period
+            per = cfg.slstm_period - 1
+            m0 = ssm.mlstm_init_state(cfg, batch)
+            s0 = ssm.slstm_init_state(cfg, batch)
+            state["mlstm"] = jax.tree.map(lambda a: jnp.broadcast_to(a, (n_super, per) + a.shape), m0)
+            state["slstm"] = jax.tree.map(lambda a: jnp.broadcast_to(a, (n_super,) + a.shape), s0)
+        elif cfg.family == "audio":
+            state["kv"] = kv(cfg.num_layers)
+            if audio_embed is not None:
+                enc = self._encode_audio(params, audio_embed)
+                ck = jax.vmap(lambda lp: self._cross_kv(lp, enc))(params["layers"]["cross"])
+            else:  # abstract path: zeros cross-KV (dry-run shape stand-in)
+                src = cfg.max_source_positions
+                ck = (
+                    jnp.zeros((cfg.num_layers, batch, src, cfg.num_heads, dh), cache_dtype),
+                    jnp.zeros((cfg.num_layers, batch, src, cfg.num_heads, dh), cache_dtype),
+                )
+            state["cross_k"], state["cross_v"] = ck[0].astype(cache_dtype), ck[1].astype(cache_dtype)
+        return state
+
+    def decode_step(
+        self, params, state: Dict[str, Any], tokens: jax.Array,
+        adapters: Any = None, ctx_factory: Optional[CtxFactory] = None,
+    ) -> Tuple[jax.Array, Dict[str, Any]]:
+        cfg = self.cfg
+        pos = state["pos"]
+        x = embed_apply(params["embed"], tokens)  # [B, 1, d]
+        if cfg.family == "audio":
+            max_len = state["kv"]["k"].shape[2]
+            pe = sinusoidal_positions(max_len, cfg.d_model)  # static table, slice at pos
+            x = x + jax.lax.dynamic_slice_in_dim(pe, pos, 1, axis=0)[None].astype(x.dtype)
+        mrope = None
+        if cfg.mrope:
+            mrope = jnp.broadcast_to(jnp.reshape(pos, (1, 1, 1)), (3, tokens.shape[0], 1)).astype(jnp.int32)
+
+        new_state = dict(state)
+
+        if cfg.family in ("dense", "vlm", "moe"):
+            def body(x, xs):
+                lp, kc, vc, ad = xs
+                with adapter_scope(ctx_factory(ad) if ctx_factory and ad is not None else None):
+                    h = _apply_norm(lp["ln1"], x, cfg.norm_eps)
+                    a, cache = attn.attention_decode_apply(
+                        lp["attn"], h, cfg, {"k": kc, "v": vc, "len": pos}, mrope_positions=mrope,
+                    )
+                    x = x + a
+                    h = _apply_norm(lp["ln2"], x, cfg.norm_eps)
+                    if cfg.family == "moe" and "moe" in lp:
+                        y, _ = moe_apply(lp["moe"], h, cfg)
+                        if "shared_mlp" in lp:
+                            y = y + mlp_apply(lp["shared_mlp"], h, cfg.gated_mlp, prefix="shared_mlp")
+                    else:
+                        y = mlp_apply(lp["mlp"], h, cfg.gated_mlp)
+                return x + y, (cache["k"], cache["v"])
+
+            xs = (params["layers"], state["kv"]["k"], state["kv"]["v"], adapters)
+            x, (ks, vs) = _scan_or_loop(body, x, xs, cfg.num_layers, cfg.scan_layers)
+            new_state["kv"] = {"k": ks, "v": vs}
+
+        elif cfg.family == "hybrid":
+            per = cfg.hybrid_period - 1
+
+            def super_body(x, xs):
+                mb, mstate, kc, vc = xs
+                mstates_new = []
+                for i in range(per):
+                    lp = _slice_layer(mb, i)
+                    st = _slice_layer(mstate, i)
+                    h = _apply_norm(lp["ln"], x, cfg.norm_eps)
+                    y, st2 = ssm.mamba2_apply(lp["mamba"], h, cfg, state=st)
+                    mstates_new.append(st2)
+                    x = x + y
+                shared = params["shared_attn"]
+                h = _apply_norm(shared["ln1"], x, cfg.norm_eps)
+                a, cache = attn.attention_decode_apply(shared["attn"], h, cfg, {"k": kc, "v": vc, "len": pos})
+                x = x + a
+                h = _apply_norm(shared["ln2"], x, cfg.norm_eps)
+                x = x + mlp_apply(shared["mlp"], h, cfg.gated_mlp)
+                mst = jax.tree.map(lambda *a: jnp.stack(a), *mstates_new)
+                return x, (mst, cache["k"], cache["v"])
+
+            xs = (params["blocks"]["mamba"], state["mamba"], state["kv"]["k"], state["kv"]["v"])
+            n_super = cfg.num_layers // cfg.hybrid_period
+            x, (mst, ks, vs) = _scan_or_loop(super_body, x, xs, n_super, cfg.scan_layers)
+            new_state["mamba"] = mst
+            new_state["kv"] = {"k": ks, "v": vs}
+
+        elif cfg.family == "ssm":
+            per = cfg.slstm_period - 1
+
+            def super_body(x, xs):
+                mb, sb, mstate, sstate = xs
+                msts = []
+                for i in range(per):
+                    lp = _slice_layer(mb, i)
+                    st = _slice_layer(mstate, i)
+                    h = _apply_norm(lp["ln"], x, cfg.norm_eps)
+                    y, st2 = ssm.mlstm_apply(lp["mlstm"], h, cfg, state=st)
+                    msts.append(st2)
+                    x = x + y
+                h = _apply_norm(sb["ln"], x, cfg.norm_eps)
+                y, sst2 = ssm.slstm_apply(sb["slstm"], h, cfg, state=sstate)
+                x = x + y
+                return x, (jax.tree.map(lambda *a: jnp.stack(a), *msts), sst2)
+
+            xs = (params["blocks"]["mlstm"], params["blocks"]["slstm"], state["mlstm"], state["slstm"])
+            n_super = cfg.num_layers // cfg.slstm_period
+            x, (mst, sst) = _scan_or_loop(super_body, x, xs, n_super, cfg.scan_layers)
+            new_state["mlstm"], new_state["slstm"] = mst, sst
+
+        elif cfg.family == "audio":
+            def body(x, xs):
+                lp, kc, vc, ck, cv = xs
+                h = _apply_norm(lp["ln1"], x, cfg.norm_eps)
+                a, cache = attn.attention_decode_apply(lp["attn"], h, cfg, {"k": kc, "v": vc, "len": pos})
+                x = x + a
+                h = _apply_norm(lp["ln_cross"], x, cfg.norm_eps)
+                c, _ = attn.attention_decode_apply(
+                    lp["cross"], h, cfg,
+                    {"k": ck, "v": cv, "len": jnp.asarray(ck.shape[1], jnp.int32)},
+                    update_cache=False,
+                )
+                x = x + c
+                h = _apply_norm(lp["ln2"], x, cfg.norm_eps)
+                x = x + mlp_apply(lp["mlp"], h, cfg.gated_mlp)
+                return x, (cache["k"], cache["v"])
+
+            xs = (params["layers"], state["kv"]["k"], state["kv"]["v"], state["cross_k"], state["cross_v"])
+            x, (ks, vs) = _scan_or_loop(body, x, xs, cfg.num_layers, cfg.scan_layers)
+            new_state["kv"] = {"k": ks, "v": vs}
+
+        x = _apply_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = self._logits(params, x)
+        new_state["pos"] = pos + 1
+        return logits, new_state
+
+
+def build_model(cfg: ArchConfig, tp_size: int = 1) -> Model:
+    """Pick the attention sharding mode for the given TP degree (DESIGN §5)."""
+    if cfg.attention == "none":
+        return Model(cfg, attn_mode="pairs")
+    mode = "pairs" if (tp_size <= 1 or cfg.num_heads % tp_size == 0) else "kvscan"
+    return Model(cfg, attn_mode=mode)

@@ -1,0 +1,10 @@
+from repro.peft.hooks import adapter_scope, apply_base_op  # noqa: F401
+from repro.peft.adapters import (  # noqa: F401
+    AdapterConfig,
+    adapter_spec,
+    LORA,
+    ADAPTER_TUNING,
+    DIFF_PRUNING,
+    PREFIX_TUNING,
+)
+from repro.peft.multitask import MultiTaskAdapters, TaskSegments  # noqa: F401

@@ -1,0 +1,139 @@
+"""PEFT adapter types and their unified parameter declarations (§2.1, §3.2).
+
+Three categories from the paper (Fig. 2) + one bonus:
+  * Reparameterized — LoRA [Hu et al.]: y += (x A) B * alpha/r
+  * Additive        — Adapter-Tuning [Houlsby et al.]: y += U(gelu(D(y)))
+  * Selective       — Diff-Pruning [Guo et al.], structured-row variant:
+                      y += x[:, rows] @ delta   (mask fixed, delta learned)
+  * IA3-style scaling (bonus): y *= (1 + s)
+
+Each type is declared through the same quad: BaseOp target names, adapter
+ParamSpecs, and Dispatch/Aggregate rules realized in
+``repro.peft.multitask`` (grouped, spatially-fused application).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+from repro.configs import ArchConfig
+from repro.models.layers import ParamSpec
+
+LORA = "lora"
+ADAPTER_TUNING = "adapter"
+DIFF_PRUNING = "diff"
+IA3 = "ia3"
+PREFIX_TUNING = "prefix"  # declared for API parity; realized as IA3-style k/v scaling
+
+KINDS = (LORA, ADAPTER_TUNING, DIFF_PRUNING, IA3)
+
+DEFAULT_TARGETS = ("attn_q", "attn_k", "attn_v", "attn_o")
+
+
+@dataclass(frozen=True)
+class AdapterConfig:
+    kind: str = LORA
+    rank: int = 8            # lora rank / houlsby bottleneck / diff row count
+    alpha: float = 16.0
+    targets: Tuple[str, ...] = DEFAULT_TARGETS
+    lr: float = 1e-4         # per-task learning rate (isolation: per-task optim)
+
+    @property
+    def scale(self) -> float:
+        return self.alpha / max(self.rank, 1)
+
+
+def base_op_dims(cfg: ArchConfig) -> Dict[str, Tuple[int, int]]:
+    """(d_in, d_out) of every adapter-capable BaseOp for this architecture."""
+    d, dh = cfg.d_model, cfg.resolved_head_dim()
+    dims: Dict[str, Tuple[int, int]] = {}
+    if cfg.attention != "none" or cfg.family == "ssm":
+        qd, kvd = cfg.q_dim, cfg.kv_dim
+        if cfg.family == "ssm":
+            # mLSTM q/k/v operate on the expanded inner dim
+            d_in_ssm = cfg.ssm_expand * d
+            qd = kvd = d_in_ssm
+            dims.update({
+                "attn_q": (d_in_ssm, qd), "attn_k": (d_in_ssm, kvd),
+                "attn_v": (d_in_ssm, kvd),
+            })
+        else:
+            dims.update({
+                "attn_q": (d, qd), "attn_k": (d, kvd), "attn_v": (d, kvd),
+                "attn_o": (qd, d),
+            })
+    if cfg.family == "moe":
+        if cfg.num_shared_experts:
+            ffs = cfg.num_shared_experts * cfg.expert_d_ff
+            dims.update({
+                "shared_mlp_gate": (d, ffs), "shared_mlp_up": (d, ffs),
+                "shared_mlp_down": (ffs, d),
+            })
+    elif cfg.d_ff:
+        if cfg.gated_mlp:
+            dims.update({
+                "mlp_gate": (d, cfg.d_ff), "mlp_up": (d, cfg.d_ff),
+                "mlp_down": (cfg.d_ff, d),
+            })
+        else:
+            dims.update({"mlp_fc1": (d, cfg.d_ff), "mlp_fc2": (cfg.d_ff, d)})
+    if cfg.family in ("hybrid", "ssm"):
+        d_in = cfg.ssm_expand * d
+        if cfg.family == "hybrid":
+            nh = d_in // cfg.ssm_head_dim
+            proj_out = 2 * d_in + 2 * cfg.ssm_state + nh
+            dims.update({"ssm_in": (d, proj_out), "ssm_out": (d_in, d)})
+        else:
+            dims.update({"ssm_in": (d, 2 * d_in), "ssm_out": (d_in, d)})
+    return dims
+
+
+def adapter_spec(
+    kind: str, rank: int, d_in: int, d_out: int, n_tasks: int
+) -> Dict[str, ParamSpec]:
+    """Per-BaseOp adapter params, stacked over ``n_tasks`` (spatial fusion)."""
+    t = (n_tasks,)
+    if kind == LORA:
+        return {
+            "a": ParamSpec(t + (d_in, rank), (None, "embed", None), scale=0.02),
+            "b": ParamSpec(t + (rank, d_out), (None, None, None), init="zeros"),
+        }
+    if kind == ADAPTER_TUNING:
+        return {
+            "down": ParamSpec(t + (d_out, rank), (None, None, None), scale=0.02),
+            "up": ParamSpec(t + (rank, d_out), (None, None, None), init="zeros"),
+        }
+    if kind == DIFF_PRUNING:
+        return {
+            # fixed structured mask: ``rows`` selects rank input rows of W
+            "rows": ParamSpec(t + (rank,), (None, None), init="zeros", dtype="int32"),
+            "delta": ParamSpec(t + (rank, d_out), (None, None, None), init="zeros"),
+        }
+    if kind == IA3:
+        return {"s": ParamSpec(t + (d_out,), (None, None), init="zeros")}
+    raise ValueError(kind)
+
+
+def adapter_param_count(kind: str, rank: int, d_in: int, d_out: int) -> int:
+    if kind == LORA:
+        return d_in * rank + rank * d_out
+    if kind == ADAPTER_TUNING:
+        return 2 * rank * d_out
+    if kind == DIFF_PRUNING:
+        return rank * d_out
+    if kind == IA3:
+        return d_out
+    raise ValueError(kind)
+
+
+def adapter_flops_per_token(kind: str, rank: int, d_in: int, d_out: int) -> int:
+    """Forward FLOPs/token of one adapter application (paper cost model t_a)."""
+    if kind == LORA:
+        return 2 * rank * (d_in + d_out)
+    if kind == ADAPTER_TUNING:
+        return 4 * rank * d_out
+    if kind == DIFF_PRUNING:
+        return 2 * rank * d_out
+    if kind == IA3:
+        return d_out
+    raise ValueError(kind)

@@ -1,0 +1,81 @@
+"""BaseOp hook mechanism — the functional analogue of the paper's PyTorch
+hook-based dynamic adapter attachment (§3.2, Fig. 7b).
+
+Backbone layers never mention adapters: every adapter-capable linear op is
+routed through :func:`apply_base_op`, which consults a scoped *adapter
+context*.  ``register_tasks`` (repro.core.registry) installs a context whose
+``Dispatch``/``Aggregate`` rules implement the unified PEFT representation;
+with no active scope the op is a plain einsum.  Because the context holds
+traced arrays that are formal arguments of the jitted step, adapters remain
+differentiable while the backbone stays frozen — PEFT's "no backbone weight
+gradients" falls out of ``jax.grad`` argnums, not of ad-hoc stop-gradients.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdapterContext:
+    """Interface: maps BaseOp names to adapter transforms.
+
+    ``apply(name, x, base_out)`` implements Dispatch (prepare adapter input
+    from ``x``), the Adapter computation itself, and Aggregate (merge with
+    ``base_out``).  Must return an array shaped like ``base_out``.
+    """
+
+    def has(self, name: str) -> bool:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def apply(self, name: str, x: jax.Array, base_out: jax.Array) -> jax.Array:
+        raise NotImplementedError  # pragma: no cover - interface
+
+    def base_weight(self, name: str, w: jax.Array) -> jax.Array:
+        """Selective PEFT (Diff-Pruning) rewrites the effective weight."""
+        return w
+
+
+class _Env(threading.local):
+    def __init__(self) -> None:
+        self.ctx: Optional[AdapterContext] = None
+
+
+_ENV = _Env()
+
+
+@contextlib.contextmanager
+def adapter_scope(ctx: Optional[AdapterContext]):
+    prev = _ENV.ctx
+    _ENV.ctx = ctx
+    try:
+        yield
+    finally:
+        _ENV.ctx = prev
+
+
+def active_context() -> Optional[AdapterContext]:
+    return _ENV.ctx
+
+
+def apply_base_op(
+    name: str,
+    x: jax.Array,
+    w: jax.Array,
+    einsum_str: str,
+    *,
+    bias: Optional[jax.Array] = None,
+) -> jax.Array:
+    """A BaseOp: einsum + optional adapter Dispatch/Aggregate around it."""
+    ctx = _ENV.ctx
+    if ctx is not None:
+        w = ctx.base_weight(name, w)
+    out = jnp.einsum(einsum_str, x, w)
+    if bias is not None:
+        out = out + bias
+    if ctx is not None and ctx.has(name):
+        out = ctx.apply(name, x, out)
+    return out

@@ -1,0 +1,251 @@
+"""Multi-task adapter state + the spatially-fused Dispatch/Aggregate rules.
+
+``TaskSegments`` is the static row->task map of a spatially fused (hTask)
+batch — shapes are constant across iterations within a bucket (§3.4.1(i)),
+so the map is compile-time constant and the grouped kernels see static
+segment plans.
+
+``MultiTaskAdapters`` builds one stacked parameter tree per PEFT *kind*
+(LoRA tasks stack together, Diff-Pruning tasks together, ...), mirroring the
+backbone's stacked-layer layout so the model's layer scan slices adapters
+alongside backbone weights.  ``MultiTaskContext`` realizes Dispatch (route
+fused-batch rows to their task's adapter) and Aggregate (add/scale into the
+BaseOp output) — the horizontal adapter fusion of §3.4.3: one grouped
+computation per kind covers all tasks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig
+from repro.kernels import ops as kops
+from repro.models.layers import ParamSpec, materialize, abstract
+from repro.peft.adapters import (
+    ADAPTER_TUNING,
+    DIFF_PRUNING,
+    IA3,
+    LORA,
+    AdapterConfig,
+    adapter_spec,
+    base_op_dims,
+)
+from repro.peft.hooks import AdapterContext
+
+
+@dataclass(frozen=True)
+class TaskSegments:
+    """Row-level task layout of a fused batch (static)."""
+
+    row_task: Tuple[int, ...]  # len == fused batch rows; values in [0, n_tasks)
+    n_tasks: int
+
+    @staticmethod
+    def contiguous(rows_per_task: Sequence[int]) -> "TaskSegments":
+        rt: List[int] = []
+        for t, n in enumerate(rows_per_task):
+            rt.extend([t] * n)
+        return TaskSegments(tuple(rt), len(rows_per_task))
+
+    @property
+    def batch(self) -> int:
+        return len(self.row_task)
+
+    def row_task_array(self) -> np.ndarray:
+        return np.asarray(self.row_task, np.int32)
+
+    def token_task(self, seq_len: int) -> jax.Array:
+        return jnp.repeat(jnp.asarray(self.row_task_array()), seq_len)
+
+    def per_task_loss(self, per_token_loss: jax.Array, loss_mask: jax.Array) -> jax.Array:
+        """[n_tasks] mean loss per task — per-task isolation (Eq. 1-2)."""
+        rt = jnp.asarray(self.row_task_array())
+        losses = jnp.zeros((self.n_tasks,), jnp.float32).at[rt].add(
+            per_token_loss.sum(axis=-1)
+        )
+        counts = jnp.zeros((self.n_tasks,), jnp.float32).at[rt].add(
+            loss_mask.astype(jnp.float32).sum(axis=-1)
+        )
+        return losses / jnp.maximum(counts, 1.0)
+
+
+class MultiTaskAdapters:
+    """Builds & applies stacked multi-task adapter params for one backbone."""
+
+    def __init__(self, cfg: ArchConfig, task_cfgs: Sequence[AdapterConfig]):
+        self.cfg = cfg
+        self.task_cfgs = tuple(task_cfgs)
+        self.dims = base_op_dims(cfg)
+        # group tasks by kind; record slot of each task within its kind stack
+        self.kind_tasks: Dict[str, List[int]] = {}
+        for i, tc in enumerate(task_cfgs):
+            self.kind_tasks.setdefault(tc.kind, []).append(i)
+        self.task_slot = np.full((len(task_cfgs),), -1, np.int32)
+        for kind, ids in self.kind_tasks.items():
+            for slot, tid in enumerate(ids):
+                self.task_slot[tid] = slot
+
+    # ------------------------------------------------------------------
+
+    def _per_layer_spec(self, targets_filter=None) -> Dict[str, Any]:
+        out: Dict[str, Any] = {}
+        for kind, ids in self.kind_tasks.items():
+            rank = max(self.task_cfgs[i].rank for i in ids)
+            kspec: Dict[str, Any] = {}
+            for name, (din, dout) in self.dims.items():
+                wanted = any(name in self.task_cfgs[i].targets for i in ids)
+                if not wanted or (targets_filter and name not in targets_filter):
+                    continue
+                kspec[name] = adapter_spec(kind, rank, din, dout, len(ids))
+            if kspec:
+                out[kind] = kspec
+        return out
+
+    def _stack(self, spec: Dict[str, Any], *dims: int) -> Dict[str, Any]:
+        def f(s: ParamSpec) -> ParamSpec:
+            return ParamSpec(tuple(dims) + s.shape, ("layers",) * len(dims) + s.axes,
+                             s.init, s.scale, s.dtype)
+        return jax.tree.map(f, spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+    def spec(self) -> Any:
+        """Adapter ParamSpec tree mirroring the backbone's layer layout."""
+        cfg = self.cfg
+        per = self._per_layer_spec()
+        if cfg.family in ("dense", "vlm", "moe", "audio"):
+            return self._stack(per, cfg.num_layers)
+        if cfg.family == "hybrid":
+            n_super = cfg.num_layers // cfg.hybrid_period
+            ssm_targets = {"ssm_in", "ssm_out"}
+            attn_targets = set(self.dims) - ssm_targets
+            return {
+                "mamba": self._stack(
+                    self._per_layer_spec(ssm_targets), n_super, cfg.hybrid_period - 1
+                ),
+                "shared_attn": self._per_layer_spec(attn_targets),
+            }
+        if cfg.family == "ssm":
+            n_super = cfg.num_layers // cfg.slstm_period
+            return {
+                "mlstm": self._stack(self._per_layer_spec(), n_super, cfg.slstm_period - 1),
+                "slstm": self._stack(self._per_layer_spec({"ssm_in", "ssm_out"}), n_super),
+            }
+        raise ValueError(cfg.family)
+
+    def init(self, key: jax.Array) -> Any:
+        params = materialize(self.spec(), key)
+        return self._init_diff_rows(params)
+
+    def abstract(self) -> Any:
+        return abstract(self.spec())
+
+    def _init_diff_rows(self, params: Any) -> Any:
+        """Diff-pruning masks: fixed per-task row subsets (deterministic)."""
+        rng = np.random.RandomState(0)
+
+        def walk(node: Any, target: Optional[str]) -> Any:
+            if not isinstance(node, dict):
+                return node
+            if "rows" in node and "delta" in node and target in self.dims:
+                d_in = self.dims[target][0]
+                shape = node["rows"].shape  # [..., rank]
+                rank = shape[-1]
+                n = int(np.prod(shape[:-1]))
+                rows = np.stack([
+                    rng.choice(d_in, size=rank, replace=d_in < rank) for _ in range(n)
+                ]).reshape(shape)
+                return dict(node, rows=jnp.asarray(rows, jnp.int32))
+            return {k: walk(v, k if k in self.dims else target) for k, v in node.items()}
+
+        return walk(params, None)
+
+    # ------------------------------------------------------------------
+
+    def scales(self, kind: str) -> np.ndarray:
+        ids = self.kind_tasks[kind]
+        if kind == LORA:
+            return np.asarray([self.task_cfgs[i].scale for i in ids], np.float32)
+        return np.ones((len(ids),), np.float32)
+
+    def kind_row_slots(self, segments: TaskSegments, kind: str) -> np.ndarray:
+        """Per batch-row slot within the ``kind`` stack; -1 => not this kind."""
+        rt = segments.row_task_array()
+        slots = np.full_like(rt, -1)
+        for r, t in enumerate(rt):
+            if self.task_cfgs[t].kind == kind:
+                slots[r] = self.task_slot[t]
+        return slots
+
+    def ctx_factory(self, segments: TaskSegments):
+        """Returns the per-layer adapter-context factory for Model.forward."""
+        kind_slots = {
+            kind: jnp.asarray(self.kind_row_slots(segments, kind))
+            for kind in self.kind_tasks
+        }
+        kind_scales = {kind: jnp.asarray(self.scales(kind)) for kind in self.kind_tasks}
+        task_targets = {
+            kind: set().union(*(self.task_cfgs[i].targets for i in ids))
+            for kind, ids in self.kind_tasks.items()
+        }
+
+        def factory(layer_adapters: Any) -> AdapterContext:
+            return MultiTaskContext(layer_adapters, kind_slots, kind_scales, task_targets)
+
+        return factory
+
+
+class MultiTaskContext(AdapterContext):
+    def __init__(self, layer_adapters, kind_slots, kind_scales, task_targets):
+        self.ad = layer_adapters or {}
+        self.kind_slots = kind_slots
+        self.kind_scales = kind_scales
+        self.task_targets = task_targets
+
+    def has(self, name: str) -> bool:
+        return any(name in kspec for kspec in self.ad.values())
+
+    def apply(self, name: str, x: jax.Array, base_out: jax.Array) -> jax.Array:
+        """Dispatch/Aggregate over the fused batch.  All adapter params are
+        gathered per *batch row* (B entries), never per token — memory-lean
+        on the XLA path and block-aligned for the Pallas path."""
+        B, S = x.shape[0], x.shape[1]
+        d_in = int(np.prod(x.shape[2:]))
+        d_out = int(np.prod(base_out.shape[2:]))
+        x3 = x.reshape(B, S, d_in)
+        out3 = base_out.reshape(B, S, d_out)
+        add = jnp.zeros_like(out3, dtype=jnp.float32)
+        mul = None
+        for kind, kspec in self.ad.items():
+            if name not in kspec:
+                continue
+            p = kspec[name]
+            slots = self.kind_slots[kind]  # [B]
+            scl = self.kind_scales[kind]
+            t = jnp.maximum(slots, 0)
+            gate = (slots >= 0).astype(jnp.float32)  # [B]
+            if kind == LORA:
+                add = add + kops.grouped_lora(x3, p["a"], p["b"], slots, scl).astype(jnp.float32)
+            elif kind == ADAPTER_TUNING:
+                dwn = p["down"][t]  # [B, d_out, r]
+                up = p["up"][t]     # [B, r, d_out]
+                h = jnp.einsum("bso,bor->bsr", out3.astype(jnp.float32), dwn.astype(jnp.float32))
+                h = jax.nn.gelu(h)
+                add = add + jnp.einsum("bsr,bro->bso", h, up.astype(jnp.float32)) * gate[:, None, None]
+            elif kind == DIFF_PRUNING:
+                idx = jnp.minimum(p["rows"][t], d_in - 1)  # [B, rank]
+                x_sel = jnp.take_along_axis(x3, idx[:, None, :], axis=2)  # [B, S, rank]
+                delta = p["delta"][t]  # [B, rank, d_out]
+                add = add + jnp.einsum("bsr,bro->bso", x_sel.astype(jnp.float32),
+                                       delta.astype(jnp.float32)) * gate[:, None, None]
+            elif kind == IA3:
+                s = p["s"][t].astype(jnp.float32)  # [B, d_out]
+                m1 = 1.0 + s[:, None, :] * gate[:, None, None]
+                mul = m1 if mul is None else mul * m1
+        y = out3.astype(jnp.float32) + add
+        if mul is not None:
+            y = y * mul
+        return y.astype(base_out.dtype).reshape(base_out.shape)

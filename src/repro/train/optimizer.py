@@ -1,0 +1,83 @@
+"""AdamW for adapter pytrees (no optax dependency).
+
+Integer leaves (diff-pruning row masks) are structural: they get ``float0``
+gradients under ``jax.grad(..., allow_int=True)`` and are passed through
+untouched.  ``lr_scales`` supports per-task learning rates: a pytree (same
+structure) of broadcastable multipliers, e.g. per-task lr vectors expanded
+along each leaf's task axis — tenant isolation for optimizer hyperparams.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def _is_float(x) -> bool:
+    return hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
+
+
+def adamw_init(params: Any) -> AdamWState:
+    def zeros():
+        return jax.tree.map(
+            lambda p: jnp.zeros_like(p, jnp.float32) if _is_float(p) else None, params
+        )
+
+    return AdamWState(jnp.zeros((), jnp.int32), zeros(), zeros())
+
+
+def adamw_update(
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    lr: float = 1e-4,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    lr_scales: Optional[Any] = None,
+):
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p, s):
+        if not _is_float(p) or g is None or (hasattr(g, "dtype") and g.dtype == jax.dtypes.float0):
+            return None, m, v
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        mh = m2 / c1
+        vh = v2 / c2
+        u = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        scale = lr if s is None else lr * s
+        return (-scale * u).astype(p.dtype), m2, v2
+
+    scales = lr_scales if lr_scales is not None else jax.tree.map(lambda _: None, params)
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_s = treedef.flatten_up_to(scales) if lr_scales is not None else [None] * len(flat_p)
+
+    outs = [upd(g, m, v, p, s) for g, m, v, p, s in zip(flat_g, flat_m, flat_v, flat_p, flat_s)]
+    updates = treedef.unflatten([o[0] for o in outs])
+    new_m = treedef.unflatten([o[1] for o in outs])
+    new_v = treedef.unflatten([o[2] for o in outs])
+    return updates, AdamWState(step, new_m, new_v)
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree.map(
+        lambda p, u: p if u is None else p + u.astype(p.dtype),
+        params,
+        updates,
+        is_leaf=lambda x: x is None,
+    )

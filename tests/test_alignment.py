@@ -1,0 +1,105 @@
+"""§3.5 chunk-based alignment: unit tests + hypothesis properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.alignment import align_tasks, chunk_size_for, pow2_divisor
+from repro.core.task import PEFTTask
+from repro.peft.adapters import AdapterConfig
+
+
+def _task(tid, lens, mb, pad):
+    return PEFTTask(tid, AdapterConfig(), tuple(lens), mb, pad)
+
+
+def test_chunk_size_pow2_min64():
+    assert chunk_size_for([64, 128, 256]) == 64
+    assert chunk_size_for([128, 256]) == 128
+    assert chunk_size_for([96, 128]) == 64  # gcd 32 -> clamped to 64
+    assert chunk_size_for([512]) == 512
+
+
+def test_pow2_divisor():
+    assert pow2_divisor(96) == 32
+    assert pow2_divisor(64) == 64
+    assert pow2_divisor(100) == 4
+
+
+def test_zero_pad_vs_chunked_accounting():
+    tasks = [_task("a", [30, 50], 2, 64), _task("b", [200, 120], 2, 256)]
+    zp = align_tasks(tasks, [0, 1], mode="zero_pad")
+    ck = align_tasks(tasks, [0, 1], mode="chunked")
+    # same effective tokens either way
+    assert zp.effective_tokens == ck.effective_tokens == 30 + 50 + 200 + 120
+    # chunked strictly reduces inter-task padding (the paper's claim)
+    assert ck.intertask_pad < zp.intertask_pad
+    # and total footprint
+    assert ck.total_tokens <= zp.total_tokens
+
+
+def test_chunked_rows_are_single_task():
+    tasks = [_task("a", [30, 50, 40], 3, 64), _task("b", [100], 1, 256)]
+    plan = align_tasks(tasks, [0, 1], mode="chunked")
+    for row in plan.rows:
+        assert all(s.task == row.task for s in row.segments)
+
+
+def test_arrays_layout_consistency():
+    tasks = [_task("a", [30, 50], 2, 64), _task("b", [120], 1, 256)]
+    plan = align_tasks(tasks, [0, 1], mode="chunked")
+    arrs = plan.arrays()
+    B, L = len(plan.rows), plan.row_len
+    assert arrs["segment_ids"].shape == (B, L)
+    # loss mask counts exactly the effective tokens
+    assert int(arrs["loss_mask"].sum()) == plan.effective_tokens
+    # every segment start has a reset marker
+    assert int(arrs["reset"].sum()) == sum(len(r.segments) for r in plan.rows)
+    # positions restart within each segment
+    for b, row in enumerate(plan.rows):
+        for s in row.segments:
+            got = arrs["positions"][b, s.start : s.start + s.length]
+            np.testing.assert_array_equal(got, np.arange(s.length))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    lens1=st.lists(st.integers(8, 64), min_size=1, max_size=6),
+    lens2=st.lists(st.integers(8, 256), min_size=1, max_size=4),
+    mode=st.sampled_from(["zero_pad", "chunked", "pack_only"]),
+)
+def test_alignment_invariants(lens1, lens2, mode):
+    tasks = [
+        _task("a", lens1, len(lens1), 64),
+        _task("b", lens2, len(lens2), 256),
+    ]
+    plan = align_tasks(tasks, [0, 1], mode=mode)
+    # conservation: effective + all padding == total layout tokens
+    assert (
+        plan.effective_tokens + plan.intratask_pad + plan.intertask_pad
+        == plan.total_tokens
+    )
+    assert plan.effective_tokens == sum(min(l, 64) for l in lens1) + sum(
+        min(l, 256) for l in lens2
+    )
+    # rows all share the committed row length; chunk granularity respected
+    for row in plan.rows:
+        assert row.used() <= plan.row_len
+        for s in row.segments:
+            assert s.padded >= s.length
+            if mode == "chunked":
+                assert s.padded % plan.chunk == 0
+                assert s.start % plan.chunk == 0
+    if mode == "chunked":
+        assert plan.chunk >= 64 and plan.chunk & (plan.chunk - 1) == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    lens=st.lists(st.integers(8, 128), min_size=2, max_size=8),
+)
+def test_chunked_never_worse_than_zero_pad(lens):
+    tasks = [_task("a", lens, len(lens), 128), _task("b", [200], 1, 256)]
+    zp = align_tasks(tasks, [0, 1], mode="zero_pad")
+    ck = align_tasks(tasks, [0, 1], mode="chunked")
+    assert ck.total_tokens <= zp.total_tokens
+    assert ck.intertask_pad <= zp.intertask_pad

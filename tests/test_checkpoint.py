@@ -1,0 +1,122 @@
+"""Checkpoint system: atomicity, integrity, async, elastic restore, restart."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    prune_checkpoints,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.distributed.fault_tolerance import (
+    StragglerMitigator,
+    SupervisorConfig,
+    TrainSupervisor,
+    elastic_respec,
+    simulated_failure,
+)
+from repro.core.task import ParallelismSpec
+
+
+def _tree(key):
+    a, b = jax.random.split(key)
+    return {"w": jax.random.normal(a, (8, 16)), "b": {"x": jax.random.normal(b, (4,)),
+                                                      "n": jnp.arange(3)}}
+
+
+def test_roundtrip(tmp_path, key):
+    tree = _tree(key)
+    save_checkpoint(str(tmp_path), 3, tree, extra={"next_step": 4})
+    assert latest_step(str(tmp_path)) == 3
+    like = jax.tree.map(jnp.zeros_like, tree)
+    out, extra = restore_checkpoint(str(tmp_path), 3, like)
+    assert extra["next_step"] == 4
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_corruption_detected(tmp_path, key):
+    tree = _tree(key)
+    path = save_checkpoint(str(tmp_path), 1, tree)
+    leaves = [n for n in os.listdir(path) if n.endswith(".npy")]
+    victim = max(leaves, key=lambda n: os.path.getsize(os.path.join(path, n)))
+    size = os.path.getsize(os.path.join(path, victim))
+    with open(os.path.join(path, victim), "r+b") as f:
+        f.seek(size - 8)  # inside the data payload
+        f.write(b"\xde\xad\xbe\xef")
+    with pytest.raises((IOError, ValueError)):
+        restore_checkpoint(str(tmp_path), 1, jax.tree.map(jnp.zeros_like, tree))
+
+
+def test_partial_write_never_visible(tmp_path, key):
+    tree = _tree(key)
+    save_checkpoint(str(tmp_path), 1, tree)
+    # simulate an interrupted save: a .tmp directory must be ignored
+    os.makedirs(str(tmp_path / "step_00000002.tmp"))
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_prune_keeps_latest(tmp_path, key):
+    tree = _tree(key)
+    for s in range(5):
+        save_checkpoint(str(tmp_path), s, tree)
+    prune_checkpoints(str(tmp_path), keep=2)
+    assert latest_step(str(tmp_path)) == 4
+    remaining = [n for n in os.listdir(str(tmp_path)) if n.startswith("step_")]
+    assert len(remaining) == 2
+
+
+def test_async_checkpointer(tmp_path, key):
+    tree = _tree(key)
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3):
+        ck.save(s, tree)
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_supervisor_restart_recovers(tmp_path, key):
+    """Inject failures; training must resume from checkpoints and finish."""
+    fails = {7: True, 13: True}
+
+    def failure_hook(i):
+        if fails.pop(i, False):
+            raise simulated_failure()
+
+    sup = TrainSupervisor(
+        SupervisorConfig(ckpt_dir=str(tmp_path), ckpt_every=5, max_restarts=5),
+        failure_hook=failure_hook,
+    )
+
+    def step_fn(state, i):
+        return state + 1.0
+
+    out = sup.run(jnp.zeros(()), step_fn, 20)
+    assert float(out) == 20.0
+    assert sup.restarts == 2
+
+
+def test_elastic_restore_respec():
+    old = ParallelismSpec(num_stages=4, chips_per_stage=64, tp=16, dp=4)
+    new = elastic_respec(old, 128, prefer_tp=16)
+    assert new.total_chips == 128
+    assert new.tp == 16
+    new2 = elastic_respec(old, 24, prefer_tp=16)
+    assert new2.total_chips == 24
+
+
+def test_straggler_rebalance():
+    sm = StragglerMitigator(n_hosts=4, threshold=1.4)
+    for step in range(5):
+        for h, t in enumerate([1.0, 1.0, 1.0, 3.0]):
+            sm.observe(h, t)
+    assert sm.stragglers() == [3]
+    assign = {h: [(h, i) for i in range(8)] for h in range(4)}
+    out = sm.rebalance(assign)
+    assert len(out[3]) < 8
+    assert sum(len(v) for v in out.values()) == 32  # work conserved

@@ -1,0 +1,125 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import smoke_config
+from repro.core import CostModel, ParallelismSpec, build_htask, fuse_tasks
+from repro.core.grouping import balance_buckets
+from repro.core.pipeline_template import generate_template, simulate
+from repro.core.task import Bucket, PEFTTask
+from repro.data.synthetic import DATASETS, make_task
+from repro.distributed.collectives import compression_error
+from repro.peft.adapters import AdapterConfig, LORA
+from repro.peft.multitask import TaskSegments
+from repro.train.optimizer import adamw_init, adamw_update, apply_updates
+
+CFG = smoke_config("llama3.2-3b")
+PAR = ParallelismSpec(num_stages=2, chips_per_stage=1)
+
+task_strategy = st.lists(
+    st.tuples(st.sampled_from(list(DATASETS)), st.integers(1, 4), st.integers(1, 16)),
+    min_size=1, max_size=6,
+)
+
+
+def _mk(tasks_spec):
+    return [
+        make_task(f"t{i}", ds, mb, AdapterConfig(LORA, rank=r), seed=i)
+        for i, (ds, mb, r) in enumerate(tasks_spec)
+    ]
+
+
+@settings(max_examples=25, deadline=None)
+@given(task_strategy)
+def test_fusion_partition_is_exact_cover(tasks_spec):
+    """DP fusion: every task in exactly one hTask; tokens conserved."""
+    tasks = _mk(tasks_spec)
+    cm = CostModel(CFG, tasks, PAR)
+    res = fuse_tasks(tasks, cm, n_micro=1)
+    covered = sorted(i for h in res.htasks for i in h.task_ids)
+    assert covered == list(range(len(tasks)))
+    for h, plan in zip(res.htasks, res.plans):
+        assert h.tokens == plan.total_tokens
+        assert h.effective_tokens + h.intertask_pad + h.intratask_pad == h.tokens
+
+
+@settings(max_examples=25, deadline=None)
+@given(task_strategy)
+def test_fusion_never_worse_than_no_fusion(tasks_spec):
+    """F* <= cost of the all-singletons plan (DP includes it as a candidate)."""
+    tasks = _mk(tasks_spec)
+    cm = CostModel(CFG, tasks, PAR)
+    res = fuse_tasks(tasks, cm, n_micro=1)
+    singleton_cost = 0.0
+    for i in range(len(tasks)):
+        h, _ = build_htask(tasks, [i])
+        singleton_cost += cm.pipeline_latency(h, 1) / PAR.num_stages
+    assert res.latency_estimate <= singleton_cost + 1e-12
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0.1, 100.0), min_size=1, max_size=10),
+       st.integers(1, 5))
+def test_balance_buckets_partitions(latencies, P):
+    P = min(P, len(latencies))
+    buckets = balance_buckets(latencies, P)
+    flat = sorted(i for b in buckets for i in b)
+    assert flat == list(range(len(latencies)))
+    # LPT+swap never worse than worst-case single bucket spread
+    loads = [sum(latencies[i] for i in b) for b in buckets]
+    assert max(loads) <= sum(latencies)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(0.5, 8.0), min_size=1, max_size=5),
+       st.integers(1, 6), st.integers(2, 5))
+def test_simulated_latency_lower_bound(lats, C, S):
+    """Simulated latency >= steady-phase bound 2*C*sum_i max_s(L_i) (Lemma 2)."""
+    buckets = [Bucket((i,), tuple([l] * S)) for i, l in enumerate(lats)]
+    t = generate_template(buckets, C, S)
+    r = simulate(t)
+    lower = 2 * C * sum(max(b.stage_latency) for b in buckets)
+    assert r.latency >= lower - 1e-9
+    # and the last-stage busy time equals the lower bound exactly
+    assert abs(r.stage_busy[-1] - lower) < 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 8))
+def test_segments_per_task_loss_mass(b1, b2):
+    seg = TaskSegments.contiguous([b1, b2])
+    S = 8
+    losses = jnp.ones((b1 + b2, S))
+    mask = jnp.ones((b1 + b2, S))
+    pt = seg.per_task_loss(losses, mask)
+    np.testing.assert_allclose(np.asarray(pt), 1.0, rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(0.01, 50.0), st.integers(64, 2048))
+def test_compression_error_bounded(scale, n):
+    x = jnp.asarray(np.random.RandomState(0).normal(0, scale, n), jnp.float32)
+    err = float(compression_error(x))
+    assert err < 0.02
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(1e-4, 1e-2))
+def test_adamw_descends_quadratic(lr):
+    w = jnp.asarray(np.random.RandomState(0).normal(0, 1, (16,)), jnp.float32)
+    target = jnp.zeros((16,))
+    params = {"w": w}
+    opt = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        upd, opt = adamw_update(g, opt, params, lr=lr)
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < l0
