@@ -1,5 +1,15 @@
 """Kernel microbenchmarks: grouped LoRA vs per-task loop (the paper's
-grouped-kernel claim) and alignment-aware attention masking cost."""
+grouped-kernel claim), forward AND backward, across execution impls.
+
+Rows:
+  kernels/grouped_lora/{fwd,fwd_bwd}/<impl>/T_<n>
+  kernels/packed_attention/{fwd,fwd_bwd}/<impl>/S_<n>
+
+``xla`` always runs.  ``pallas`` runs only on a real TPU backend.
+``pallas_interpret`` is a correctness tier, not a perf tier — it runs one
+small shape so the artifact tracks that the differentiable kernel path
+stays alive, without minutes of interpreter time.
+"""
 from __future__ import annotations
 
 import jax
@@ -9,19 +19,24 @@ from benchmarks.common import csv_row, timeit
 from repro.kernels import ops as kops
 
 
-def run() -> list[str]:
-    rows = []
+def _impls() -> list[str]:
+    impls = ["xla"]
+    if jax.default_backend() == "tpu":
+        impls.append("pallas")
+    return impls
+
+
+def _bench_grouped_lora(rows: list[str]) -> None:
     key = jax.random.PRNGKey(0)
     B, S, d, dout, r = 8, 256, 512, 512, 16
     for T in (2, 4, 8):
-        ks = jax.random.split(key, 3)
+        ks = jax.random.split(key, 4)
         x = jax.random.normal(ks[0], (B, S, d), jnp.float32)
         a = jax.random.normal(ks[1], (T, d, r)) * 0.05
         b = jax.random.normal(ks[2], (T, r, dout)) * 0.05
         rt = jnp.asarray([i % T for i in range(B)], jnp.int32)
         scale = jnp.ones((T,))
-
-        grouped = jax.jit(lambda x: kops.grouped_lora(x, a, b, rt, scale))
+        g = jax.random.normal(ks[3], (B, S, dout), jnp.float32)
 
         @jax.jit
         def per_task(x):
@@ -34,12 +49,110 @@ def run() -> list[str]:
                 out += jnp.einsum("bsr,ro->bso", h, b[t])
             return out
 
-        grouped(x).block_until_ready()
         per_task(x).block_until_ready()
-        tg = timeit(lambda: grouped(x).block_until_ready(), iters=5)
         tp = timeit(lambda: per_task(x).block_until_ready(), iters=5)
-        rows.append(csv_row(
-            f"kernels/grouped_lora/T_{T}", tg * 1e6,
-            f"per_task_us={tp*1e6:.1f};grouped_speedup=x{tp/tg:.2f}",
-        ))
+
+        for impl in _impls():
+            kops.set_impl(impl)
+            try:
+                fwd = jax.jit(lambda x: kops.grouped_lora(x, a, b, rt, scale))
+
+                def loss(x, a, b):
+                    return (kops.grouped_lora(x, a, b, rt, scale) * g).sum()
+
+                bwd = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
+                fwd(x).block_until_ready()
+                jax.block_until_ready(bwd(x, a, b))
+                tf = timeit(lambda: fwd(x).block_until_ready(), iters=5)
+                tb = timeit(lambda: jax.block_until_ready(bwd(x, a, b)), iters=5)
+            finally:
+                kops.set_impl("xla")
+            rows.append(csv_row(
+                f"kernels/grouped_lora/fwd/{impl}/T_{T}", tf * 1e6,
+                f"per_task_us={tp*1e6:.1f};grouped_speedup=x{tp/tf:.2f}",
+            ))
+            rows.append(csv_row(
+                f"kernels/grouped_lora/fwd_bwd/{impl}/T_{T}", tb * 1e6,
+                f"fwd_us={tf*1e6:.1f};bwd_over_fwd=x{tb/tf:.2f}",
+            ))
+
+
+def _bench_packed_attention(rows: list[str]) -> None:
+    key = jax.random.PRNGKey(1)
+    B, H, Hkv, dh = 4, 8, 4, 64
+    for S in (512, 1024):
+        ks = jax.random.split(key, 4)
+        q = jax.random.normal(ks[0], (B, S, H, dh), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, Hkv, dh), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, Hkv, dh), jnp.float32)
+        g = jax.random.normal(ks[3], (B, S, H, dh), jnp.float32)
+        half = S // 2
+        seg = jnp.concatenate(
+            [jnp.zeros((B, half), jnp.int32), jnp.ones((B, half), jnp.int32)],
+            axis=1,
+        )
+        pos = jnp.broadcast_to(
+            jnp.concatenate([jnp.arange(half), jnp.arange(half)]).astype(jnp.int32),
+            (B, S),
+        )
+
+        for impl in _impls():
+            kops.set_impl(impl)
+            try:
+                fwd = jax.jit(lambda q, k, v: kops.packed_attention(
+                    q, k, v, segment_ids=seg, positions=pos, causal=True))
+
+                def loss(q, k, v):
+                    return (kops.packed_attention(
+                        q, k, v, segment_ids=seg, positions=pos, causal=True
+                    ) * g).sum()
+
+                bwd = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
+                fwd(q, k, v).block_until_ready()
+                jax.block_until_ready(bwd(q, k, v))
+                tf = timeit(lambda: fwd(q, k, v).block_until_ready(), iters=5)
+                tb = timeit(lambda: jax.block_until_ready(bwd(q, k, v)), iters=5)
+            finally:
+                kops.set_impl("xla")
+            rows.append(csv_row(
+                f"kernels/packed_attention/fwd/{impl}/S_{S}", tf * 1e6, "",
+            ))
+            rows.append(csv_row(
+                f"kernels/packed_attention/fwd_bwd/{impl}/S_{S}", tb * 1e6,
+                f"fwd_us={tf*1e6:.1f};bwd_over_fwd=x{tb/tf:.2f}",
+            ))
+
+
+def _bench_interpret_smoke(rows: list[str]) -> None:
+    """One tiny fwd+bwd through the interpret tier: tracks that the
+    differentiable Pallas path stays alive (timing is interpreter-bound)."""
+    key = jax.random.PRNGKey(2)
+    ks = jax.random.split(key, 3)
+    M, d, dout, T, r = 128, 128, 128, 2, 8
+    x = jax.random.normal(ks[0], (M // 64, 64, d), jnp.float32)
+    a = jax.random.normal(ks[1], (T, d, r)) * 0.05
+    b = jax.random.normal(ks[2], (T, r, dout)) * 0.05
+    rt = jnp.asarray([0, 1], jnp.int32)
+    scale = jnp.ones((T,))
+    kops.set_impl("pallas_interpret")
+    try:
+        def loss(x, a, b):
+            return kops.grouped_lora(x, a, b, rt, scale).sum()
+
+        bwd = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
+        jax.block_until_ready(bwd(x, a, b))
+        tb = timeit(lambda: jax.block_until_ready(bwd(x, a, b)), iters=2)
+    finally:
+        kops.set_impl("xla")
+    rows.append(csv_row(
+        "kernels/grouped_lora/fwd_bwd/pallas_interpret/smoke", tb * 1e6,
+        "correctness_tier=1",
+    ))
+
+
+def run() -> list[str]:
+    rows: list[str] = []
+    _bench_grouped_lora(rows)
+    _bench_packed_attention(rows)
+    _bench_interpret_smoke(rows)
     return rows

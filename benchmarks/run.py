@@ -5,9 +5,14 @@
   Fig 18/19 -> orchestration  Fig 20 -> alignment    Fig 21 -> scalability
   Eq 3-6    -> planner_quality            kernels -> grouped-kernel claim
   §Roofline -> roofline (reads artifacts/dryrun)
+
+``--json`` additionally writes one ``BENCH_<module>.json`` artifact per
+module run ({row name -> us_per_call}) so the perf trajectory is tracked
+across PRs by diffing artifacts instead of scraping stdout.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 import traceback
@@ -25,19 +30,39 @@ def main() -> None:
         "throughput",
         "roofline",
     ]
-    only = sys.argv[1:] or None
+    args = sys.argv[1:]
+    as_json = "--json" in args
+    only = [a for a in args if not a.startswith("--")] or None
     print("name,us_per_call,derived")
     for name in mods:
         if only and name not in only:
             continue
         t0 = time.time()
+        rows: list[str] = []
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
             for row in mod.run():
+                rows.append(row)
                 print(row, flush=True)
         except Exception as e:
             traceback.print_exc(file=sys.stderr)
             print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
+        if as_json and rows:
+            # no artifact for a module that errored before producing rows —
+            # an empty BENCH_*.json would let CI's artifact check go green
+            # with no benchmark data behind it.
+            art = {}
+            for row in rows:
+                parts = row.split(",")
+                if len(parts) >= 2:
+                    try:
+                        art[parts[0]] = float(parts[1])
+                    except ValueError:
+                        pass
+            path = f"BENCH_{name}.json"
+            with open(path, "w") as f:
+                json.dump(art, f, indent=2, sort_keys=True)
+            print(f"# wrote {path} ({len(art)} rows)", flush=True)
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
 
 

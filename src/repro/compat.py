@@ -1,0 +1,41 @@
+"""jax version-compatibility shims.
+
+The codebase targets the modern jax API surface — ``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh(..., axis_types=...)`` — but the CPU CI
+image bakes a 0.4.x jaxlib where those are spelled
+``jax.experimental.shard_map.shard_map(check_rep=...)`` and ``make_mesh``
+without axis types.  Route every call through here so the rest of the tree
+stays written against one API.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` on new jax; ``check_rep`` spelling on 0.4.x."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str],
+              devices: Optional[Sequence[Any]] = None):
+    """``jax.make_mesh`` with Auto axis types where the API supports them
+    (Auto is the implicit behavior on older jax, so omitting is exact)."""
+    kwargs: dict = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)

@@ -10,6 +10,10 @@ Per-task optimizer isolation: losses are per-task means summed (gradients
 are exactly the per-task gradients — Eq. 1-2 isolation), per-task learning
 rates enter as lr-scale trees, and a NaN guard zeroes a task's update
 without polluting the others (numerical-failure isolation, §3.2).
+
+The iteration loop is stall-free (MuxServe-style dispatch discipline):
+micro-step metrics accumulate on-device, batches double-buffer host→device,
+and exactly one explicit device→host transfer happens per iteration.
 """
 from __future__ import annotations
 
@@ -137,34 +141,66 @@ class PEFTEngine:
 
     # ------------------------------------------------------------------
 
+    def _schedule(self, n_micro: Optional[int]) -> List[int]:
+        """hTask launch order for one iteration (template order).
+
+        ``n_micro=None`` follows the planner's template verbatim.  An
+        explicit ``n_micro`` is honored per bucket: each bucket runs exactly
+        ``n_micro`` micro-steps — template entries beyond that are
+        truncated, buckets the template under-covers are repeated.
+        """
+        buckets = self.plan.template.buckets
+        order = [m.bucket for m in self.plan.template.micro_order]
+        if n_micro is not None:
+            counts = [0] * len(buckets)
+            kept: List[int] = []
+            for b in order:
+                if counts[b] < n_micro:
+                    counts[b] += 1
+                    kept.append(b)
+            for b in range(len(buckets)):
+                kept.extend([b] * (n_micro - counts[b]))
+            order = kept
+        return [hid for b in order for hid in buckets[b].htask_ids]
+
     def run_iteration(
         self, loaders: Dict[int, Iterator], n_micro: Optional[int] = None
     ) -> StepMetrics:
-        """One training iteration: all buckets, template order, C micro each."""
+        """One training iteration: all buckets, template order, C micro each.
+
+        Stall-free dispatch: loss and per-task metrics live in
+        device-resident accumulators, so micro-steps enqueue back-to-back
+        with NO host synchronization in the loop — the only device→host
+        transfer is one explicit ``jax.device_get`` of the accumulated
+        metrics at the end of the iteration.  Host→device batch transfer is
+        double-buffered: the next micro-batch's ``device_put`` DMA is in
+        flight while the current step computes.
+        """
+        from repro.launch.steps import prefetch_to_device
+
         t0 = time.perf_counter()
-        C = n_micro or max(
-            len([m for m in self.plan.template.micro_order if m.bucket == b]) //
-            max(len(self.plan.template.buckets[b].htask_ids), 1)
-            for b in range(len(self.plan.template.buckets))
-        )
-        total_loss = 0.0
-        pt_acc = np.zeros((len(self.plan.tasks),), np.float64)
+        schedule = self._schedule(n_micro)
+        # device_put (not jnp.zeros) so accumulator init is an explicit
+        # transfer — the whole loop stays clean under transfer_guard.
+        total_loss = jax.device_put(np.float32(0.0))
+        pt_acc = jax.device_put(np.zeros((len(self.plan.tasks),), np.float32))
         tokens = eff = 0
-        for mb in self.plan.template.micro_order:
-            bucket = self.plan.template.buckets[mb.bucket]
-            for hid in bucket.htask_ids:
-                step = self._step_for(hid)
-                batch = {k: jnp.asarray(v) for k, v in next(loaders[hid]).items()}
-                self.reg.adapter_params, self.reg.opt_state, loss, pt = step(
-                    self.backbone, self.reg.adapter_params, self.reg.opt_state, batch
-                )
-                total_loss += float(loss)
-                pt_acc += np.asarray(pt, np.float64)
-                h = self.plan.htasks[hid]
-                tokens += h.tokens
-                eff += h.effective_tokens
+        batches = prefetch_to_device(next(loaders[h]) for h in schedule)
+        for hid, batch in zip(schedule, batches):
+            step = self._step_for(hid)
+            self.reg.adapter_params, self.reg.opt_state, loss, pt = step(
+                self.backbone, self.reg.adapter_params, self.reg.opt_state, batch
+            )
+            total_loss = total_loss + loss
+            pt_acc = pt_acc + pt
+            h = self.plan.htasks[hid]
+            tokens += h.tokens
+            eff += h.effective_tokens
+        # The iteration's single host sync: one explicit transfer of the
+        # device accumulators (blocks until the whole iteration retires).
+        loss_h, pt_h = jax.device_get((total_loss, pt_acc))
         dt = time.perf_counter() - t0
-        return StepMetrics(total_loss, pt_acc, tokens, eff, dt)
+        return StepMetrics(float(loss_h), np.asarray(pt_h, np.float64), tokens, eff, dt)
 
     def throughput(self, metrics: StepMetrics) -> Dict[str, float]:
         return {

@@ -16,6 +16,23 @@ are chunk-aligned (chunk >= 64) and tasks own whole rows.
 
 Two matmuls are fused: h = x @ A[t] accumulates over d_in tiles in a VMEM
 scratch; on the last k-tile, y = h @ B[t] * scale[t] writes the output tile.
+
+The op is differentiable via ``jax.custom_vjp``: the forward under autodiff
+additionally spills the rank-space activations h = x @ A[t] ([M, r] f32 —
+tiny next to x), so the backward kernel skips recomputing the first GEMM.
+The backward streams the same scalar-prefetched block-task table and fuses
+all three gradient GEMMs per block:
+
+  dh    = (g @ B[t]^T) * scale[t]          (rank-space cotangent, scratch)
+  dX    = dh @ A[t]^T                      (per-block tile, written once)
+  dA_p  = x^T @ dh                         (per-BLOCK partial, [n_m,d_in,r])
+  dM_p  = h^T @ g                          (per-BLOCK partial, [n_m,r,d_out])
+
+Per-task accumulation (dA[t] = sum of its blocks' partials) happens as one
+XLA scatter-add outside the kernel — every Pallas output block is written
+exactly once, so no output-revisiting hazards on the TPU pipeline.  dB and
+dscale derive from the unscaled dM partials: dB[t] = scale[t] * M[t] and
+dscale[t] = <B[t], M[t]>.
 """
 from __future__ import annotations
 
@@ -29,7 +46,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(
+def _fwd_kernel(
     # scalar prefetch
     block_task_ref,  # [n_m] int32
     scale_ref,       # [T] f32
@@ -37,13 +54,13 @@ def _kernel(
     x_ref,           # [block_m, block_k]
     a_ref,           # [1, block_k, r]
     b_ref,           # [1, r, d_out]
-    # output
+    # outputs
     o_ref,           # [block_m, d_out]
-    # scratch
-    h_ref,           # [block_m, r] f32
-    *,
+    *rest,           # (h_out_ref?, h_ref scratch)
     n_k: int,
+    save_h: bool,
 ):
+    h_ref = rest[-1]
     i = pl.program_id(0)
     k = pl.program_id(1)
 
@@ -67,6 +84,175 @@ def _kernel(
             preferred_element_type=jnp.float32,
         )
         o_ref[...] = (y * gate).astype(o_ref.dtype)
+        if save_h:
+            rest[0][...] = h_ref[...]
+
+
+def _bwd_kernel(
+    # scalar prefetch
+    block_task_ref,  # [n_m] int32
+    scale_ref,       # [T] f32
+    # inputs
+    x_ref,           # [block_m, block_k]
+    g_ref,           # [block_m, d_out]   (dy)
+    h_ref,           # [block_m, r] f32   (saved rank activations)
+    a_ref,           # [1, block_k, r]
+    b_ref,           # [1, r, d_out]
+    # outputs
+    dx_ref,          # [block_m, block_k]
+    dap_ref,         # [1, block_k, r]    per-block dA partial
+    dmp_ref,         # [1, r, d_out]      per-block unscaled dB partial
+    # scratch
+    dh_ref,          # [block_m, r] f32
+    *,
+    n_k: int,
+):
+    i = pl.program_id(0)
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _head():
+        t = block_task_ref[i]
+        valid = jnp.where(t >= 0, 1.0, 0.0)
+        gate = valid * scale_ref[jnp.maximum(t, 0)]
+        g = g_ref[...].astype(jnp.float32)
+        # dh = (g @ B^T) * scale — gated to zero for adapter-less blocks
+        dh_ref[...] = jax.lax.dot_general(
+            g, b_ref[0].astype(jnp.float32),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * gate
+        # unscaled dB partial: h^T @ g (valid-gated; scale applied outside)
+        dmp_ref[0] = jax.lax.dot_general(
+            h_ref[...], g,
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * valid
+
+    # dX tile: dh @ A^T over this d_in tile
+    dx_ref[...] = jax.lax.dot_general(
+        dh_ref[...], a_ref[0].astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(dx_ref.dtype)
+    # per-block dA partial for this d_in tile: x^T @ dh
+    dap_ref[0] = jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), dh_ref[...],
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _fwd_call(x, a, b, row_task, scale, block_m, block_k, interpret, save_h):
+    M, d_in = x.shape
+    T, _, r = a.shape
+    d_out = b.shape[-1]
+    n_m, n_k = M // block_m, d_in // block_k
+
+    block_task = row_task[:: block_m].astype(jnp.int32)  # [n_m] (block-constant)
+
+    out_shape = [jax.ShapeDtypeStruct((M, d_out), x.dtype)]
+    out_specs = [pl.BlockSpec((block_m, d_out), lambda i, k, bt, sc: (i, 0))]
+    if save_h:
+        out_shape.append(jax.ShapeDtypeStruct((M, r), jnp.float32))
+        out_specs.append(pl.BlockSpec((block_m, r), lambda i, k, bt, sc: (i, 0)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_m, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, k, bt, sc: (i, k)),
+            pl.BlockSpec(
+                (1, block_k, r), lambda i, k, bt, sc: (jnp.maximum(bt[i], 0), k, 0)
+            ),
+            pl.BlockSpec(
+                (1, r, d_out), lambda i, k, bt, sc: (jnp.maximum(bt[i], 0), 0, 0)
+            ),
+        ],
+        out_specs=out_specs,
+        scratch_shapes=[pltpu.VMEM((block_m, r), jnp.float32)],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_fwd_kernel, n_k=n_k, save_h=save_h),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    out = fn(block_task, scale.astype(jnp.float32), x, a, b)
+    return out if save_h else out[0]
+
+
+def _bwd_call(x, a, b, row_task, scale, h, g, block_m, block_k, interpret):
+    M, d_in = x.shape
+    T, _, r = a.shape
+    d_out = b.shape[-1]
+    n_m, n_k = M // block_m, d_in // block_k
+    block_task = row_task[:: block_m].astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_m, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, k, bt, sc: (i, k)),
+            pl.BlockSpec((block_m, d_out), lambda i, k, bt, sc: (i, 0)),
+            pl.BlockSpec((block_m, r), lambda i, k, bt, sc: (i, 0)),
+            pl.BlockSpec(
+                (1, block_k, r), lambda i, k, bt, sc: (jnp.maximum(bt[i], 0), k, 0)
+            ),
+            pl.BlockSpec(
+                (1, r, d_out), lambda i, k, bt, sc: (jnp.maximum(bt[i], 0), 0, 0)
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, k, bt, sc: (i, k)),
+            pl.BlockSpec((1, block_k, r), lambda i, k, bt, sc: (i, k, 0)),
+            pl.BlockSpec((1, r, d_out), lambda i, k, bt, sc: (i, 0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_m, r), jnp.float32)],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_bwd_kernel, n_k=n_k),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((M, d_in), x.dtype),
+            jax.ShapeDtypeStruct((n_m, d_in, r), jnp.float32),
+            jax.ShapeDtypeStruct((n_m, r, d_out), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    dx, da_p, dm_p = fn(block_task, scale.astype(jnp.float32), x, g, h, a, b)
+
+    # Per-task reduction of the per-block partials (one scatter-add each).
+    slots = jnp.maximum(block_task, 0)
+    da = jnp.zeros((T, d_in, r), jnp.float32).at[slots].add(da_p)
+    m = jnp.zeros((T, r, d_out), jnp.float32).at[slots].add(dm_p)
+    db = m * scale.astype(jnp.float32)[:, None, None]
+    dscale = jnp.einsum("tro,tro->t", m, b.astype(jnp.float32))
+    return dx, da.astype(a.dtype), db.astype(b.dtype), dscale.astype(scale.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _grouped_lora(x, a, b, row_task, scale, block_m, block_k, interpret):
+    return _fwd_call(x, a, b, row_task, scale, block_m, block_k, interpret,
+                     save_h=False)
+
+
+def _grouped_lora_fwd(x, a, b, row_task, scale, block_m, block_k, interpret):
+    y, h = _fwd_call(x, a, b, row_task, scale, block_m, block_k, interpret,
+                     save_h=True)
+    return y, (x, a, b, row_task, scale, h)
+
+
+def _grouped_lora_bwd(block_m, block_k, interpret, res, g):
+    x, a, b, row_task, scale, h = res
+    dx, da, db, dscale = _bwd_call(
+        x, a, b, row_task, scale, h, g, block_m, block_k, interpret
+    )
+    d_row_task = np.zeros(row_task.shape, jax.dtypes.float0)
+    return dx, da, db, d_row_task, dscale
+
+
+_grouped_lora.defvjp(_grouped_lora_fwd, _grouped_lora_bwd)
 
 
 def grouped_lora_pallas(
@@ -81,33 +267,8 @@ def grouped_lora_pallas(
     interpret: bool = False,
 ) -> jax.Array:
     M, d_in = x.shape
-    T, _, r = a.shape
-    d_out = b.shape[-1]
     block_m = math.gcd(M, block_m)
     block_k = math.gcd(d_in, block_k)
-    n_m, n_k = M // block_m, d_in // block_k
-
-    block_task = row_task[:: block_m].astype(jnp.int32)  # [n_m] (block-constant)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(n_m, n_k),
-        in_specs=[
-            pl.BlockSpec((block_m, block_k), lambda i, k, bt, sc: (i, k)),
-            pl.BlockSpec(
-                (1, block_k, r), lambda i, k, bt, sc: (jnp.maximum(bt[i], 0), k, 0)
-            ),
-            pl.BlockSpec(
-                (1, r, d_out), lambda i, k, bt, sc: (jnp.maximum(bt[i], 0), 0, 0)
-            ),
-        ],
-        out_specs=pl.BlockSpec((block_m, d_out), lambda i, k, bt, sc: (i, 0)),
-        scratch_shapes=[pltpu.VMEM((block_m, r), jnp.float32)],
+    return _grouped_lora(
+        x, a, b, row_task.astype(jnp.int32), scale, block_m, block_k, interpret
     )
-    fn = pl.pallas_call(
-        functools.partial(_kernel, n_k=n_k),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((M, d_out), x.dtype),
-        interpret=interpret,
-    )
-    return fn(block_task, scale.astype(jnp.float32), x, a, b)

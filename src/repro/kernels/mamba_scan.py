@@ -10,6 +10,12 @@ state + MXU tiles.
 
 Grid: (B*H, n_chunks); chunk dim innermost so the [dk, dv] f32 state scratch
 persists across chunks of one (batch, head) program.
+
+NOTE: this kernel is FORWARD-ONLY (no ``jax.custom_vjp``) — differentiating
+it raises; training the zamba2/xlstm cells must use the ``xla`` impl
+(``models.ssm.chunked_gla``), which autodiffs.  The chunk-parallel backward
+(reverse decay-cumsum + transposed block products) is an open ROADMAP item;
+see the support matrix in ``kernels/ops.py``.
 """
 from __future__ import annotations
 

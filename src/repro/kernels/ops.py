@@ -9,6 +9,27 @@ Each op has three execution paths:
   * ``pallas_interpret`` — the same kernel body executed in interpret mode;
                   used by the CPU test suite to validate the kernel against
                   ``ref.py``.
+
+Training support matrix (forward / backward under ``jax.grad``):
+
+  op                 xla        pallas           pallas_interpret
+  -----------------  ---------  ---------------  ----------------
+  grouped_lora       fwd+bwd    fwd+bwd (vjp)    fwd+bwd (vjp)
+  packed_attention   fwd+bwd    fwd+bwd (vjp)    fwd+bwd (vjp)
+  mamba_scan         fwd+bwd    fwd only         fwd only
+
+``xla`` paths differentiate by ordinary autodiff of the jnp formulation.
+The Pallas grouped_lora / packed_attention paths carry ``jax.custom_vjp``
+backward kernels (see the kernel modules), so ``set_impl("pallas")`` /
+``set_impl("pallas_interpret")`` work under ``jax.value_and_grad`` — the
+training hot loop exercises the §3.4.3 grouped kernels end-to-end.
+``mamba_scan``'s Pallas tier is still forward-only (serving/prefill): a
+chunk-parallel backward kernel is an open ROADMAP item; train zamba2/xlstm
+cells on the ``xla`` path meanwhile.
+
+The impl flag is thread-local and read at *trace* time: jitted steps bake in
+whichever impl was active when they were first traced, so flip the impl
+before building/compiling steps, not between calls of a compiled step.
 """
 from __future__ import annotations
 
@@ -65,12 +86,16 @@ def grouped_lora(
         h = jnp.einsum("bsd,bdr->bsr", x, a_r, preferred_element_type=jnp.float32)
         y = jnp.einsum("bsr,bro->bso", h, b_r.astype(jnp.float32))
         return (y * gate[:, None, None]).astype(x.dtype)
+    import math
+
     from repro.kernels.grouped_lora import grouped_lora_pallas
 
     xf = x.reshape(B * S, d_in)
     rows = jnp.repeat(row_task, S)
+    # Tasks own whole batch rows, so any block_m dividing S keeps row_task
+    # block-constant (the kernel's contract) — never straddle batch rows.
     out = grouped_lora_pallas(
-        xf, a, b, rows, scale, block_m=block_m,
+        xf, a, b, rows, scale, block_m=math.gcd(block_m, S),
         interpret=(impl == "pallas_interpret"),
     )
     return out.reshape(B, S, -1)

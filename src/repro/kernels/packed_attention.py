@@ -11,10 +11,29 @@ Grid: (batch*heads, n_q, n_k), n_k innermost so the online-softmax scratch
 (j beyond the causal frontier) are skipped with ``pl.when`` — on TPU the
 block still iterates but skips the MXU work, which is the grid-pruning
 analogue of flash attention's triangular traversal.
+
+Differentiable via ``jax.custom_vjp`` (flash-attention backward).  The
+forward under autodiff additionally emits the per-row logsumexp
+L = m + log(l) ([B, H, S] f32), so the backward never materializes the
+[S, S] probability matrix: each tile recomputes p = exp(q k^T / sqrt(d) - L)
+from the saved L.  Two backward kernels mirror the forward traversal:
+
+  * dq  — grid (B*H, n_q, n_k), KV innermost; accumulates
+          dq += (p ∘ (do v^T - D)) k / sqrt(d) in VMEM scratch.
+  * dkv — grid (B*H, n_k, n_q), Q innermost; accumulates per-QUERY-head
+          dk/dv tiles (dv += p^T do; dk += (p ∘ (do v^T - D))^T q / sqrt(d));
+          GQA group-sum over the G query heads of each KV head happens
+          outside the kernel so every output block is written exactly once
+          (no output-revisiting hazards across the bh grid dim).
+
+The same causal-frontier tile pruning applies in both directions, and rows
+that are fully masked (possible in padded packed batches) carry a sentinel
+L = +1e30 so their p underflows to exactly zero in the backward.
 """
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional
 
 import jax
@@ -24,9 +43,18 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+LSE_MASKED = 1e30  # logsumexp sentinel for fully-masked rows
 
 
-def _kernel(
+def _tile_mask(qpos, kpos, qseg, kseg, causal, block_q, block_k):
+    mask = jnp.ones((block_q, block_k), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    mask &= qseg[:, None] == kseg[None, :]
+    return mask
+
+
+def _fwd_kernel(
     q_ref,    # [1, block_q, 1, dh]
     k_ref,    # [1, block_k, 1, dh]
     v_ref,    # [1, block_k, 1, dh]
@@ -35,16 +63,15 @@ def _kernel(
     qseg_ref,  # [1, block_q]
     kseg_ref,  # [1, block_k]
     o_ref,    # [1, block_q, 1, dh]
-    m_ref,    # [block_q] f32 scratch
-    l_ref,    # [block_q] f32 scratch
-    acc_ref,  # [block_q, dh] f32 scratch
-    *,
+    *rest,    # (lse_ref? [1, 1, block_q], m_ref, l_ref, acc_ref)
     n_k: int,
     causal: bool,
     scale: float,
     block_q: int,
     block_k: int,
+    save_lse: bool,
 ):
+    m_ref, l_ref, acc_ref = rest[-3:]
     i = pl.program_id(1)
     j = pl.program_id(2)
 
@@ -66,10 +93,8 @@ def _kernel(
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale  # [block_q, block_k]
-        mask = jnp.ones((block_q, block_k), bool)
-        if causal:
-            mask &= qpos_ref[0][:, None] >= kpos_ref[0][None, :]
-        mask &= qseg_ref[0][:, None] == kseg_ref[0][None, :]
+        mask = _tile_mask(qpos_ref[0], kpos_ref[0], qseg_ref[0], kseg_ref[0],
+                          causal, block_q, block_k)
         s = jnp.where(mask, s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, s.max(axis=-1))
@@ -87,6 +112,279 @@ def _kernel(
     def _emit():
         l = jnp.maximum(l_ref[...], 1e-20)
         o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        if save_lse:
+            m = m_ref[...]
+            rest[0][0, 0, :] = jnp.where(
+                m > NEG_INF * 0.5, m + jnp.log(jnp.maximum(l_ref[...], 1e-30)),
+                LSE_MASKED,
+            )
+
+
+def _dq_kernel(
+    q_ref, k_ref, v_ref,
+    qpos_ref, kpos_ref, qseg_ref, kseg_ref,
+    do_ref,   # [1, block_q, 1, dh]
+    o_ref,    # [1, block_q, 1, dh]
+    lse_ref,  # [1, 1, block_q]
+    dq_ref,   # [1, block_q, 1, dh]
+    d_ref,    # [block_q] f32 scratch (D = rowsum(do * o))
+    dq_acc,   # [block_q, dh] f32 scratch
+    *,
+    n_k: int,
+    causal: bool,
+    scale: float,
+    block_q: int,
+    block_k: int,
+):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        do = do_ref[0, :, 0, :].astype(jnp.float32)
+        o = o_ref[0, :, 0, :].astype(jnp.float32)
+        d_ref[...] = (do * o).sum(axis=-1)
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    run = (not causal) or (j * block_k <= (i + 1) * block_q - 1)
+    should_run = jnp.asarray(True) if run is True else jnp.asarray(run)
+
+    @pl.when(should_run)
+    def _tile():
+        q = q_ref[0, :, 0, :]
+        k = k_ref[0, :, 0, :]
+        v = v_ref[0, :, 0, :]
+        do = do_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        mask = _tile_mask(qpos_ref[0], kpos_ref[0], qseg_ref[0], kseg_ref[0],
+                          causal, block_q, block_k)
+        p = jnp.where(mask, jnp.exp(s - lse_ref[0, 0, :][:, None]), 0.0)
+        dp = jax.lax.dot_general(
+            do, v.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [block_q, block_k]
+        ds = p * (dp - d_ref[...][:, None]) * scale
+        dq_acc[...] += jax.lax.dot_general(
+            ds, k.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(j == n_k - 1)
+    def _emit():
+        dq_ref[0, :, 0, :] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(
+    q_ref, k_ref, v_ref,
+    qpos_ref, kpos_ref, qseg_ref, kseg_ref,
+    do_ref, o_ref, lse_ref,
+    dk_ref,   # [1, block_k, 1, dh] (per query head; group-summed outside)
+    dv_ref,   # [1, block_k, 1, dh]
+    dk_acc,   # [block_k, dh] f32 scratch
+    dv_acc,   # [block_k, dh] f32 scratch
+    *,
+    n_q: int,
+    causal: bool,
+    scale: float,
+    block_q: int,
+    block_k: int,
+):
+    j = pl.program_id(1)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    run = (not causal) or ((i + 1) * block_q - 1 >= j * block_k)
+    should_run = jnp.asarray(True) if run is True else jnp.asarray(run)
+
+    @pl.when(should_run)
+    def _tile():
+        q = q_ref[0, :, 0, :]
+        k = k_ref[0, :, 0, :]
+        v = v_ref[0, :, 0, :]
+        do = do_ref[0, :, 0, :].astype(jnp.float32)
+        o = o_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        mask = _tile_mask(qpos_ref[0], kpos_ref[0], qseg_ref[0], kseg_ref[0],
+                          causal, block_q, block_k)
+        p = jnp.where(mask, jnp.exp(s - lse_ref[0, 0, :][:, None]), 0.0)
+        dv_acc[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        d = (do * o).sum(axis=-1)  # [block_q]
+        dp = jax.lax.dot_general(
+            do, v.astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        ds = p * (dp - d[:, None]) * scale
+        dk_acc[...] += jax.lax.dot_general(
+            ds, q.astype(jnp.float32), (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(i == n_q - 1)
+    def _emit():
+        dk_ref[0, :, 0, :] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, :, 0, :] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _specs(H, G, block_q, block_k, dh, *, kv_major):
+    """Common BlockSpecs.  Grid is (bh, i, j) fwd/dq or (bh, j, i) dkv;
+    ``kv_major`` only flips which grid position is the Q-tile index."""
+
+    def ij(a, b):
+        return (b, a) if kv_major else (a, b)
+
+    def qi(bh, a, b):
+        return (bh // H, ij(a, b)[0], bh % H, 0)
+
+    def kj(bh, a, b):
+        return (bh // H, ij(a, b)[1], (bh % H) // G, 0)
+
+    def rq(bh, a, b):
+        return (bh // H, ij(a, b)[0])
+
+    def rk(bh, a, b):
+        return (bh // H, ij(a, b)[1])
+
+    def lse(bh, a, b):
+        return (bh // H, bh % H, ij(a, b)[0])
+
+    return {
+        "q": pl.BlockSpec((1, block_q, 1, dh), qi),
+        "k": pl.BlockSpec((1, block_k, 1, dh), kj),
+        "rowq": pl.BlockSpec((1, block_q), rq),
+        "rowk": pl.BlockSpec((1, block_k), rk),
+        "lse": pl.BlockSpec((1, 1, block_q), lse),
+        "qi": qi, "kj": kj,
+    }
+
+
+def _fwd_call(q, k, v, positions, segment_ids, causal, block_q, block_k,
+              interpret, save_lse):
+    B, S, H, dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    n_q, n_k = S // block_q, S // block_k
+    sp = _specs(H, G, block_q, block_k, dh, kv_major=False)
+
+    out_shape = [jax.ShapeDtypeStruct(q.shape, q.dtype)]
+    out_specs = [sp["q"]]
+    if save_lse:
+        out_shape.append(jax.ShapeDtypeStruct((B, H, S), jnp.float32))
+        out_specs.append(sp["lse"])
+
+    fn = pl.pallas_call(
+        functools.partial(
+            _fwd_kernel, n_k=n_k, causal=causal, scale=1.0 / np.sqrt(dh),
+            block_q=block_q, block_k=block_k, save_lse=save_lse,
+        ),
+        grid=(B * H, n_q, n_k),
+        in_specs=[sp["q"], sp["k"], sp["k"],
+                  sp["rowq"], sp["rowk"], sp["rowq"], sp["rowk"]],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    out = fn(q, k, v, positions, positions, segment_ids, segment_ids)
+    return out if save_lse else out[0]
+
+
+def _bwd_call(q, k, v, positions, segment_ids, o, lse, do, causal,
+              block_q, block_k, interpret):
+    B, S, H, dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    n_q, n_k = S // block_q, S // block_k
+    scale = 1.0 / np.sqrt(dh)
+
+    sp = _specs(H, G, block_q, block_k, dh, kv_major=False)
+    dq = pl.pallas_call(
+        functools.partial(
+            _dq_kernel, n_k=n_k, causal=causal, scale=scale,
+            block_q=block_q, block_k=block_k,
+        ),
+        grid=(B * H, n_q, n_k),
+        in_specs=[sp["q"], sp["k"], sp["k"],
+                  sp["rowq"], sp["rowk"], sp["rowq"], sp["rowk"],
+                  sp["q"], sp["q"], sp["lse"]],
+        out_specs=sp["q"],
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, positions, positions, segment_ids, segment_ids, do, o, lse)
+
+    sp = _specs(H, G, block_q, block_k, dh, kv_major=True)
+    # dk/dv are accumulated per QUERY head (block written once per (bh, j))
+    # and group-summed to the Hkv axis outside the kernel.
+    dkq_spec = pl.BlockSpec(
+        (1, block_k, 1, dh), lambda bh, j, i: (bh // H, j, bh % H, 0)
+    )
+    dkq, dvq = pl.pallas_call(
+        functools.partial(
+            _dkv_kernel, n_q=n_q, causal=causal, scale=scale,
+            block_q=block_q, block_k=block_k,
+        ),
+        grid=(B * H, n_k, n_q),
+        in_specs=[sp["q"], sp["k"], sp["k"],
+                  sp["rowq"], sp["rowk"], sp["rowq"], sp["rowk"],
+                  sp["q"], sp["q"], sp["lse"]],
+        out_specs=[dkq_spec, dkq_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, S, H, dh), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_k, dh), jnp.float32),
+            pltpu.VMEM((block_k, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, positions, positions, segment_ids, segment_ids, do, o, lse)
+
+    dk = dkq.reshape(B, S, Hkv, G, dh).sum(axis=3).astype(k.dtype)
+    dv = dvq.reshape(B, S, Hkv, G, dh).sum(axis=3).astype(v.dtype)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _packed_attention(q, k, v, positions, segment_ids, causal, block_q,
+                      block_k, interpret):
+    return _fwd_call(q, k, v, positions, segment_ids, causal, block_q,
+                     block_k, interpret, save_lse=False)
+
+
+def _packed_attention_fwd(q, k, v, positions, segment_ids, causal, block_q,
+                          block_k, interpret):
+    o, lse = _fwd_call(q, k, v, positions, segment_ids, causal, block_q,
+                       block_k, interpret, save_lse=True)
+    return o, (q, k, v, positions, segment_ids, o, lse)
+
+
+def _packed_attention_bwd(causal, block_q, block_k, interpret, res, do):
+    q, k, v, positions, segment_ids, o, lse = res
+    dq, dk, dv = _bwd_call(q, k, v, positions, segment_ids, o, lse, do,
+                           causal, block_q, block_k, interpret)
+    dpos = np.zeros(positions.shape, jax.dtypes.float0)
+    dseg = np.zeros(segment_ids.shape, jax.dtypes.float0)
+    return dq, dk, dv, dpos, dseg
+
+
+_packed_attention.defvjp(_packed_attention_fwd, _packed_attention_bwd)
 
 
 def packed_attention_pallas(
@@ -102,53 +400,13 @@ def packed_attention_pallas(
     interpret: bool = False,
 ) -> jax.Array:
     B, S, H, dh = q.shape
-    Hkv = k.shape[2]
-    G = H // Hkv
-    block_q = min(block_q, S)
-    block_k = min(block_k, S)
-    assert S % block_q == 0 and S % block_k == 0
-    n_q, n_k = S // block_q, S // block_k
+    block_q = math.gcd(S, min(block_q, S))
+    block_k = math.gcd(S, min(block_k, S))
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     if segment_ids is None:
         segment_ids = jnp.zeros((B, S), jnp.int32)
-
-    grid = (B * H, n_q, n_k)
-
-    def qmap(bh, i, j):
-        return (bh // H, i, bh % H, 0)
-
-    def kmap(bh, i, j):
-        return (bh // H, j, (bh % H) // G, 0)
-
-    def rowmap_q(bh, i, j):
-        return (bh // H, i)
-
-    def rowmap_k(bh, i, j):
-        return (bh // H, j)
-
-    fn = pl.pallas_call(
-        functools.partial(
-            _kernel, n_k=n_k, causal=causal, scale=1.0 / np.sqrt(dh),
-            block_q=block_q, block_k=block_k,
-        ),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_q, 1, dh), qmap),
-            pl.BlockSpec((1, block_k, 1, dh), kmap),
-            pl.BlockSpec((1, block_k, 1, dh), kmap),
-            pl.BlockSpec((1, block_q), rowmap_q),
-            pl.BlockSpec((1, block_k), rowmap_k),
-            pl.BlockSpec((1, block_q), rowmap_q),
-            pl.BlockSpec((1, block_k), rowmap_k),
-        ],
-        out_specs=pl.BlockSpec((1, block_q, 1, dh), qmap),
-        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((block_q,), jnp.float32),
-            pltpu.VMEM((block_q,), jnp.float32),
-            pltpu.VMEM((block_q, dh), jnp.float32),
-        ],
-        interpret=interpret,
+    return _packed_attention(
+        q, k, v, positions.astype(jnp.int32), segment_ids.astype(jnp.int32),
+        causal, block_q, block_k, interpret,
     )
-    return fn(q, k, v, positions, positions, segment_ids, segment_ids)

@@ -166,6 +166,52 @@ def dryrun_tasks(cfg: ArchConfig, shape: ShapeSpec, n_tasks: int = 8, rank: int 
 
 
 # ---------------------------------------------------------------------------
+# Host→device transfer (stall-free dispatch discipline)
+# ---------------------------------------------------------------------------
+
+
+def device_put_batch(batch: Dict[str, Any], shardings: Optional[Dict] = None):
+    """EXPLICIT async host→device transfer of one loader batch.
+
+    ``jax.device_put`` on host numpy returns immediately with the DMA in
+    flight, so a caller can enqueue the *next* batch's transfer while the
+    current step computes (double-buffering).  Using the explicit API also
+    keeps the train loop clean under ``jax.transfer_guard("disallow")`` —
+    no implicit np↔device conversions serialize dispatch.
+    """
+    if shardings is None:
+        return {k: jax.device_put(v) for k, v in batch.items()}
+    return {k: jax.device_put(v, shardings.get(k)) for k, v in batch.items()}
+
+
+def prefetch_to_device(it, size: int = 2, shardings: Optional[Dict] = None):
+    """Wrap a host batch iterator with a ``size``-deep device prefetch queue.
+
+    Keeps ``size`` batches' H2D DMAs in flight ahead of the consumer, so the
+    device never idles waiting on the host loader (MuxServe-style stall-free
+    dispatch).  Yields batches in order; safe for finite or infinite
+    iterators.
+    """
+    from collections import deque
+
+    it = iter(it)
+    buf: deque = deque()
+
+    def fill() -> None:
+        while len(buf) < size:
+            try:
+                buf.append(device_put_batch(next(it), shardings))
+            except StopIteration:
+                return
+
+    fill()
+    while buf:
+        out = buf.popleft()
+        fill()
+        yield out
+
+
+# ---------------------------------------------------------------------------
 # Steps
 # ---------------------------------------------------------------------------
 

@@ -318,11 +318,17 @@ def attention_apply(
         )
         out = shard(out, "batch", "seq", None, None)
     elif mode == "pairs":
+        # Routed through kernels.ops so ``set_impl("pallas")`` swaps the
+        # training hot path onto the Pallas packed-attention kernel
+        # (forward AND backward via its custom_vjp); the default "xla"
+        # impl dispatches right back to flash_attention_pairs below.
+        from repro.kernels import ops as kops
+
         q = shard(q, "batch", None, "heads", None)
         k = shard(k, "batch", None, "kv_heads", None)
         v = shard(v, "batch", None, "kv_heads", None)
-        out = flash_attention_pairs(
-            q, k, v, block=cfg.attn_q_block, causal=causal,
+        out = kops.packed_attention(
+            q, k, v, causal=causal, block_q=cfg.attn_q_block,
             segment_ids=segment_ids, positions=positions if causal else None,
         )
         out = shard(out, "batch", None, "heads", None)

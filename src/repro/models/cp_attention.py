@@ -176,7 +176,9 @@ def striped_cp_attention(
 
     bspec = P(dp_axes if dp_axes else None, axis, None, None)
     pspec = P(dp_axes if dp_axes else None, axis)
-    return jax.shard_map(
+    from repro.compat import shard_map
+
+    return shard_map(
         body, mesh=mesh,
         in_specs=(bspec, bspec, bspec, pspec, pspec),
         out_specs=bspec,

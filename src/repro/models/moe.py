@@ -18,6 +18,8 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.compat import shard_map as _shard_map
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
@@ -154,7 +156,7 @@ def moe_apply(
 
     bspec = P(dp_axes if dp_axes else None, None, None)
     espec = P(ep_axis, None, None)
-    y, aux = jax.shard_map(
+    y, aux = _shard_map(
         body,
         mesh=mesh,
         in_specs=(bspec, P(None, None), espec, espec, espec),
@@ -303,7 +305,7 @@ def moe_apply_a2a(
         espec_out = P(ep_axis, None, fsdp_axis)
     else:
         espec_in = espec_out = P(ep_axis, None, None)
-    y, aux = jax.shard_map(
+    y, aux = _shard_map(
         body,
         mesh=mesh,
         in_specs=(bspec, P(None, None), espec_in, espec_in, espec_out),

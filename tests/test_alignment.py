@@ -1,6 +1,8 @@
 """§3.5 chunk-based alignment: unit tests + hypothesis properties."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.alignment import align_tasks, chunk_size_for, pow2_divisor
