@@ -4,37 +4,110 @@
   Fig 14/15 -> throughput     Fig 16 -> breakdown    Fig 17 -> memory
   Fig 18/19 -> orchestration  Fig 20 -> alignment    Fig 21 -> scalability
   Eq 3-6    -> planner_quality            kernels -> grouped-kernel claim
-  §Roofline -> roofline (reads artifacts/dryrun)
+  §Roofline -> roofline (reads artifacts/dryrun)   serve_trace -> §5.4 online
 
 ``--json`` additionally writes one ``BENCH_<module>.json`` artifact per
 module run ({row name -> us_per_call}) so the perf trajectory is tracked
 across PRs by diffing artifacts instead of scraping stdout.
+
+``--compare <dir>`` diffs the BENCH_*.json artifacts in the current
+directory against baselines of the same name under <dir> (e.g. artifacts
+downloaded from the previous main run), printing per-metric deltas.  Exit
+code is 1 when any metric regressed beyond ``--threshold`` (default +25%,
+metrics are lower-is-better) — wire it as a NON-blocking CI step.
 """
 from __future__ import annotations
 
+import glob
 import json
+import os
 import sys
 import time
 import traceback
 
+MODULES = [
+    "alignment",
+    "planner_quality",
+    "memory",
+    "orchestration",
+    "scalability",
+    "kernels",
+    "breakdown",
+    "throughput",
+    "roofline",
+    "serve_trace",
+]
+
+
+def compare(baseline_dir: str, threshold: float) -> int:
+    """Cross-PR bench diff: current ./BENCH_*.json vs baseline_dir's."""
+    current = sorted(glob.glob("BENCH_*.json"))
+    if not current:
+        print(f"# no BENCH_*.json in {os.getcwd()} to compare", file=sys.stderr)
+        return 2
+    regressions = 0
+    compared = 0
+    print("module,metric,baseline_us,current_us,delta_pct,flag")
+    for path in current:
+        name = os.path.basename(path)
+        base_path = os.path.join(baseline_dir, name)
+        mod = name[len("BENCH_"):-len(".json")]
+        if not os.path.exists(base_path):
+            print(f"{mod},<module>,,,,NEW")
+            continue
+        with open(path) as f:
+            cur = json.load(f)
+        with open(base_path) as f:
+            base = json.load(f)
+        for metric in sorted(set(cur) | set(base)):
+            if metric not in base:
+                print(f"{mod},{metric},,{cur[metric]:.1f},,NEW")
+                continue
+            if metric not in cur:
+                print(f"{mod},{metric},{base[metric]:.1f},,,REMOVED")
+                continue
+            b, c = float(base[metric]), float(cur[metric])
+            delta = (c - b) / b if b else 0.0
+            flag = "ok"
+            if delta > threshold:
+                flag = "REGRESSED"
+                regressions += 1
+            elif delta < -threshold:
+                flag = "improved"
+            compared += 1
+            print(f"{mod},{metric},{b:.1f},{c:.1f},{delta * 100:+.1f},{flag}")
+    print(f"# compared {compared} metrics, {regressions} regression(s) "
+          f"beyond +{threshold * 100:.0f}%")
+    return 1 if regressions else 0
+
 
 def main() -> None:
-    mods = [
-        "alignment",
-        "planner_quality",
-        "memory",
-        "orchestration",
-        "scalability",
-        "kernels",
-        "breakdown",
-        "throughput",
-        "roofline",
-    ]
     args = sys.argv[1:]
     as_json = "--json" in args
-    only = [a for a in args if not a.startswith("--")] or None
+    compare_dir = None
+    threshold = 0.25
+    only = []
+    i = 0
+    while i < len(args):
+        a = args[i]
+        if a in ("--compare", "--threshold"):
+            i += 1
+            if i >= len(args):
+                # usage error: distinct from the rc=1 "regression" signal
+                print(f"error: {a} requires a value", file=sys.stderr)
+                sys.exit(2)
+            if a == "--compare":
+                compare_dir = args[i]
+            else:
+                threshold = float(args[i])
+        elif not a.startswith("--"):
+            only.append(a)
+        i += 1
+    if compare_dir is not None:
+        sys.exit(compare(compare_dir, threshold))
+
     print("name,us_per_call,derived")
-    for name in mods:
+    for name in MODULES:
         if only and name not in only:
             continue
         t0 = time.time()

@@ -1,56 +1,75 @@
-"""Serving example: batched decode with a KV cache over the shared backbone.
+"""Online multi-tenant serving example: the MuxTuneService lifecycle.
 
-Demonstrates the serve path the decode_* dry-run cells lower: init a decode
-state, prefill a short prompt token-by-token, then decode continuations for
-a batch of requests.
+Three tenants arrive staggered against ONE running engine instance:
+submit (admission-gated hot-attach) -> train (spatially fused iterations)
+-> one tenant cancels -> the rest complete -> their adapters checkpoint out
+atomically -> a completed tenant resubmits warm-started from its own
+checkpoint.
 
   PYTHONPATH=src python examples/serve_adapters.py
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+import tempfile
 
 from repro.configs import smoke_config
-from repro.models.transformer import build_model
+from repro.core.task import ParallelismSpec
+from repro.data.synthetic import make_task
+from repro.peft.adapters import ADAPTER_TUNING, LORA, AdapterConfig
+from repro.serve import MuxTuneService
 
 
 def main():
     cfg = smoke_config("llama3.2-3b")
-    model = build_model(cfg)
-    key = jax.random.PRNGKey(0)
-    params = model.init(key)
+    ckpt_dir = tempfile.mkdtemp(prefix="muxtune_serve_")
+    svc = MuxTuneService(cfg, ParallelismSpec(), lr=1e-3, n_micro=1,
+                         ckpt_dir=ckpt_dir, reserve_slots=4)
 
-    B, prompt_len, gen_len, max_len = 4, 8, 16, 32
-    prompts = jax.random.randint(key, (B, prompt_len), 0, cfg.vocab_size)
+    print("== tenants arrive staggered ==")
+    svc.submit(make_task("alice", "sst2", 2, AdapterConfig(LORA, rank=8), seed=0),
+               target_steps=6, priority=1)
+    print(f"  t={svc.clock}: alice -> {svc.record('alice').state}")
+    svc.step(); svc.step()
 
-    serve_step = jax.jit(model.decode_step, donate_argnums=(1,))
-    state = model.init_decode_state(params, B, max_len)
+    svc.submit(make_task("bob", "qa", 2, AdapterConfig(LORA, rank=4), seed=1),
+               target_steps=4)
+    print(f"  t={svc.clock}: bob -> {svc.record('bob').state} "
+          f"(resident: {svc.resident_ids})")
+    svc.step()
 
-    print(f"== serving {B} requests (prompt {prompt_len}, gen {gen_len}) ==")
-    t0 = time.perf_counter()
-    # prefill token-by-token through the decode path (cache warms up)
-    logits = None
-    for t in range(prompt_len):
-        logits, state = serve_step(params, state, prompts[:, t : t + 1])
-    # greedy decode
-    outs = []
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    for _ in range(gen_len):
-        outs.append(np.asarray(tok)[:, 0])
-        logits, state = serve_step(params, state, tok)
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    dt = time.perf_counter() - t0
-    gen = np.stack(outs, axis=1)
-    print(f"  generated {B}x{gen_len} tokens in {dt:.2f}s "
-          f"({B * (prompt_len + gen_len) / dt:.0f} tok/s incl. compile)")
-    for b in range(B):
-        print(f"  req{b}: {gen[b].tolist()}")
-    assert int(state["pos"]) == prompt_len + gen_len
+    svc.submit(make_task("carol", "rte", 1, AdapterConfig(ADAPTER_TUNING, rank=4),
+                         seed=2), target_steps=8)
+    print(f"  t={svc.clock}: carol -> {svc.record('carol').state}")
+    svc.step()
+
+    print("== carol cancels mid-flight (no checkpoint) ==")
+    svc.cancel("carol")
+    print(f"  t={svc.clock}: carol -> {svc.record('carol').state}")
+
+    print("== train until alice and bob complete ==")
+    svc.run(max_iters=20)
+    for tid in ("alice", "bob"):
+        rec = svc.record(tid)
+        print(f"  {tid}: {rec.state} after {rec.steps_trained} steps, "
+              f"loss {rec.losses[0]:.3f} -> {rec.losses[-1]:.3f}, "
+              f"eff-token ratio {rec.effective_token_ratio:.2f}, "
+              f"checkpoint {rec.checkpoint_path}")
+
+    print("== alice resubmits, warm-started from her checkpoint ==")
+    svc.submit(make_task("alice", "sst2", 2, AdapterConfig(LORA, rank=8), seed=0),
+               target_steps=2, warm_start_dir=f"{ckpt_dir}/alice")
+    svc.run(max_iters=10)
+    rec = svc.record("alice")
+    print(f"  alice: {rec.state}, warm-start loss {rec.losses[0]:.3f} "
+          f"(vs cold {5.5:.1f}-ish)")
+
+    acct = svc.accounting()
+    print(f"== accounting: {acct['completed']} completions, "
+          f"{acct['replans']} re-plans, "
+          f"step-cache {acct['cache_hits']} hits / {acct['cache_misses']} misses, "
+          f"peak Eq.5 memory {acct['peak_stage_memory'] / 2**20:.1f} MiB ==")
+    assert acct["peak_stage_memory"] <= acct["memory_budget"]
     print("done.")
 
 

@@ -33,6 +33,19 @@ class TaskArrival:
     mem_gb: float = 1.0   # adapter+activation footprint
 
 
+@dataclass(frozen=True)
+class SimRecord:
+    """Per-arrival outcome — lets trace replays (``repro.serve.replay``)
+    validate the abstract model against real execution task-by-task."""
+
+    index: int            # position in the (time-sorted) trace
+    t_arrive: float
+    admitted: bool
+    instance: int = -1
+    t_end: float = 0.0    # predicted completion (co-location slowdown applied)
+    colocated: int = 0    # tenants resident on the instance at admission
+
+
 @dataclass
 class Instance:
     iid: int
@@ -107,6 +120,7 @@ class ClusterSim:
         self.served_min = 0.0
         self.queued_drops = 0
         self.completed = 0
+        self.records: List[SimRecord] = []
 
     def _pick(self, task: TaskArrival) -> Optional[Instance]:
         feas = [i for i in self.instances if i.can_admit(task, self.max_colocate)]
@@ -123,22 +137,25 @@ class ClusterSim:
         raise ValueError(self.policy)
 
     def run(self, trace: Sequence[TaskArrival]) -> Dict[str, float]:
-        for task in sorted(trace, key=lambda a: a.t_min):
+        for idx, task in enumerate(sorted(trace, key=lambda a: a.t_min)):
             now = task.t_min
             for inst in self.instances:
                 inst.gc(now)
             inst = self._pick(task)
             if inst is None:
                 self.queued_drops += 1
+                self.records.append(SimRecord(idx, now, False))
                 continue
             k = len(inst.active) + 1
-            dur = task.duration_min * inst.slowdown(k, self.multiplexed) / (
-                k if not self.multiplexed else 1.0
-            )
+            # slowdown() already returns the per-task wall-time inflation
+            # (k for time-slicing, k^0.15 multiplexed) — apply it directly
+            dur = task.duration_min * inst.slowdown(k, self.multiplexed)
             inst.backbone = task.backbone
             inst.active.append((now + dur, task.mem_gb))
             self.served_min += task.duration_min
             self.completed += 1
+            self.records.append(SimRecord(idx, now, True, inst.iid,
+                                          now + dur, k - 1))
         return {
             "served_task_min": self.served_min,
             "completed": float(self.completed),

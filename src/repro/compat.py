@@ -29,6 +29,16 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
     )
 
 
+def make_abstract_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Device-free mesh for sharding-spec construction (works on a 1-device
+    host): new jax spells it (axis_sizes, axis_names), 0.4.x takes the
+    shape tuple-of-pairs."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
+
+
 def make_mesh(shape: Sequence[int], axes: Sequence[str],
               devices: Optional[Sequence[Any]] = None):
     """``jax.make_mesh`` with Auto axis types where the API supports them

@@ -2,14 +2,26 @@
 
 Spatial multiplexing = one fused batch per hTask (grouped adapters, shared
 backbone).  Temporal multiplexing = template-ordered execution of bucket
-micro-batches.  Each hTask signature compiles once (static shapes per
-bucket); task arrival re-plans and re-uses compatible compiled steps via the
-signature cache.
+micro-batches.
+
+Online serving support (task churn):  ``attach_tasks`` / ``detach_tasks``
+swap in a new plan without touching unaffected compiled work.  Each compiled
+step is keyed by an explicit *hTask signature* — batch geometry plus each
+row's (kind, slot) routing and each member's (slot, rank, scale, lr)
+hyperparams plus the adapter-stack shape census — deliberately free of
+GLOBAL task indices.  A step therefore survives re-plans that renumber the
+task list, and with slot-stable adapter stacks (capacity allocation in
+``MultiTaskAdapters``) it survives tenant arrival/departure outright: only
+buckets whose fused geometry actually changed recompile.
 
 Per-task optimizer isolation: losses are per-task means summed (gradients
 are exactly the per-task gradients — Eq. 1-2 isolation), per-task learning
-rates enter as lr-scale trees, and a NaN guard zeroes a task's update
-without polluting the others (numerical-failure isolation, §3.2).
+rates enter as lr-scale trees, and member-slot masking confines every
+update — values AND AdamW moments AND bias-correction step counts — to the
+slots of the tasks actually present in the micro-batch.  A tenant fused
+with others therefore optimizes bit-for-bit like a solo run (modulo fusion
+numerics), and a NaN guard zeroes a step's update without polluting other
+tasks (numerical-failure isolation, §3.2).
 
 The iteration loop is stall-free (MuxServe-style dispatch discipline):
 micro-step metrics accumulate on-device, batches double-buffer host→device,
@@ -17,9 +29,8 @@ and exactly one explicit device→host transfer happens per iteration.
 """
 from __future__ import annotations
 
-import functools
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
@@ -29,7 +40,6 @@ import numpy as np
 from repro.core.planner import ExecutionPlan
 from repro.core.registry import ModelGenerator, RegisteredTasks, _group_depths
 from repro.models.transformer import Model
-from repro.peft.multitask import MultiTaskAdapters, TaskSegments
 from repro.train.optimizer import adamw_update, apply_updates
 
 
@@ -58,85 +68,238 @@ class PEFTEngine:
         self.backbone = gen.init_backbone()
         assert gen.registered is not None, "register_tasks() first"
         self.reg: RegisteredTasks = gen.registered
-        self._steps: Dict[Tuple, Callable] = {}
+        self._check_alignment()
+        self._steps: Dict[Tuple, Callable] = {}   # hTask signature -> step
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self._adapter_sig = self._adapter_shape_sig()
         self._lr_scales = self._build_lr_scales()
+        self._slot_steps = self._fresh_slot_steps()
+        self._member_ids = self._build_member_ids()
 
     # ------------------------------------------------------------------
 
-    def _build_lr_scales(self):
-        """Per-task lr multipliers broadcast along each leaf's task axis."""
+    def _check_alignment(self) -> None:
+        plan_ids = [t.task_id for t in self.plan.tasks]
+        reg_ids = [t.task_id for t in self.reg.tasks]
+        assert plan_ids == reg_ids, (
+            f"plan/registry task order mismatch: {plan_ids} vs {reg_ids}")
+
+    def _adapter_shape_sig(self) -> Tuple:
+        flat, _ = jax.tree_util.tree_flatten_with_path(self.reg.adapter_params)
+        return tuple((jax.tree_util.keystr(p), tuple(l.shape), str(l.dtype))
+                     for p, l in flat)
+
+    def _fresh_slot_steps(self) -> Dict[str, jax.Array]:
+        mta = self.reg.mta
+        return {kind: jax.device_put(np.zeros((mta.kind_capacity[kind],), np.float32))
+                for kind in mta.kind_tasks}
+
+    def _build_member_ids(self) -> Dict[int, jax.Array]:
+        """Per-hTask device-resident GLOBAL member index vectors (for the
+        eager local→global loss scatter).  Built at (re-)plan time so the
+        guarded iteration loop never implicitly transfers the indices."""
+        return {i: jax.device_put(np.asarray(h.task_ids, np.int32))
+                for i, h in enumerate(self.plan.htasks)}
+
+    # ------------------------------------------------------------------
+
+    def _broadcast_slots(self, vecs: Dict[str, Any]) -> Any:
+        """Expand per-kind slot vectors [capacity] into a pytree aligned with
+        the adapter params, each leaf reshaped to broadcast along the leaf's
+        task axis.  Works on numpy constants and on traced arrays."""
         mta = self.reg.mta
         depths = _group_depths(self.gen.cfg)
-        base = self.lr
+        params = self.reg.adapter_params
 
         def walk(tree: Any, depth: int, kind: Optional[str] = None):
             if not isinstance(tree, dict):
-                if kind is None:
+                if kind is None or tree is None or kind not in vecs:
                     return None
-                ids = mta.kind_tasks[kind]
-                lrs = np.asarray([mta.task_cfgs[i].lr for i in ids], np.float32) / base
+                v = vecs[kind]
                 shape = [1] * tree.ndim
-                shape[depth] = len(ids)
-                return jnp.asarray(lrs).reshape(shape)
+                shape[depth] = v.shape[0]
+                return jnp.reshape(jnp.asarray(v), shape)
             out = {}
-            for k, v in tree.items():
+            for k, sub in tree.items():
                 nk = k if k in mta.kind_tasks else kind
-                out[k] = walk(v, depth, nk)
+                out[k] = walk(sub, depth, nk)
             return out
 
-        params = self.reg.adapter_params
         if "" in depths:
             return walk(params, depths[""])
         return {gk: walk(params.get(gk, {}), d) for gk, d in depths.items()}
 
+    def _build_lr_scales(self):
+        """Per-slot lr multipliers broadcast along each leaf's task axis."""
+        mta = self.reg.mta
+        base = self.lr
+        vecs = {
+            kind: mta.slot_values(kind, {i: mta.task_cfgs[i].lr for i in ids},
+                                  fill=base) / base
+            for kind, ids in mta.kind_tasks.items()
+        }
+        return self._broadcast_slots(vecs)
+
+    # ------------------------------------------------------------------
+    # Task churn: incremental re-plan (§3.2 online path)
+
+    def attach_tasks(self, new_tasks: Sequence, plan: ExecutionPlan) -> None:
+        """Hot-attach tenants: register (fresh-init adapters, zero moments at
+        a free slot) and swap to ``plan``.  Compiled steps for buckets whose
+        signature is unchanged are reused without retracing."""
+        old_reg = self.reg
+        self.reg = self.gen.register_tasks(new_tasks)
+        self._after_rebuild(old_reg, plan)
+
+    def detach_tasks(self, task_ids: Sequence[str], plan: ExecutionPlan,
+                     compact: bool = False) -> None:
+        """Detach tenants; their slots are freed for reuse.  ``compact=True``
+        re-packs the stacks densely (physically freeing the departed
+        tenants' adapter + moment memory) at the cost of a full recompile."""
+        old_reg = self.reg
+        self.reg = self.gen.deregister_tasks(task_ids)
+        if compact:
+            self.reg = self.gen.compact()
+        self._after_rebuild(old_reg, plan)
+
+    def _after_rebuild(self, old_reg: RegisteredTasks, plan: ExecutionPlan) -> None:
+        self.plan = plan
+        self._check_alignment()
+        new_sig = self._adapter_shape_sig()
+        if new_sig != self._adapter_sig:
+            self._steps.clear()  # stack shapes changed: every step is stale
+            self._adapter_sig = new_sig
+        self._lr_scales = self._build_lr_scales()
+        self._slot_steps = self._carry_slot_steps(old_reg)
+        self._member_ids = self._build_member_ids()
+
+    def _carry_slot_steps(self, old_reg: RegisteredTasks) -> Dict[str, jax.Array]:
+        """Carry surviving tasks' per-slot update counts across a rebuild."""
+        old_vecs = {k: np.asarray(v) for k, v in self._slot_steps.items()}
+        old_ids = {t.task_id: i for i, t in enumerate(old_reg.tasks)}
+        mta = self.reg.mta
+        out = {}
+        for kind, ids in mta.kind_tasks.items():
+            vec = np.zeros((mta.kind_capacity[kind],), np.float32)
+            for i in ids:
+                oi = old_ids.get(self.reg.tasks[i].task_id)
+                if oi is None or old_reg.tasks[oi].adapter.kind != kind:
+                    continue
+                old_vec = old_vecs.get(kind)
+                if old_vec is None:
+                    continue
+                vec[int(mta.task_slot[i])] = old_vec[int(old_reg.mta.task_slot[oi])]
+            out[kind] = jax.device_put(vec)
+        return out
+
     # ------------------------------------------------------------------
 
+    def step_signature(self, htask_idx: int) -> Tuple:
+        """Canonical compiled-step identity — free of global task indices.
+
+        Two hTasks (possibly from different plans / different tenant
+        censuses) with equal signatures lower to the identical jitted
+        computation, so the compiled step is shared."""
+        h = self.plan.htasks[htask_idx]
+        seg = self.plan.segments_for(htask_idx)
+        mta = self.reg.mta
+        row_sig = tuple((mta.task_cfgs[t].kind, int(mta.task_slot[t]))
+                        for t in seg.row_task)
+        mem_sig = tuple(
+            (mta.task_cfgs[t].kind, int(mta.task_slot[t]),
+             mta.task_cfgs[t].rank, float(mta.task_cfgs[t].scale),
+             float(mta.task_cfgs[t].lr), tuple(sorted(mta.task_cfgs[t].targets)))
+            for t in h.task_ids)
+        return (h.rows, h.row_len, row_sig, mem_sig, self._adapter_sig)
+
     def _make_step(self, htask_idx: int) -> Callable:
+        h = self.plan.htasks[htask_idx]
         segments = self.plan.segments_for(htask_idx)
+        local_seg = segments.relabel(h.task_ids)
         ctxf = self.reg.mta.ctx_factory(segments)
         model = self.model
         aux_coef = self.aux_coef
         lr = self.lr
         lr_scales = self._lr_scales
+        mta = self.reg.mta
+        # member masks: 1.0 at member slots, 0 elsewhere — confines update,
+        # moments and step counts to the tasks present in this micro-batch
+        member_slots: Dict[str, set] = {}
+        for t in h.task_ids:
+            member_slots.setdefault(mta.task_cfgs[t].kind, set()).add(
+                int(mta.task_slot[t]))
+        mask_vecs = {
+            kind: np.asarray([1.0 if s in member_slots.get(kind, ()) else 0.0
+                              for s in range(mta.kind_capacity[kind])], np.float32)
+            for kind in mta.kind_tasks
+        }
+        masks = self._broadcast_slots(mask_vecs)
 
         def loss_fn(adapters, backbone, batch):
             out = model.forward(backbone, batch, adapters=adapters, ctx_factory=ctxf)
-            pt = segments.per_task_loss(out["per_token_loss"], batch["loss_mask"])
+            pt = local_seg.per_task_loss(out["per_token_loss"], batch["loss_mask"])
             loss = pt.sum()
             for k, v in out["aux"].items():
                 if k == "moe_load_balance":
                     loss = loss + aux_coef * v
             return loss, pt
 
-        def step(backbone, adapters, opt_state, batch):
+        def step(backbone, adapters, opt_state, slot_steps, batch, member_ids, acc):
+            # ``member_ids`` (the members' GLOBAL task indices) and ``acc``
+            # (iteration accumulators) are traced inputs, NOT baked
+            # constants — the compiled step stays re-plan-agnostic while the
+            # local→global loss scatter still runs on device inside the jit.
             (loss, pt), grads = jax.value_and_grad(
                 loss_fn, has_aux=True, allow_int=True
             )(adapters, backbone, batch)
             prev_opt = opt_state
-            updates, opt_state = adamw_update(
-                grads, opt_state, adapters, lr=lr, lr_scales=lr_scales
-            )
-            # NaN guard: a diverging step must not poison adapter values OR
-            # optimizer moments (numerical-failure isolation, §3.2).
             finite = jnp.isfinite(loss)
-            updates = jax.tree.map(
-                lambda u: None if u is None else jnp.where(finite, u, 0.0),
-                updates, is_leaf=lambda x: x is None,
+            # NaN guard composes with member masking: a diverging step keeps
+            # non-members untouched by construction and reverts members.
+            counts = {k: jnp.where(finite, v + mask_vecs[k], v)
+                      for k, v in slot_steps.items()}
+            step_counts = self._broadcast_slots(counts)
+            updates, opt_state = adamw_update(
+                grads, opt_state, adapters, lr=lr, lr_scales=lr_scales,
+                step_counts=step_counts,
             )
-            opt_state = jax.tree.map(
-                lambda new, old: None if new is None else jnp.where(finite, new, old),
-                opt_state, prev_opt, is_leaf=lambda x: x is None,
+
+            def guard_update(u, mk):
+                if u is None:
+                    return None
+                m = 1.0 if mk is None else mk.astype(u.dtype)
+                return jnp.where(finite, u * m, jnp.zeros_like(u))
+
+            def guard_moment(new, old, mk):
+                if new is None:
+                    return None
+                keep = finite if mk is None else (finite & (mk > 0))
+                return jnp.where(keep, new, old)
+
+            updates = jax.tree.map(guard_update, updates, masks,
+                                   is_leaf=lambda x: x is None)
+            opt_state = opt_state._replace(
+                m=jax.tree.map(guard_moment, opt_state.m, prev_opt.m, masks,
+                               is_leaf=lambda x: x is None),
+                v=jax.tree.map(guard_moment, opt_state.v, prev_opt.v, masks,
+                               is_leaf=lambda x: x is None),
             )
             adapters = apply_updates(adapters, updates)
-            return adapters, opt_state, loss, pt
+            total, pt_acc = acc
+            total = total + loss
+            pt_acc = pt_acc.at[member_ids].add(pt)
+            return adapters, opt_state, counts, (total, pt_acc)
 
-        return jax.jit(step, donate_argnums=(1, 2))
+        return jax.jit(step, donate_argnums=(1, 2, 3, 6))
 
     def _step_for(self, htask_idx: int) -> Callable:
-        h = self.plan.htasks[htask_idx]
-        key = (h.rows, h.row_len, tuple(h.task_ids))
+        key = self.step_signature(htask_idx)
         if key not in self._steps:
             self._steps[key] = self._make_step(htask_idx)
+            self.cache_misses += 1
+        else:
+            self.cache_hits += 1
         return self._steps[key]
 
     # ------------------------------------------------------------------
@@ -174,7 +337,9 @@ class PEFTEngine:
         transfer is one explicit ``jax.device_get`` of the accumulated
         metrics at the end of the iteration.  Host→device batch transfer is
         double-buffered: the next micro-batch's ``device_put`` DMA is in
-        flight while the current step computes.
+        flight while the current step computes.  The local→global per-task
+        loss scatter uses the pre-staged device index vectors, so it adds no
+        transfer either.
         """
         from repro.launch.steps import prefetch_to_device
 
@@ -182,25 +347,32 @@ class PEFTEngine:
         schedule = self._schedule(n_micro)
         # device_put (not jnp.zeros) so accumulator init is an explicit
         # transfer — the whole loop stays clean under transfer_guard.
-        total_loss = jax.device_put(np.float32(0.0))
-        pt_acc = jax.device_put(np.zeros((len(self.plan.tasks),), np.float32))
+        # per-task accumulator sized to the total slot CAPACITY (not the live
+        # task count): capacity only changes when the adapter stacks are
+        # reshaped — exactly when the step cache is cleared — so reused
+        # steps never retrace on a censal shift; sliced to live tasks on host
+        n_acc = max(len(self.plan.tasks),
+                    sum(self.reg.mta.kind_capacity.values()))
+        acc = (jax.device_put(np.float32(0.0)),
+               jax.device_put(np.zeros((n_acc,), np.float32)))
         tokens = eff = 0
         batches = prefetch_to_device(next(loaders[h]) for h in schedule)
         for hid, batch in zip(schedule, batches):
             step = self._step_for(hid)
-            self.reg.adapter_params, self.reg.opt_state, loss, pt = step(
-                self.backbone, self.reg.adapter_params, self.reg.opt_state, batch
+            (self.reg.adapter_params, self.reg.opt_state, self._slot_steps,
+             acc) = step(
+                self.backbone, self.reg.adapter_params, self.reg.opt_state,
+                self._slot_steps, batch, self._member_ids[hid], acc,
             )
-            total_loss = total_loss + loss
-            pt_acc = pt_acc + pt
             h = self.plan.htasks[hid]
             tokens += h.tokens
             eff += h.effective_tokens
         # The iteration's single host sync: one explicit transfer of the
         # device accumulators (blocks until the whole iteration retires).
-        loss_h, pt_h = jax.device_get((total_loss, pt_acc))
+        loss_h, pt_h = jax.device_get(acc)
         dt = time.perf_counter() - t0
-        return StepMetrics(float(loss_h), np.asarray(pt_h, np.float64), tokens, eff, dt)
+        pt_h = np.asarray(pt_h, np.float64)[: len(self.plan.tasks)]
+        return StepMetrics(float(loss_h), pt_h, tokens, eff, dt)
 
     def throughput(self, metrics: StepMetrics) -> Dict[str, float]:
         return {

@@ -84,6 +84,34 @@ class ExecutionPlanner:
         self.hw = hw or HardwareProfile()
         self.memory_budget = memory_budget
 
+    def cost_model(self, tasks: Sequence[PEFTTask],
+                   enable_orchestration: bool = True) -> CostModel:
+        """The Eq. 3-5 cost/memory model for a prospective task set — shared
+        by planning and by the serving layer's admission gate, so a tenant is
+        admitted under exactly the model the plan will be costed with."""
+        return CostModel(self.cfg, list(tasks), self.parallelism, self.hw,
+                         comm_overlapped=enable_orchestration)
+
+    def replan(
+        self,
+        tasks: Sequence[PEFTTask],
+        prev: Optional["ExecutionPlan"] = None,
+        **kw,
+    ) -> "ExecutionPlan":
+        """Re-plan after tenant arrival/departure (online path).
+
+        Planning is pure host arithmetic, so a full re-plan is cheap; the
+        expensive asset is COMPILED steps, and those are preserved by the
+        engine's hTask-signature cache — an hTask whose fused geometry
+        survives the census change lowers to an identical signature and
+        reuses its executable.  When the task census is unchanged (e.g. a
+        queued tenant cancelled before admission) the previous plan is
+        returned as-is."""
+        if prev is not None and [t.task_id for t in prev.tasks] == [
+                t.task_id for t in tasks]:
+            return prev
+        return self.plan(tasks, **kw)
+
     def plan(
         self,
         tasks: Sequence[PEFTTask],

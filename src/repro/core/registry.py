@@ -14,6 +14,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ArchConfig, get_config
 from repro.core.task import PEFTTask
@@ -44,7 +45,97 @@ class RegisteredTasks:
     opt_state: AdamWState
 
     def signature(self) -> Tuple:
-        return tuple((t.task_id, t.adapter.kind, t.adapter.rank) for t in self.tasks)
+        return tuple((t.task_id, t.adapter.kind, t.adapter.rank,
+                      int(self.mta.task_slot[i])) for i, t in enumerate(self.tasks))
+
+    def task_index(self, task_id: str) -> int:
+        for i, t in enumerate(self.tasks):
+            if t.task_id == task_id:
+                return i
+        raise KeyError(task_id)
+
+
+def slice_task_tree(cfg: ArchConfig, mta: MultiTaskAdapters, tree: Any,
+                    task_index: int) -> Any:
+    """Extract ONE task's adapter slices from the stacked tree (task axis
+    removed) — the standalone artifact a completed tenant checkpoints out."""
+    kind = mta.task_cfgs[task_index].kind
+    slot = int(mta.task_slot[task_index])
+    depths = _group_depths(cfg)
+
+    def walk(node: Any, depth: int, in_kind: bool) -> Any:
+        if not isinstance(node, dict):
+            if node is None or not in_kind:
+                return None
+            return jax.lax.index_in_dim(node, slot, axis=depth, keepdims=False)
+        out = {}
+        for k, v in node.items():
+            if k in mta.kind_tasks and not in_kind:
+                if k != kind:
+                    continue
+                out[k] = walk(v, depth, True)
+            else:
+                sub = walk(v, depth, in_kind)
+                if sub is not None and not (isinstance(sub, dict) and not sub):
+                    out[k] = sub
+        return out
+
+    if "" in depths:
+        return walk(tree, depths[""], False)
+    return {gk: walk(tree.get(gk, {}), d, False)
+            for gk, d in depths.items() if gk in tree}
+
+
+def load_task_tree(cfg: ArchConfig, mta: MultiTaskAdapters, tree: Any,
+                   task_index: int, sub: Any, strict: bool = False) -> Any:
+    """Write a single-task adapter subtree back into its stack slot (warm
+    start).  Rank-padded: a subtree saved at a smaller stack rank loads into
+    the leading rank slice, zeros elsewhere preserved by the fresh init.
+    An incompatible leaf (bigger rank, different layer stacking) keeps the
+    fresh init — or raises with ``strict=True`` so a caller can surface the
+    failed warm start instead of silently cold-starting the tenant."""
+    kind = mta.task_cfgs[task_index].kind
+    slot = int(mta.task_slot[task_index])
+    depths = _group_depths(cfg)
+
+    def skip(node, src):
+        if strict:
+            raise ValueError(
+                f"warm-start leaf shape {src.shape} incompatible with stack "
+                f"leaf {node.shape} (task axis {kind}[{slot}])")
+        return node
+
+    def walk(node: Any, sub_node: Any, depth: int, in_kind: bool) -> Any:
+        if not isinstance(node, dict):
+            if node is None or sub_node is None or not in_kind:
+                return node
+            src = jnp.asarray(sub_node)
+            if src.ndim != node.ndim - 1:
+                return skip(node, src)
+            head, tail = node.shape[:depth], node.shape[depth + 1:]
+            s_head, s_tail = src.shape[:depth], src.shape[depth:]
+            if s_head != head or any(s > t for s, t in zip(s_tail, tail)):
+                return skip(node, src)
+            idx = ((slice(None),) * depth + (slot,)
+                   + tuple(slice(0, s) for s in s_tail))
+            return node.at[idx].set(src.astype(node.dtype))
+        out = {}
+        for k, v in node.items():
+            if k in mta.kind_tasks and not in_kind:
+                if k == kind and isinstance(sub_node, dict) and k in sub_node:
+                    out[k] = walk(v, sub_node[k], depth, True)
+                else:
+                    out[k] = v
+            else:
+                s = sub_node.get(k) if isinstance(sub_node, dict) else None
+                out[k] = walk(v, s, depth, in_kind)
+        return out
+
+    if "" in depths:
+        return walk(tree, sub, depths[""], False)
+    return {gk: (walk(tree[gk], (sub or {}).get(gk), d, False)
+                 if gk in (sub or {}) else tree[gk])
+            for gk, d in depths.items() if gk in tree}
 
 
 class ModelGenerator:
@@ -56,6 +147,15 @@ class ModelGenerator:
         self._key = jax.random.PRNGKey(seed)
         self.backbone_params: Optional[Any] = None
         self.registered: Optional[RegisteredTasks] = None
+        # Slot-stability state: stack capacity and rank floor per kind are
+        # monotone across attach/detach (shrunk only by compact()) so leaf
+        # shapes — and therefore compiled hTask steps — survive churn.
+        self._kind_capacity: Dict[str, int] = {}
+        self._kind_rank: Dict[str, int] = {}
+        # Pre-reserved slots per kind: a serving controller sets this so the
+        # first few tenant arrivals land in already-allocated stacks instead
+        # of forcing a capacity growth (= full recompile).
+        self.capacity_floor: int = 0
 
     # ------------------------------------------------------------------
 
@@ -85,10 +185,70 @@ class ModelGenerator:
         tasks = [t for t in old.tasks if t.task_id not in drop]
         return self._rebuild(tasks, old)
 
+    def compact(self) -> RegisteredTasks:
+        """Re-pack slots densely and shrink capacities to the live task set,
+        physically freeing departed tenants' adapter/moment memory.  Stack
+        ranks do NOT shrink (survivors train the full stack rank).  All
+        compiled steps are invalidated by the shape change — call when
+        occupancy is low, not on every detach."""
+        old = self.registered
+        assert old is not None
+        return self._rebuild(list(old.tasks), old, compact=True)
+
     # ------------------------------------------------------------------
 
-    def _rebuild(self, tasks: List[PEFTTask], old: Optional[RegisteredTasks]) -> RegisteredTasks:
-        mta = MultiTaskAdapters(self.cfg, [t.adapter for t in tasks])
+    def _slot_plan(self, tasks: List[PEFTTask], old: Optional[RegisteredTasks]):
+        """Slot-stable assignment: survivors keep their slots, new tasks take
+        the lowest free slot; capacity doubles when a kind's stack is full."""
+        old_ids = {t.task_id: i for i, t in enumerate(old.tasks)} if old else {}
+        slots = np.full((len(tasks),), -1, np.int32)
+        used: Dict[str, set] = {}
+        for i, t in enumerate(tasks):
+            kind = t.adapter.kind
+            used.setdefault(kind, set())
+            if old is not None and t.task_id in old_ids:
+                oi = old_ids[t.task_id]
+                if old.tasks[oi].adapter.kind == kind:
+                    s = int(old.mta.task_slot[oi])
+                    slots[i] = s
+                    used[kind].add(s)
+        caps = dict(self._kind_capacity)
+        if self.capacity_floor:
+            for kind in {t.adapter.kind for t in tasks}:
+                caps[kind] = max(caps.get(kind, 0), self.capacity_floor)
+        for i, t in enumerate(tasks):
+            if slots[i] >= 0:
+                continue
+            kind = t.adapter.kind
+            cap = caps.get(kind, 0)
+            free = [s for s in range(cap) if s not in used[kind]]
+            if free:
+                s = free[0]
+            else:
+                s = max(used[kind], default=-1) + 1
+                caps[kind] = max(cap * 2, s + 1)  # amortized growth
+            slots[i] = s
+            used[kind].add(s)
+        # drop capacity/rank floors for kinds with no live tasks
+        live_kinds = {t.adapter.kind for t in tasks}
+        caps = {k: v for k, v in caps.items() if k in live_kinds}
+        ranks = {k: v for k, v in self._kind_rank.items() if k in live_kinds}
+        return slots, caps, ranks
+
+    def _rebuild(self, tasks: List[PEFTTask], old: Optional[RegisteredTasks],
+                 compact: bool = False) -> RegisteredTasks:
+        if compact:
+            # dense re-pack: default slot assignment, capacities = live counts
+            live_kinds = {t.adapter.kind for t in tasks}
+            slots, caps = None, None
+            ranks = {k: v for k, v in self._kind_rank.items() if k in live_kinds}
+        else:
+            slots, caps, ranks = self._slot_plan(tasks, old)
+        mta = MultiTaskAdapters(self.cfg, [t.adapter for t in tasks],
+                                kind_capacity=caps, kind_rank=ranks,
+                                task_slot=slots)
+        self._kind_capacity = dict(mta.kind_capacity)
+        self._kind_rank = dict(mta.kind_rank)
         self._key, k = jax.random.split(self._key)
         params = mta.init(k)
         opt = adamw_init(params)
@@ -128,21 +288,34 @@ class ModelGenerator:
             def copy_leaf(new_leaf, old_leaf):
                 if old_leaf is None or new_leaf is None:
                     return new_leaf
-                same_tail = new_leaf.shape[ax + 1:] == old_leaf.shape[ax + 1:]
                 same_head = new_leaf.shape[:ax] == old_leaf.shape[:ax]
-                if not (same_tail and same_head):
-                    return new_leaf  # rank/shape changed: keep fresh init
+                old_tail = old_leaf.shape[ax + 1:]
+                new_tail = new_leaf.shape[ax + 1:]
+                # rank growth pads: copy into the leading slice (LoRA "b"
+                # extra rank-rows stay zero, so the adapter delta is exact)
+                grows = (len(new_tail) == len(old_tail)
+                         and all(n >= o for n, o in zip(new_tail, old_tail)))
+                if not (same_head and grows):
+                    return new_leaf  # incompatible shape: keep fresh init
                 out = new_leaf
                 for ns, os in old_slots.items():
                     src = jax.lax.index_in_dim(old_leaf, os, axis=ax, keepdims=False)
-                    out = out.at[(slice(None),) * ax + (ns,)].set(src.astype(out.dtype))
+                    idx = ((slice(None),) * ax + (ns,)
+                           + tuple(slice(0, o) for o in old_tail))
+                    out = out.at[idx].set(src.astype(out.dtype))
                 return out
 
-            merged = jax.tree.map(copy_leaf, new_tree, old_tree,
-                                  is_leaf=lambda x: x is None)
-            merged_m = jax.tree.map(copy_leaf, new_m, old_m,
-                                    is_leaf=lambda x: x is None)
-            return merged, merged_m
+            def merge(new_node, old_node):
+                # structure-tolerant: a new task may introduce target keys the
+                # old stack lacks (kept fresh); dropped keys just disappear
+                if not isinstance(new_node, dict):
+                    return copy_leaf(new_node, old_node)
+                if not isinstance(old_node, dict):
+                    return new_node
+                return {k: merge(v, old_node[k]) if k in old_node else v
+                        for k, v in new_node.items()}
+
+            return merge(new_tree, old_tree), merge(new_m, old_m)
 
         def walk(new_p, old_p, new_m, old_m, new_v, old_v, group_key, depth):
             # group level: {kind: {target: {leaf}}}

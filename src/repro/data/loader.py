@@ -23,11 +23,17 @@ class HTaskLoader:
         plan: AlignmentPlan,
         vocab: int,
         seed: int = 0,
+        streams: Optional[Dict[int, Iterator[int]]] = None,
     ):
+        """``streams`` (keyed by GLOBAL task index) lets a serving controller
+        hand in per-tenant generators that PERSIST across re-plans: when the
+        task census changes and loaders are rebuilt, each surviving tenant
+        resumes its corpus where it left off instead of restarting — the data
+        a tenant sees is invariant to other tenants' arrival/departure."""
         self.tasks = list(tasks)
         self.plan = plan
         self.vocab = vocab
-        self._streams = {
+        self._streams = streams if streams is not None else {
             i: token_stream(t.task_id, vocab, seed) for i, t in enumerate(self.tasks)
         }
         self._layout = plan.arrays()

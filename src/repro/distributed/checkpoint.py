@@ -124,6 +124,22 @@ def restore_checkpoint(
     return jax.tree.unflatten(treedef, leaves), manifest["extra"]
 
 
+def restore_latest(
+    directory: str,
+    like: Any,
+    shardings: Any = None,
+    verify: bool = True,
+) -> Optional[Tuple[int, Any, Dict]]:
+    """Restore the newest committed checkpoint in ``directory`` (or None if
+    the directory holds none) — the warm-start entry point for a tenant
+    resubmitting a previously checkpointed-out adapter."""
+    step = latest_step(directory)
+    if step is None:
+        return None
+    tree, extra = restore_checkpoint(directory, step, like, shardings, verify)
+    return step, tree, extra
+
+
 def prune_checkpoints(directory: str, keep: int = 3) -> None:
     if not os.path.isdir(directory):
         return

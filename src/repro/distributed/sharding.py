@@ -51,6 +51,9 @@ class ShardingRules:
         ("ssm_state", None),
         ("layers", None),          # stacked-scan leading dim
         ("stage", None),
+        # adapter-stack task dim: optimizer moments shard across DP ranks
+        # (per-tenant state scales with tenant count, not model size)
+        ("adapter_tasks", ("pod", "data")),
     )
 
     def lookup(self, name: Optional[str]) -> AxisTarget:

@@ -178,7 +178,8 @@ def lower_cell(
             ad_specs = mta.abstract()
             ad_shard = S.adapter_shardings(mta, mesh, rules)
             opt_specs = jax.eval_shape(adamw_init, ad_specs)
-            opt_shard = S.opt_shardings(opt_specs, mesh)
+            opt_shard = S.opt_shardings(opt_specs, mesh, mta=mta, cfg=cfg,
+                                        rules=rules)
             bspecs = S.batch_specs(cfg, shape, with_positions=with_pos)
             bshard = S.batch_shardings(bspecs, mesh, rules)
             step = S.build_train_step(model, mta, seg)

@@ -94,10 +94,58 @@ def adapter_shardings(mta: MultiTaskAdapters, mesh: Mesh, rules: ShardingRules):
     return tree_shardings(spec_logical_axes(mta.spec()), mesh, rules)
 
 
-def opt_shardings(opt_abstract: AdamWState, mesh: Mesh):
-    """Optimizer moments replicated (adapters are small; baseline layout)."""
+def opt_shardings(opt_abstract: AdamWState, mesh: Mesh,
+                  mta: Optional[MultiTaskAdapters] = None,
+                  cfg: Optional[ArchConfig] = None,
+                  rules: Optional[ShardingRules] = None):
+    """AdamW moment shardings.
+
+    With ``mta``/``cfg`` given, moments shard along each leaf's adapter-stack
+    TASK axis (logical axis ``adapter_tasks`` -> DP ranks): per-tenant
+    optimizer state is the dominant multi-tenant memory term and scales with
+    tenant count, so slicing it across data-parallel ranks keeps per-chip
+    moment bytes flat as tenants grow.  Leaves whose task dim doesn't divide
+    the mesh axis — and the step scalar — stay replicated.  Without ``mta``
+    the legacy fully-replicated layout is returned.
+    """
     rep = NamedSharding(mesh, P())
-    return jax.tree.map(lambda _: rep, opt_abstract)
+    if mta is None or cfg is None:
+        return jax.tree.map(lambda _: rep, opt_abstract)
+    from repro.core.registry import _group_depths
+    from repro.distributed.sharding import divisible
+
+    r = (rules or ShardingRules()).mesh_axes(mesh)
+    target = r.lookup("adapter_tasks")
+    depths = _group_depths(cfg)
+
+    def leaf_sharding(leaf, depth):
+        nd = getattr(leaf, "ndim", 0)
+        if (target is None or nd <= depth
+                or not divisible(leaf.shape[depth], mesh, target)):
+            return rep
+        axes = [None] * nd
+        axes[depth] = "adapter_tasks"
+        return NamedSharding(mesh, logical_to_spec(axes, r))
+
+    def walk(tree, depth, kind=None):
+        if not isinstance(tree, dict):
+            if tree is None:
+                return None  # non-float leaf: stays an empty pytree node
+            if kind is None:
+                return rep
+            return leaf_sharding(tree, depth)
+        out = {}
+        for k, v in tree.items():
+            nk = k if k in mta.kind_tasks else kind
+            out[k] = walk(v, depth, nk)
+        return out
+
+    def moments(tree):
+        if "" in depths:
+            return walk(tree, depths[""])
+        return {gk: walk(tree.get(gk, {}), d) for gk, d in depths.items()}
+
+    return AdamWState(rep, moments(opt_abstract.m), moments(opt_abstract.v))
 
 
 def _state_axes(cfg: ArchConfig, state: Any) -> Any:

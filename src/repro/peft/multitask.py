@@ -56,6 +56,16 @@ class TaskSegments:
     def batch(self) -> int:
         return len(self.row_task)
 
+    def relabel(self, member_ids: Sequence[int]) -> "TaskSegments":
+        """Re-index rows onto the member list (global -> local task ids).
+
+        The local view is what compiled hTask steps see: their per-task loss
+        output is sized to the members only, so the compiled computation is
+        independent of the GLOBAL task census — the engine's signature cache
+        can reuse a step across re-plans that shift global indices."""
+        lookup = {g: l for l, g in enumerate(member_ids)}
+        return TaskSegments(tuple(lookup[t] for t in self.row_task), len(member_ids))
+
     def row_task_array(self) -> np.ndarray:
         return np.asarray(self.row_task, np.int32)
 
@@ -75,9 +85,25 @@ class TaskSegments:
 
 
 class MultiTaskAdapters:
-    """Builds & applies stacked multi-task adapter params for one backbone."""
+    """Builds & applies stacked multi-task adapter params for one backbone.
 
-    def __init__(self, cfg: ArchConfig, task_cfgs: Sequence[AdapterConfig]):
+    Slot-stable capacity allocation (online serving): each kind's stack is
+    sized ``kind_capacity[kind]`` >= live task count, and each task owns an
+    explicit ``task_slot`` within its kind stack.  Keeping slots and
+    capacities stable across task arrival/departure keeps every adapter
+    leaf's *shape* stable, which is what lets the engine reuse compiled
+    hTask steps across re-plans (no retrace on churn).  Unused slots hold
+    fresh-init values that no batch row ever routes to.
+    """
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        task_cfgs: Sequence[AdapterConfig],
+        kind_capacity: Optional[Dict[str, int]] = None,
+        kind_rank: Optional[Dict[str, int]] = None,
+        task_slot: Optional[Sequence[int]] = None,
+    ):
         self.cfg = cfg
         self.task_cfgs = tuple(task_cfgs)
         self.dims = base_op_dims(cfg)
@@ -85,23 +111,47 @@ class MultiTaskAdapters:
         self.kind_tasks: Dict[str, List[int]] = {}
         for i, tc in enumerate(task_cfgs):
             self.kind_tasks.setdefault(tc.kind, []).append(i)
-        self.task_slot = np.full((len(task_cfgs),), -1, np.int32)
+        if task_slot is None:
+            self.task_slot = np.full((len(task_cfgs),), -1, np.int32)
+            for kind, ids in self.kind_tasks.items():
+                for slot, tid in enumerate(ids):
+                    self.task_slot[tid] = slot
+        else:
+            self.task_slot = np.asarray(task_slot, np.int32)
+            assert self.task_slot.shape == (len(task_cfgs),)
+            for kind, ids in self.kind_tasks.items():
+                slots = [int(self.task_slot[i]) for i in ids]
+                assert len(set(slots)) == len(slots) and min(slots, default=0) >= 0, \
+                    f"slot collision for kind {kind}: {slots}"
+        # stack rank per kind: max over members, never below the given floor
+        # (a surviving task trains the FULL stack rank, so rank never shrinks
+        # while any member survives — see ModelGenerator._kind_rank)
+        self.kind_rank: Dict[str, int] = {}
+        self.kind_capacity: Dict[str, int] = {}
         for kind, ids in self.kind_tasks.items():
-            for slot, tid in enumerate(ids):
-                self.task_slot[tid] = slot
+            r = max(self.task_cfgs[i].rank for i in ids)
+            if kind_rank and kind in kind_rank:
+                r = max(r, kind_rank[kind])
+            self.kind_rank[kind] = r
+            need = max(int(self.task_slot[i]) for i in ids) + 1
+            cap = need
+            if kind_capacity and kind in kind_capacity:
+                cap = max(cap, kind_capacity[kind])
+            self.kind_capacity[kind] = cap
 
     # ------------------------------------------------------------------
 
     def _per_layer_spec(self, targets_filter=None) -> Dict[str, Any]:
         out: Dict[str, Any] = {}
         for kind, ids in self.kind_tasks.items():
-            rank = max(self.task_cfgs[i].rank for i in ids)
+            rank = self.kind_rank[kind]
             kspec: Dict[str, Any] = {}
             for name, (din, dout) in self.dims.items():
                 wanted = any(name in self.task_cfgs[i].targets for i in ids)
                 if not wanted or (targets_filter and name not in targets_filter):
                     continue
-                kspec[name] = adapter_spec(kind, rank, din, dout, len(ids))
+                kspec[name] = adapter_spec(kind, rank, din, dout,
+                                           self.kind_capacity[kind])
             if kspec:
                 out[kind] = kspec
         return out
@@ -166,10 +216,21 @@ class MultiTaskAdapters:
     # ------------------------------------------------------------------
 
     def scales(self, kind: str) -> np.ndarray:
-        ids = self.kind_tasks[kind]
+        """Per-slot aggregate scale, sized to the kind's stack capacity."""
+        out = np.ones((self.kind_capacity[kind],), np.float32)
         if kind == LORA:
-            return np.asarray([self.task_cfgs[i].scale for i in ids], np.float32)
-        return np.ones((len(ids),), np.float32)
+            for i in self.kind_tasks[kind]:
+                out[int(self.task_slot[i])] = self.task_cfgs[i].scale
+        return out
+
+    def slot_values(self, kind: str, per_task: Dict[int, float],
+                    fill: float = 0.0) -> np.ndarray:
+        """Scatter per-task values to their slots in a capacity-sized vector."""
+        out = np.full((self.kind_capacity[kind],), fill, np.float32)
+        for i in self.kind_tasks[kind]:
+            if i in per_task:
+                out[int(self.task_slot[i])] = per_task[i]
+        return out
 
     def kind_row_slots(self, segments: TaskSegments, kind: str) -> np.ndarray:
         """Per batch-row slot within the ``kind`` stack; -1 => not this kind."""

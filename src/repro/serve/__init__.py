@@ -1,0 +1,24 @@
+# Online multi-tenant serving layer: live tenant arrival/departure against a
+# running PEFTEngine — admission (Eq. 5 memory + saturation gate), bounded
+# priority wait queue, incremental re-planning with compiled-step reuse, and
+# adapter lifecycle (hot-attach, checkpoint-out, warm-start).
+from repro.serve.admission import (  # noqa: F401
+    AdmissionConfig,
+    AdmissionController,
+    AdmissionDecision,
+    WaitQueue,
+)
+from repro.serve.service import (  # noqa: F401
+    CANCELLED,
+    COMPLETED,
+    MuxTuneService,
+    QUEUED,
+    REJECTED,
+    RUNNING,
+    TenantRecord,
+)
+from repro.serve.replay import (  # noqa: F401
+    arrival_to_task,
+    replay_trace,
+    tiny_trace,
+)

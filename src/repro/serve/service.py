@@ -1,0 +1,396 @@
+"""MuxTuneService: the online multi-tenant fine-tuning controller.
+
+The offline half of the system (planner + engine) compiles ONE static task
+set; this module is the datacenter-service half: tenants arrive, train,
+cancel and complete against a single running ``PEFTEngine`` instance.
+
+Control plane per event:
+  submit  -> admission gate (Eq. 5 memory + saturation curve) -> hot-attach
+             (fresh adapter at a free stack slot, zero moments) or bounded
+             priority wait queue;
+  cancel  -> de-queue, or detach a resident tenant (no checkpoint);
+  step    -> one engine iteration over the current plan; tenants reaching
+             their target step count complete: their adapter slice is
+             checkpointed out atomically (``distributed.checkpoint``), the
+             slot + moments are freed, and the wait queue re-drains.
+
+Every census change re-plans (pure host arithmetic) and swaps the plan into
+the engine via ``attach_tasks``/``detach_tasks`` — compiled steps for
+buckets whose hTask signature survives the change are reused, and surviving
+tenants carry adapter values, AdamW moments and per-slot step counts across
+the boundary, so their optimization trajectory is EXACTLY what a solo run
+would produce on the same data.
+
+Per-tenant accounting (queue wait, iterations, tokens, effective-token
+ratio, makespan, loss history) is kept in ``TenantRecord``s so the cluster
+simulator's abstract predictions can be validated against real execution
+(``repro.serve.replay``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.configs import ArchConfig
+from repro.core.cost_model import HardwareProfile
+from repro.core.engine import PEFTEngine, StepMetrics
+from repro.core.planner import ExecutionPlan, ExecutionPlanner
+from repro.core.registry import ModelGenerator, load_task_tree, slice_task_tree
+from repro.core.task import ParallelismSpec, PEFTTask
+from repro.data.loader import HTaskLoader
+from repro.data.synthetic import token_stream
+from repro.distributed.checkpoint import restore_latest, save_checkpoint
+from repro.serve.admission import (
+    AdmissionConfig,
+    AdmissionController,
+    WaitQueue,
+)
+
+QUEUED = "queued"
+RUNNING = "running"
+COMPLETED = "completed"
+CANCELLED = "cancelled"
+REJECTED = "rejected"
+
+
+@dataclass
+class TenantRecord:
+    task: PEFTTask
+    priority: int
+    target_steps: int
+    warm_start_dir: Optional[str] = None
+    state: str = QUEUED
+    reason: str = ""
+    submit_step: int = 0          # service clock at submit
+    admit_step: int = -1
+    finish_step: int = -1
+    steps_trained: int = 0
+    tokens: int = 0               # padded tokens billed to this tenant
+    effective_tokens: int = 0     # non-padding tokens actually trained
+    losses: List[float] = field(default_factory=list)
+    checkpoint_path: Optional[str] = None
+
+    @property
+    def task_id(self) -> str:
+        return self.task.task_id
+
+    @property
+    def queue_wait(self) -> int:
+        if self.admit_step < 0:
+            return -1
+        return self.admit_step - self.submit_step
+
+    @property
+    def makespan(self) -> int:
+        if self.finish_step < 0:
+            return -1
+        return self.finish_step - self.submit_step
+
+    @property
+    def effective_token_ratio(self) -> float:
+        return self.effective_tokens / max(self.tokens, 1)
+
+    def accounting(self) -> Dict[str, Any]:
+        return {
+            "task_id": self.task_id,
+            "state": self.state,
+            "queue_wait": self.queue_wait,
+            "steps_trained": self.steps_trained,
+            "tokens": self.tokens,
+            "effective_tokens": self.effective_tokens,
+            "effective_token_ratio": round(self.effective_token_ratio, 4),
+            "makespan": self.makespan,
+            "final_loss": self.losses[-1] if self.losses else None,
+            "checkpoint": self.checkpoint_path,
+        }
+
+
+class MuxTuneService:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        parallelism: Optional[ParallelismSpec] = None,
+        lr: float = 1e-3,
+        n_micro: int = 1,
+        enable_fusion: bool = True,
+        hw: Optional[HardwareProfile] = None,
+        admission: Optional[AdmissionConfig] = None,
+        ckpt_dir: Optional[str] = None,
+        seed: int = 0,
+        reserve_slots: int = 0,
+        compact_threshold: float = 0.5,
+    ):
+        self.cfg = cfg
+        self.parallelism = parallelism or ParallelismSpec()
+        self.lr = lr
+        self.n_micro = n_micro
+        self.enable_fusion = enable_fusion
+        self.admission_config = admission or AdmissionConfig()
+        self.planner = ExecutionPlanner(
+            cfg, self.parallelism, hw,
+            memory_budget=self.admission_config.memory_budget)
+        self.admission = AdmissionController(
+            cfg, self.parallelism, hw, self.admission_config,
+            cost_model_fn=self.planner.cost_model)
+        self.ckpt_dir = ckpt_dir
+        self.seed = seed
+        self.compact_threshold = compact_threshold
+
+        self.gen = ModelGenerator(cfg, seed=seed)
+        self.gen.capacity_floor = reserve_slots
+        self.engine: Optional[PEFTEngine] = None
+        self.plan: Optional[ExecutionPlan] = None
+        self.clock = 0                      # engine iterations executed
+        self.tenants: Dict[str, TenantRecord] = {}
+        self.retired: List[TenantRecord] = []  # earlier runs of resubmitters
+        self.queue = WaitQueue(self.admission_config.max_queue)
+        self._streams: Dict[str, Any] = {}  # task_id -> persistent token gen
+        self._loaders: Dict[int, HTaskLoader] = {}
+        self._iter_tokens: Dict[str, tuple] = {}  # task_id -> (padded, eff)/iter
+        self.memory_trace: List[float] = []  # Eq. 5 bytes after every event
+        self.replans = 0
+        self._cache_stats = [0, 0]           # hits/misses of retired engines
+
+    # ------------------------------------------------------------------
+    # introspection
+
+    @property
+    def resident(self) -> List[PEFTTask]:
+        return list(self.gen.registered.tasks) if self.gen.registered else []
+
+    @property
+    def resident_ids(self) -> List[str]:
+        return [t.task_id for t in self.resident]
+
+    def record(self, task_id: str) -> TenantRecord:
+        return self.tenants[task_id]
+
+    def accounting(self) -> Dict[str, Any]:
+        everyone = self.retired + list(self.tenants.values())
+        recs = [r.accounting() for r in everyone]
+        done = [r for r in everyone if r.state == COMPLETED]
+        waits = [r.queue_wait for r in everyone if r.queue_wait >= 0]
+        return {
+            "clock": self.clock,
+            "replans": self.replans,
+            "tenants": recs,
+            "completed": len(done),
+            "mean_queue_wait": float(np.mean(waits)) if waits else 0.0,
+            "cache_hits": self._cache_stats[0] + (
+                self.engine.cache_hits if self.engine else 0),
+            "cache_misses": self._cache_stats[1] + (
+                self.engine.cache_misses if self.engine else 0),
+            "peak_stage_memory": max(self.memory_trace, default=0.0),
+            "memory_budget": self.admission_config.memory_budget,
+        }
+
+    # ------------------------------------------------------------------
+    # tenant lifecycle
+
+    def submit(self, task: PEFTTask, priority: int = 0, target_steps: int = 10,
+               warm_start_dir: Optional[str] = None) -> TenantRecord:
+        if task.task_id in self.tenants:
+            prev = self.tenants[task.task_id]
+            if prev.state in (QUEUED, RUNNING):
+                raise ValueError(f"tenant {task.task_id} already live")
+            self.retired.append(prev)  # resubmission keeps prior accounting
+        rec = TenantRecord(task, priority, target_steps, warm_start_dir,
+                           submit_step=self.clock)
+        self.tenants[task.task_id] = rec
+        decision = self.admission.check(self.resident, task)
+        if decision:
+            self._attach([rec])
+        else:
+            rec.reason = decision.reason
+            if not self.queue.push(rec, priority):
+                rec.state = REJECTED
+                rec.reason = f"queue_full({decision.reason})"
+        return rec
+
+    def cancel(self, task_id: str) -> TenantRecord:
+        rec = self.tenants[task_id]
+        if rec.state == QUEUED:
+            hit = self.queue.remove(lambda r: r.task_id == task_id)
+            rec.state = CANCELLED if hit else rec.state
+            rec.finish_step = self.clock
+        elif rec.state == RUNNING:
+            self._detach([rec], checkpoint=False)
+            rec.state = CANCELLED
+            rec.finish_step = self.clock
+        return rec
+
+    # ------------------------------------------------------------------
+    # attach / detach / re-plan
+
+    def _replan(self, tasks: List[PEFTTask]) -> ExecutionPlan:
+        plan = self.planner.replan(tasks, prev=self.plan,
+                                   n_micro=self.n_micro,
+                                   enable_fusion=self.enable_fusion)
+        self.replans += 1
+        return plan
+
+    def _attach(self, recs: List[TenantRecord]) -> None:
+        new_tasks = [r.task for r in recs]
+        prospective = self.resident + new_tasks
+        plan = self._replan(prospective)
+        if self.engine is None:
+            self.gen.register_tasks(new_tasks)
+            self.engine = PEFTEngine(self.gen, plan, lr=self.lr)
+        else:
+            self.engine.attach_tasks(new_tasks, plan)
+        self.plan = plan
+        for r in recs:
+            r.state = RUNNING
+            r.admit_step = self.clock
+            self._streams.setdefault(
+                r.task_id, token_stream(r.task_id, self.cfg.vocab_size, self.seed))
+            if r.warm_start_dir:
+                self._warm_start(r)
+        self._rebuild_loaders()
+        self.memory_trace.append(self.admission.resident_memory(self.resident))
+
+    def _warm_start(self, rec: TenantRecord) -> None:
+        reg = self.gen.registered
+        gi = reg.task_index(rec.task_id)
+        like = slice_task_tree(self.cfg, reg.mta, reg.adapter_params, gi)
+        try:
+            res = restore_latest(rec.warm_start_dir, like)
+        except (ValueError, KeyError, IOError):
+            rec.reason = "warm_start_shape_mismatch"
+            return
+        if res is None:
+            rec.reason = "warm_start_empty"
+            return
+        _, sub, _ = res
+        try:
+            reg.adapter_params = load_task_tree(self.cfg, reg.mta,
+                                                reg.adapter_params, gi, sub,
+                                                strict=True)
+        except ValueError:
+            rec.reason = "warm_start_shape_mismatch"
+
+    def _detach(self, recs: List[TenantRecord], checkpoint: bool) -> None:
+        assert self.engine is not None
+        reg = self.gen.registered
+        if checkpoint and self.ckpt_dir:
+            for r in recs:
+                gi = reg.task_index(r.task_id)
+                sub = slice_task_tree(self.cfg, reg.mta, reg.adapter_params, gi)
+                path = save_checkpoint(
+                    f"{self.ckpt_dir}/{r.task_id}", r.steps_trained, sub,
+                    extra={"task_id": r.task_id,
+                           "steps_trained": r.steps_trained,
+                           "losses": r.losses[-8:]})
+                r.checkpoint_path = path
+        ids = [r.task_id for r in recs]
+        for tid in ids:
+            self._streams.pop(tid, None)
+        remaining = [t for t in self.resident if t.task_id not in ids]
+        if not remaining:
+            # last tenant out: drop the engine (a fresh one boots on the next
+            # admission); the backbone stays cached in the generator
+            self.gen.deregister_tasks(ids)
+            self._cache_stats[0] += self.engine.cache_hits
+            self._cache_stats[1] += self.engine.cache_misses
+            self.engine = None
+            self.plan = None
+            self._loaders = {}
+        else:
+            plan = self._replan(remaining)
+            compact = self._occupancy_after(remaining) <= self.compact_threshold
+            self.engine.detach_tasks(ids, plan, compact=compact)
+            self.plan = plan
+            self._rebuild_loaders()
+        self.memory_trace.append(self.admission.resident_memory(remaining))
+        self._drain_queue()
+
+    def _occupancy_after(self, remaining: List[PEFTTask]) -> float:
+        """Max per-kind slot occupancy — compaction must only fire when
+        EVERY kind's stack is sparse; a cross-kind average would compact
+        (and recompile) a cohort whose own stack is still full."""
+        caps = self.gen._kind_capacity
+        live: Dict[str, int] = {}
+        for t in remaining:
+            live[t.adapter.kind] = live.get(t.adapter.kind, 0) + 1
+        ratios = [live.get(k, 0) / c for k, c in caps.items() if c]
+        return max(ratios) if ratios else 1.0
+
+    def _drain_queue(self) -> None:
+        """Admit queued tenants that now fit, highest priority first
+        (lower-priority tenants may backfill past a blocked head)."""
+        admitted: List[TenantRecord] = []
+        for rec in list(self.queue.items()):
+            decision = self.admission.check(
+                self.resident + [a.task for a in admitted], rec.task)
+            if decision:
+                self.queue.remove(lambda r, t=rec.task_id: r.task_id == t)
+                admitted.append(rec)
+        if admitted:
+            self._attach(admitted)
+
+    def _rebuild_loaders(self) -> None:
+        tasks = self.resident
+        streams = {i: self._streams[t.task_id] for i, t in enumerate(tasks)}
+        self._loaders = {
+            i: HTaskLoader(tasks, self.plan.alignment[i], self.cfg.vocab_size,
+                           seed=self.seed, streams=streams)
+            for i in range(len(self.plan.htasks))
+        }
+        self._iter_tokens = self._per_iteration_tokens()
+
+    def _per_iteration_tokens(self) -> Dict[str, tuple]:
+        """(padded, effective) tokens each tenant trains per iteration under
+        the current plan — the billing split of §3.5."""
+        counts: Dict[int, int] = {}
+        for hid in self.engine._schedule(self.n_micro):
+            counts[hid] = counts.get(hid, 0) + 1
+        out: Dict[str, list] = {}
+        tasks = self.plan.tasks
+        for hid, n in counts.items():
+            ap = self.plan.alignment[hid]
+            for row in ap.rows:
+                tid = tasks[row.task].task_id
+                eff = sum(s.length for s in row.segments)
+                pad, e = out.get(tid, (0, 0))
+                out[tid] = (pad + n * ap.row_len, e + n * eff)
+        return {k: tuple(v) for k, v in out.items()}
+
+    # ------------------------------------------------------------------
+    # data plane
+
+    def step(self) -> Optional[StepMetrics]:
+        """One engine iteration for the current resident set; completes
+        tenants that reached their target and re-drains the wait queue."""
+        if self.engine is None or not self.resident:
+            self.clock += 1
+            if len(self.queue):
+                self._drain_queue()
+            return None
+        metrics = self.engine.run_iteration(self._loaders, n_micro=self.n_micro)
+        self.clock += 1
+        completed: List[TenantRecord] = []
+        for gi, task in enumerate(self.plan.tasks):
+            rec = self.tenants[task.task_id]
+            rec.steps_trained += 1
+            rec.losses.append(float(metrics.per_task_loss[gi]))
+            pad, eff = self._iter_tokens.get(task.task_id, (0, 0))
+            rec.tokens += pad
+            rec.effective_tokens += eff
+            if rec.steps_trained >= rec.target_steps:
+                completed.append(rec)
+        if completed:
+            for r in completed:
+                r.state = COMPLETED
+                r.finish_step = self.clock
+            self._detach(completed, checkpoint=True)
+        return metrics
+
+    def run(self, max_iters: int = 1000) -> Dict[str, Any]:
+        """Step until every live tenant drains (or ``max_iters``)."""
+        for _ in range(max_iters):
+            if not self.resident and not len(self.queue):
+                break
+            self.step()
+        return self.accounting()

@@ -43,19 +43,31 @@ def adamw_update(
     eps: float = 1e-8,
     weight_decay: float = 0.0,
     lr_scales: Optional[Any] = None,
+    step_counts: Optional[Any] = None,
 ):
+    """``step_counts``: optional pytree (same structure as ``params``) of
+    broadcastable per-slot update counts — ALREADY incremented for this
+    update.  Bias correction then uses each slot's own count instead of the
+    global step, so a task fused with others optimizes exactly as it would
+    alone (per-task optimizer isolation under spatial multiplexing)."""
     step = state.step + 1
     c1 = 1.0 - b1 ** step.astype(jnp.float32)
     c2 = 1.0 - b2 ** step.astype(jnp.float32)
 
-    def upd(g, m, v, p, s):
+    def upd(g, m, v, p, s, n):
         if not _is_float(p) or g is None or (hasattr(g, "dtype") and g.dtype == jax.dtypes.float0):
             return None, m, v
         gf = g.astype(jnp.float32)
         m2 = b1 * m + (1 - b1) * gf
         v2 = b2 * v + (1 - b2) * gf * gf
-        mh = m2 / c1
-        vh = v2 / c2
+        if n is None:
+            k1, k2 = c1, c2
+        else:
+            nf = jnp.maximum(n.astype(jnp.float32), 1.0)
+            k1 = 1.0 - b1 ** nf
+            k2 = 1.0 - b2 ** nf
+        mh = m2 / k1
+        vh = v2 / k2
         u = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
         scale = lr if s is None else lr * s
         return (-scale * u).astype(p.dtype), m2, v2
@@ -66,8 +78,11 @@ def adamw_update(
     flat_m = treedef.flatten_up_to(state.m)
     flat_v = treedef.flatten_up_to(state.v)
     flat_s = treedef.flatten_up_to(scales) if lr_scales is not None else [None] * len(flat_p)
+    flat_n = (treedef.flatten_up_to(step_counts) if step_counts is not None
+              else [None] * len(flat_p))
 
-    outs = [upd(g, m, v, p, s) for g, m, v, p, s in zip(flat_g, flat_m, flat_v, flat_p, flat_s)]
+    outs = [upd(g, m, v, p, s, n) for g, m, v, p, s, n
+            in zip(flat_g, flat_m, flat_v, flat_p, flat_s, flat_n)]
     updates = treedef.unflatten([o[0] for o in outs])
     new_m = treedef.unflatten([o[1] for o in outs])
     new_v = treedef.unflatten([o[2] for o in outs])

@@ -1,0 +1,126 @@
+"""Cluster simulator policy tests: fcfs / best_fit / backbone_affine
+invariants — no over-admission past the Eq. 5 memory bound, backbone
+affinity respected, co-location slowdown shape (Fig. 9b)."""
+import numpy as np
+import pytest
+
+from repro.cluster.simulator import (
+    ClusterSim,
+    Instance,
+    TaskArrival,
+    philly_style_trace,
+)
+
+POLICIES = ("fcfs", "best_fit", "backbone_affine")
+
+
+def _replay_instance_state(trace, sim):
+    """Reconstruct per-instance resident sets at each admission from the
+    simulator's per-arrival records; yields (record, resident_list) where
+    resident_list holds (mem_gb, backbone, t_end) live at admission time."""
+    order = sorted(trace, key=lambda a: a.t_min)
+    admitted = []  # (instance, t_end, mem, backbone)
+    for rec in sim.records:
+        if not rec.admitted:
+            continue
+        task = order[rec.index]
+        live = [(m, b, e) for (i, e, m, b) in admitted
+                if i == rec.instance and e > rec.t_arrive]
+        yield rec, task, live
+        admitted.append((rec.instance, rec.t_end, task.mem_gb, task.backbone))
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_no_memory_over_admission(policy):
+    """At every admission instant: backbone + resident adapters + newcomer
+    must fit HBM (the simulator's Eq. 5 analogue)."""
+    trace = philly_style_trace(horizon_min=240, rate_per_min=1.0,
+                               mean_dur_min=120, seed=3)
+    sim = ClusterSim(n_chips=16, chips_per_instance=4, policy=policy)
+    sim.run(trace)
+    hbm = sim.instances[0].hbm_gb
+    backbone = sim.instances[0].backbone_gb
+    checked = 0
+    for rec, task, live in _replay_instance_state(trace, sim):
+        used = backbone + sum(m for m, _, _ in live)
+        assert used + task.mem_gb <= hbm + 1e-9, (rec, used, task.mem_gb)
+        checked += 1
+    assert checked > 0
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_backbone_homogeneity(policy):
+    """No instance ever runs two backbone types concurrently (§6)."""
+    rng = np.random.RandomState(0)
+    trace = [
+        TaskArrival(t_min=float(i), duration_min=30.0,
+                    backbone="llama7b" if i % 2 else "qwen7b",
+                    mem_gb=float(rng.uniform(0.5, 1.5)))
+        for i in range(40)
+    ]
+    sim = ClusterSim(n_chips=16, chips_per_instance=4, policy=policy)
+    sim.run(trace)
+    for rec, task, live in _replay_instance_state(trace, sim):
+        assert all(b == task.backbone for _, b, _ in live), (rec, live)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_colocate_cap_and_conservation(policy):
+    trace = philly_style_trace(horizon_min=120, rate_per_min=2.0, seed=1)
+    sim = ClusterSim(n_chips=8, chips_per_instance=4, max_colocate=3,
+                     policy=policy)
+    out = sim.run(trace)
+    # every arrival is accounted exactly once
+    assert out["completed"] + out["dropped"] == len(trace)
+    assert 0.0 < out["admission_rate"] <= 1.0
+    for rec, task, live in _replay_instance_state(trace, sim):
+        assert len(live) < 3  # newcomer makes at most max_colocate residents
+    assert len(sim.records) == len(trace)
+
+
+def test_best_fit_packs_fullest_feasible():
+    """best_fit co-locates onto the busiest instance that still fits."""
+    sim = ClusterSim(n_chips=12, chips_per_instance=4, policy="best_fit")
+    a, b, c = sim.instances
+    a.backbone = b.backbone = "llama7b"
+    a.active = [(100.0, 1.0)]
+    b.active = [(100.0, 1.0), (100.0, 1.0)]
+    task = TaskArrival(t_min=0.0, duration_min=10.0, mem_gb=1.0)
+    assert sim._pick(task) is b
+    # ...but not past the memory bound: stuff b near the HBM limit
+    b.active = [(100.0, 25.0), (100.0, 25.0)]  # 14 + 50 + 1 > 64
+    assert sim._pick(task) is a
+
+
+def test_backbone_affine_prefers_warm_instance():
+    """backbone_affine lands on a same-backbone instance even when another
+    instance is busier (with a different backbone it can't join anyway) or
+    equally empty."""
+    sim = ClusterSim(n_chips=12, chips_per_instance=4, policy="backbone_affine")
+    a, b, c = sim.instances
+    a.backbone = "qwen7b"
+    a.active = [(100.0, 1.0), (100.0, 1.0)]
+    b.backbone = "llama7b"
+    b.active = [(100.0, 1.0)]
+    task = TaskArrival(t_min=0.0, duration_min=10.0, backbone="llama7b")
+    assert sim._pick(task) is b  # a is busier but runs a different backbone
+
+
+def test_multiplexed_slowdown_sublinear():
+    """Fig. 9b shape: spatial multiplexing slows co-located tasks
+    sub-linearly; time-slicing is exactly linear."""
+    inst = Instance(0, 4)
+    for k in (2, 4, 8):
+        assert inst.slowdown(k, multiplexed=True) < k
+        assert inst.slowdown(k, multiplexed=False) == float(k)
+    # monotone in k
+    s = [inst.slowdown(k, True) for k in (1, 2, 4, 8)]
+    assert s == sorted(s)
+
+
+def test_multiplexing_beats_time_slicing_on_saturated_trace():
+    trace = philly_style_trace(horizon_min=240, rate_per_min=1.5, seed=7)
+    mux = ClusterSim(n_chips=16, chips_per_instance=4, multiplexed=True).run(trace)
+    sliced = ClusterSim(n_chips=16, chips_per_instance=4, multiplexed=False).run(trace)
+    assert mux["completed"] >= sliced["completed"]
+    assert mux["served_task_min"] >= sliced["served_task_min"]

@@ -87,6 +87,43 @@ def test_rules_for_decode_cache_layout():
     assert r.lookup("seq") is None  # decode: no seq sharding of 1-token input
 
 
+def test_opt_shardings_task_axis():
+    """Optimizer moments are sharded along the adapter-stack TASK axis over
+    the data-parallel mesh axis (ROADMAP item: moments were replicated)."""
+    from repro.configs import smoke_config
+    from repro.launch.steps import opt_shardings
+    from repro.peft.adapters import LORA, AdapterConfig
+    from repro.peft.multitask import MultiTaskAdapters
+    from repro.train.optimizer import adamw_init
+
+    cfg = smoke_config("llama3.2-3b")
+    mta = MultiTaskAdapters(cfg, [AdapterConfig(LORA, rank=4)] * 2)
+    opt_specs = jax.eval_shape(adamw_init, mta.abstract())
+    # abstract mesh: spec construction needs no physical 2-device host
+    mesh = compat.make_abstract_mesh((2, 1), ("data", "model"))
+
+    shard = opt_shardings(opt_specs, mesh, mta=mta, cfg=cfg)
+    # dense family: adapter leaves are [layers, tasks, ...] -> task axis 1
+    for tree in (shard.m, shard.v):
+        spec = tree["lora"]["attn_q"]["a"].spec
+        assert spec[1] == "data", spec
+        assert all(s is None for i, s in enumerate(spec) if i != 1), spec
+    # step scalar stays replicated
+    assert shard.step.spec == P()
+    # structure matches the specs tree (None moment leaves stay None)
+    jax.tree.map(lambda a, b: None, opt_specs, shard)
+
+    # legacy path (no mta): fully replicated
+    rep = opt_shardings(opt_specs, mesh)
+    assert rep.m["lora"]["attn_q"]["a"].spec == P()
+
+    # a task count that doesn't divide the mesh axis falls back to replicated
+    mta3 = MultiTaskAdapters(cfg, [AdapterConfig(LORA, rank=4)] * 3)
+    opt3 = jax.eval_shape(adamw_init, mta3.abstract())
+    shard3 = opt_shardings(opt3, mesh, mta=mta3, cfg=cfg)
+    assert shard3.m["lora"]["attn_q"]["a"].spec == P()
+
+
 # ---------------------------------------------------------------------------
 # pipeline reference semantics
 # ---------------------------------------------------------------------------

@@ -1,0 +1,224 @@
+"""MuxTuneService acceptance: 3-tenant churn (staggered arrival, one
+cancels, one completes) with the three online-serving guarantees:
+
+  (a) admission NEVER violates the Eq. 5 memory model (tight-budget tenant
+      waits in the queue and is admitted only after a departure);
+  (b) a tenant that stays resident trains EXACTLY like a solo run of the
+      same data/seed across every re-plan boundary (adapter values, AdamW
+      moments and per-slot step counts all carry over);
+  (c) detach frees the tenant's adapter/moment memory, and its
+      checkpointed-out adapter round-trips via distributed/checkpoint.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.registry import slice_task_tree
+from repro.core.task import ParallelismSpec
+from repro.data.synthetic import make_task
+from repro.distributed.checkpoint import restore_latest
+from repro.peft.adapters import LORA, AdapterConfig
+from repro.peft.multitask import MultiTaskAdapters
+from repro.serve import (
+    CANCELLED,
+    COMPLETED,
+    AdmissionConfig,
+    AdmissionController,
+    MuxTuneService,
+    QUEUED,
+    RUNNING,
+    WaitQueue,
+)
+
+CFG = smoke_config("llama3.2-3b")
+
+
+def _task(tid: str, ds: str, seed: int, rank: int = 4) -> object:
+    return make_task(tid, ds, 2, AdapterConfig(LORA, rank=rank), seed=seed)
+
+
+def _service(tmp_path=None, **kw) -> MuxTuneService:
+    kw.setdefault("lr", 5e-3)
+    kw.setdefault("n_micro", 1)
+    kw.setdefault("enable_fusion", False)  # one hTask per tenant: churn only
+    kw.setdefault("reserve_slots", 4)      # pre-reserved slots: no growth
+    kw.setdefault("seed", 0)
+    if tmp_path is not None:
+        kw.setdefault("ckpt_dir", str(tmp_path))
+    return MuxTuneService(CFG, ParallelismSpec(), **kw)
+
+
+# ---------------------------------------------------------------------------
+# (b) resident-tenant optimizer parity across re-plan boundaries
+# ---------------------------------------------------------------------------
+
+
+def test_churn_resident_tenant_matches_solo_run(tmp_path):
+    """A arrives first and stays for 8 iterations while B arrives+completes
+    and C arrives+cancels around it (two attaches, two detaches, one of them
+    compacting).  A's per-iteration losses must match a solo A-only service
+    with the same seed — the optimizer-state carry-over proof."""
+    steps = 8
+
+    # --- solo reference
+    solo = _service(tmp_path / "solo")
+    solo.submit(_task("a", "sst2", seed=0), target_steps=steps)
+    solo_losses = []
+    for _ in range(steps):
+        m = solo.step()
+        solo_losses.append(m.per_task_loss[0])
+
+    # --- churn run
+    svc = _service(tmp_path / "churn")
+    svc.submit(_task("a", "sst2", seed=0), target_steps=steps)
+    churn_losses = []
+
+    def tick():
+        gi = [t.task_id for t in svc.plan.tasks].index("a")  # before detach
+        m = svc.step()
+        churn_losses.append(m.per_task_loss[gi])
+
+    tick(); tick()
+    svc.submit(_task("b", "qa", seed=1), target_steps=3)    # re-plan (attach)
+    tick()
+    svc.submit(_task("c", "rte", seed=2), target_steps=50)  # re-plan (attach)
+    tick()
+    svc.cancel("c")                                         # re-plan (detach)
+    tick()                                # b completes here -> detach+compact
+    assert svc.record("b").state == COMPLETED
+    assert svc.record("c").state == CANCELLED
+    assert svc.resident_ids == ["a"]
+    tick(); tick(); tick()
+    assert svc.record("a").state == COMPLETED
+    assert svc.record("a").steps_trained == steps
+
+    np.testing.assert_allclose(churn_losses, solo_losses, rtol=2e-4, atol=2e-4)
+    # churn ran through 4+ re-plans; the signature cache must have reused
+    # A's compiled step across at least one boundary
+    acct = svc.accounting()
+    assert acct["cache_hits"] > 0
+    assert acct["replans"] >= 4
+
+
+# ---------------------------------------------------------------------------
+# (a) admission never violates the memory model
+# ---------------------------------------------------------------------------
+
+
+def test_admission_respects_memory_model(tmp_path):
+    """Budget sized for 2 tenants: the 3rd waits in the queue, every
+    admission event stays under Eq. 5, and the queued tenant is admitted
+    once a resident completes."""
+    probe = AdmissionController(CFG, ParallelismSpec())
+    t_a, t_b, t_c = (_task("a", "sst2", 0), _task("b", "qa", 1),
+                     _task("c", "rte", 2))
+    mem2 = probe.resident_memory([t_a, t_b])
+    mem3 = probe.resident_memory([t_a, t_b, t_c])
+    assert mem3 > mem2
+    budget = (mem2 + mem3) / 2  # 2 tenants fit, 3 do not
+
+    svc = _service(tmp_path, admission=AdmissionConfig(memory_budget=budget))
+    svc.submit(t_a, target_steps=6)
+    svc.submit(t_b, target_steps=2)
+    assert svc.record("a").state == RUNNING
+    assert svc.record("b").state == RUNNING
+    rec_c = svc.submit(t_c, target_steps=2)
+    assert rec_c.state == QUEUED and rec_c.reason == "memory"
+
+    svc.step(); svc.step()      # b completes -> queue drains -> c admitted
+    assert svc.record("b").state == COMPLETED
+    assert svc.record("c").state == RUNNING
+    assert svc.record("c").queue_wait == 2
+    svc.run(max_iters=20)
+    assert svc.record("c").state == COMPLETED
+
+    assert svc.memory_trace, "no admission events recorded"
+    assert max(svc.memory_trace) <= budget
+
+
+def test_queue_full_rejects_and_priority_order():
+    svc = _service(admission=AdmissionConfig(memory_budget=1.0, max_queue=2))
+    r1 = svc.submit(_task("t1", "sst2", 0), priority=0, target_steps=1)
+    r2 = svc.submit(_task("t2", "sst2", 1), priority=5, target_steps=1)
+    r3 = svc.submit(_task("t3", "sst2", 2), priority=1, target_steps=1)
+    assert r1.state == QUEUED and r2.state == QUEUED
+    assert r3.state == "rejected" and "queue_full" in r3.reason
+    # priority order inside the queue
+    items = svc.queue.items()
+    assert [r.task_id for r in items] == ["t2", "t1"]
+
+
+def test_wait_queue_semantics():
+    q = WaitQueue(3)
+    assert q.push("a", 1) and q.push("b", 9) and q.push("c", 1)
+    assert not q.push("d", 99)       # bounded
+    assert q.pop() == "b"            # highest priority first
+    assert q.pop() == "a"            # FIFO within a class
+    removed = q.remove(lambda x: x == "c")
+    assert removed == ["c"] and q.pop() is None
+
+
+# ---------------------------------------------------------------------------
+# (c) detach frees memory; checkpoint round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_complete_frees_memory_and_checkpoint_roundtrips(tmp_path):
+    svc = _service(tmp_path)
+    svc.submit(_task("a", "sst2", 0), target_steps=6)
+    svc.submit(_task("b", "qa", 1), target_steps=2)
+    svc.step()
+
+    reg = svc.gen.registered
+    cap_before = reg.mta.kind_capacity["lora"]
+    assert cap_before == 4  # reserved slots
+    svc.step()  # b completes: checkpoint-out, detach, compact (1/4 <= 0.5)
+
+    rec = svc.record("b")
+    assert rec.state == COMPLETED
+    assert rec.checkpoint_path and os.path.isdir(rec.checkpoint_path)
+
+    # memory physically freed: stacks compacted to the single live tenant,
+    # and the optimizer moments shrank with them
+    reg = svc.gen.registered
+    assert [t.task_id for t in reg.tasks] == ["a"]
+    a_leaf = reg.adapter_params["lora"]["attn_q"]["a"]
+    assert a_leaf.shape[1] == 1, a_leaf.shape
+    m_leaf = reg.opt_state.m["lora"]["attn_q"]["a"]
+    assert m_leaf.shape[1] == 1, m_leaf.shape
+
+    # round-trip via distributed/checkpoint: restore b's adapter artifact
+    like_mta = MultiTaskAdapters(CFG, [AdapterConfig(LORA, rank=4)])
+    like = slice_task_tree(CFG, like_mta, like_mta.init(jax.random.PRNGKey(0)), 0)
+    step, sub, extra = restore_latest(str(tmp_path / "b"), like)
+    assert step == 2 and extra["task_id"] == "b"
+    assert extra["steps_trained"] == 2
+
+    # ...and warm-starting a resubmission loads exactly those values back
+    svc.submit(_task("b", "qa", 99), target_steps=1,
+               warm_start_dir=str(tmp_path / "b"))
+    reg = svc.gen.registered
+    gi = reg.task_index("b")
+    got = slice_task_tree(CFG, reg.mta, reg.adapter_params, gi)
+    for path in (("lora", "attn_q", "a"), ("lora", "attn_v", "b")):
+        g, s = got, sub
+        for k in path:
+            g, s = g[k], s[k]
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(s, np.float32), rtol=1e-6)
+
+
+def test_cancel_queued_and_running(tmp_path):
+    svc = _service(tmp_path)
+    svc.submit(_task("a", "sst2", 0), target_steps=4)
+    svc.step()
+    svc.submit(_task("b", "qa", 1), target_steps=4)
+    svc.cancel("b")
+    assert svc.record("b").state == CANCELLED
+    assert svc.record("b").checkpoint_path is None  # cancel != checkpoint
+    assert svc.resident_ids == ["a"]
+    svc.run(max_iters=10)
+    assert svc.record("a").state == COMPLETED
