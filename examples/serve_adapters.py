@@ -16,7 +16,7 @@ import tempfile
 from repro.configs import smoke_config
 from repro.core.task import ParallelismSpec
 from repro.data.synthetic import make_task
-from repro.peft.adapters import ADAPTER_TUNING, LORA, AdapterConfig
+from repro.peft.adapters import LORA, VERA, AdapterConfig
 from repro.serve import MuxTuneService
 
 
@@ -38,7 +38,9 @@ def main():
           f"(resident: {svc.resident_ids})")
     svc.step()
 
-    svc.submit(make_task("carol", "rte", 1, AdapterConfig(ADAPTER_TUNING, rank=4),
+    # any registered PEFTMethod co-locates: carol brings VeRA (shared
+    # frozen A/B + tiny per-task scaling vectors — multi-tenant friendly)
+    svc.submit(make_task("carol", "rte", 1, AdapterConfig(VERA, rank=4),
                          seed=2), target_steps=8)
     print(f"  t={svc.clock}: carol -> {svc.record('carol').state}")
     svc.step()

@@ -19,7 +19,8 @@ import numpy as np
 
 from repro.configs import ArchConfig
 from repro.core.task import HTask, ParallelismSpec, PEFTTask
-from repro.peft.adapters import adapter_flops_per_token, base_op_dims
+from repro.peft.adapters import base_op_dims, supports_attention_prefix
+from repro.peft.methods import adapter_shared_params, adapter_sites
 
 # TPU v5e-class hardware constants (per chip) — also used by §Roofline.
 PEAK_FLOPS = 197e12       # bf16
@@ -56,7 +57,13 @@ class HardwareProfile:
         return max(flops / (self.peak_flops * u), bytes_moved / self.hbm_bw)
 
     def calibrate(self, name: str, factor: float) -> None:
+        """Install a measured correction factor: per-op name, or the
+        reserved ``"__wall__"`` key — a global analytic->wall-clock scale
+        fitted from StepMetrics (see :func:`calibrate_profile`)."""
         self.calibration[name] = factor
+
+    def wall_scale(self) -> float:
+        return self.calibration.get("__wall__", 1.0)
 
 
 def backbone_ops(cfg: ArchConfig, dtype_bytes: int = 2) -> List[OpCost]:
@@ -110,7 +117,14 @@ class CostModel:
     def __post_init__(self) -> None:
         self._ops = backbone_ops(self.cfg, self.dtype_bytes)
         self._dims = base_op_dims(self.cfg)
+        self._attention_ok = supports_attention_prefix(self.cfg)
         self._layers_per_stage = max(self.cfg.num_layers // self.parallelism.num_stages, 1)
+
+    def task_sites(self, task: PEFTTask):
+        """The task's method-declared attach sites with per-site footprint:
+        (site, d_in, d_out, flops_per_token, trainable_params)."""
+        return adapter_sites(task.adapter, self._dims,
+                             attention=self._attention_ok)
 
     # ------------------------------------------------------------- Eq. (3)
     def stage_latency(self, htask: HTask, stage: int = 0) -> float:
@@ -134,21 +148,19 @@ class CostModel:
             t = self.tasks[k]
             n_k = t.tokens_per_microbatch()
             a_lat = 0.0
-            for name in t.adapter.targets:
-                if name not in self._dims:
-                    continue
-                din, dout = self._dims[name]
-                fl = adapter_flops_per_token(t.adapter.kind, t.adapter.rank, din, dout) * n_k
+            for _site, din, dout, fl_tok, _params in self.task_sites(t):
+                fl = fl_tok * n_k
                 u = self.hw.utilization(fl)
-                a_lat += self.hw.op_latency(fl, n_k * (din + dout) * self.dtype_bytes)
-                fused_sum += u * self.hw.op_latency(fl, n_k * (din + dout) * self.dtype_bytes)
+                site_lat = self.hw.op_latency(fl, n_k * (din + dout) * self.dtype_bytes)
+                a_lat += site_lat
+                fused_sum += u * site_lat
             per_task_max = max(per_task_max, a_lat)
         lat += max(fused_sum, per_task_max)
         # --- intra-stage comm (TP): all-reduce/rs+ag of activations per layer
         if p.tp > 1 and not self.comm_overlapped:
             comm_bytes = 2.0 * n_tokens * self.cfg.d_model * self.dtype_bytes * (p.tp - 1) / p.tp
             lat += 2 * comm_bytes / self.hw.ici_bw  # attn + mlp
-        return lat * self._layers_per_stage
+        return lat * self._layers_per_stage * self.hw.wall_scale()
 
     def stage_latencies(self, htask: HTask) -> List[float]:
         base = self.stage_latency(htask, 0)
@@ -156,7 +168,7 @@ class CostModel:
         # the embedding/unembedding extra
         extra = self.hw.op_latency(
             2.0 * htask.tokens * self.cfg.d_model * 2, htask.tokens * self.cfg.d_model * 2
-        )
+        ) * self.hw.wall_scale()
         out = [base] * self.parallelism.num_stages
         out[-1] += extra
         return out
@@ -176,6 +188,17 @@ class CostModel:
         m_backbone = self.cfg.param_count() * self.dtype_bytes / p.tp
         m_grad = 0.0  # input grads reuse activation buffers (paper: M_g ~ M_a reuse)
         m_act = 0.0
+        # shared (task-axis-free) adapter leaves — e.g. VeRA's frozen A/B —
+        # are real HBM paid ONCE per (kind, site) stack, not per tenant and
+        # not per stage (added outside the m_act * S term below)
+        shared: Dict[Tuple[str, str], float] = {}
+        for h in htasks:
+            for k in h.task_ids:
+                t = self.tasks[k]
+                for site, params in adapter_shared_params(
+                        t.adapter, self._dims,
+                        attention=self._attention_ok).items():
+                    shared[(t.adapter.kind, site)] = params * 4.0
         for h in htasks:
             # activation bytes per micro-batch per stage (flash attention: O(S*d))
             act = h.rows * h.row_len * self.cfg.d_model * self.dtype_bytes
@@ -183,12 +206,79 @@ class CostModel:
             adapters = 0.0
             for k in h.task_ids:
                 t = self.tasks[k]
-                for name in t.adapter.targets:
-                    if name in self._dims:
-                        din, dout = self._dims[name]
-                        adapters += t.adapter.rank * (din + dout) * 4  # f32 optim
+                for _site, _din, _dout, _fl, params in self.task_sites(t):
+                    adapters += params * 4  # f32 optim moments (Eq. 5)
             m_act += act * min(S, 1 + 1) + adapters  # <= S in-flight copies; 1F1B steady ~ S
-        return (m_backbone + m_grad) / 1.0 + m_act * S
+        return (m_backbone + m_grad) / 1.0 + m_act * S + sum(shared.values())
 
     def fits_memory(self, htasks: Sequence[HTask], budget: float = HBM_BYTES) -> bool:
         return self.stage_memory(htasks) <= budget
+
+    def schedule_latency(self, htask_counts: Sequence[Tuple[HTask, int]]) -> float:
+        """Predicted wall time of one engine iteration: the scheduled
+        hTask micro-steps run back-to-back over all stages (the engine's
+        sequential dispatch on one host)."""
+        return sum(n * sum(self.stage_latencies(h)) for h, n in htask_counts)
+
+
+# ---------------------------------------------------------------------------
+# Measured-trace calibration (ROADMAP: admission gate on real hardware)
+# ---------------------------------------------------------------------------
+
+#: one calibration observation: the tasks resident that iteration, the
+#: (hTask, micro-steps) schedule actually executed, and the measured
+#: StepMetrics.wall_seconds
+CalibrationSample = Tuple[Sequence[PEFTTask], Sequence[Tuple[HTask, int]], float]
+
+
+def calibrate_profile(
+    cfg: ArchConfig,
+    parallelism: ParallelismSpec,
+    samples: Sequence[CalibrationSample],
+    base_hw: Optional[HardwareProfile] = None,
+    x_half_grid: Optional[Sequence[float]] = None,
+) -> HardwareProfile:
+    """Fit the analytic profile to measured ``StepMetrics`` wall times.
+
+    Two parameters are fitted jointly:
+
+      * ``util_x_half`` — the saturation knee of the §2.2 utilization curve.
+        This is what the admission gate's latency-inflation RATIO depends
+        on, so calibrating it makes the Fig. 9b saturation gate track the
+        hardware the service actually runs on (a pure global scale would
+        cancel in the ratio).
+      * a global analytic->wall scale, installed via
+        ``HardwareProfile.calibrate("__wall__", s)`` — closed-form least
+        squares through the origin per knee candidate.
+
+    The fitted profile keeps ONLY the ``__wall__`` calibration entry (per-op
+    factors fitted against a different knee would be inconsistent).
+    """
+    base = base_hw or HardwareProfile()
+    if not samples:
+        return base
+    if x_half_grid is None:
+        x_half_grid = [base.util_x_half * f for f in np.logspace(-3.0, 3.0, 13)]
+    best: Optional[Tuple[float, float, float]] = None  # (loss, x_half, scale)
+    meas = np.asarray([wall for _, _, wall in samples], np.float64)
+    for xh in x_half_grid:
+        hw = HardwareProfile(base.peak_flops, base.hbm_bw, base.ici_bw,
+                             float(xh), {})
+        preds = []
+        for tasks, hcounts, _wall in samples:
+            cm = CostModel(cfg, list(tasks), parallelism, hw)
+            preds.append(cm.schedule_latency(hcounts))
+        p = np.asarray(preds, np.float64)
+        denom = float(p @ p)
+        if denom <= 0.0:
+            continue
+        scale = float(p @ meas) / denom
+        loss = float(((meas - scale * p) ** 2).sum())
+        if best is None or loss < best[0]:
+            best = (loss, float(xh), scale)
+    if best is None:
+        return base
+    _, xh, scale = best
+    out = HardwareProfile(base.peak_flops, base.hbm_bw, base.ici_bw, xh, {})
+    out.calibrate("__wall__", scale)
+    return out

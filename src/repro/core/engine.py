@@ -40,6 +40,7 @@ import numpy as np
 from repro.core.planner import ExecutionPlan
 from repro.core.registry import ModelGenerator, RegisteredTasks, _group_depths
 from repro.models.transformer import Model
+from repro.peft.methods import shared_leaf
 from repro.train.optimizer import adamw_update, apply_updates
 
 
@@ -107,15 +108,20 @@ class PEFTEngine:
     def _broadcast_slots(self, vecs: Dict[str, Any]) -> Any:
         """Expand per-kind slot vectors [capacity] into a pytree aligned with
         the adapter params, each leaf reshaped to broadcast along the leaf's
-        task axis.  Works on numpy constants and on traced arrays."""
+        task axis.  Works on numpy constants and on traced arrays.  Leaves a
+        method declares shared (no task axis) get a scalar 0.0 — as a mask
+        or lr-scale that freezes them, which is exactly the optimizer hint
+        the PEFTMethod protocol promises for shared frozen params."""
         mta = self.reg.mta
         depths = _group_depths(self.gen.cfg)
         params = self.reg.adapter_params
 
-        def walk(tree: Any, depth: int, kind: Optional[str] = None):
+        def walk(tree: Any, depth: int, kind: Optional[str] = None, name=None):
             if not isinstance(tree, dict):
                 if kind is None or tree is None or kind not in vecs:
                     return None
+                if name is not None and shared_leaf(kind, name):
+                    return jnp.zeros((), jnp.float32)  # frozen shared leaf
                 v = vecs[kind]
                 shape = [1] * tree.ndim
                 shape[depth] = v.shape[0]
@@ -123,7 +129,7 @@ class PEFTEngine:
             out = {}
             for k, sub in tree.items():
                 nk = k if k in mta.kind_tasks else kind
-                out[k] = walk(sub, depth, nk)
+                out[k] = walk(sub, depth, nk, k)
             return out
 
         if "" in depths:

@@ -127,9 +127,9 @@ def simulate(template: PipelineTemplate, record_spans: bool = False) -> SimResul
         progressed = False
         for s in range(S):
             while ptr[s] < len(instr[s]):
-                kind, i = instr[s][ptr[s]]
+                phase, i = instr[s][ptr[s]]
                 m = micro[i]
-                if kind == "F":
+                if phase == "F":
                     dep = 0.0 if s == 0 else f_done[i, s - 1]
                 else:
                     dep = f_done[i, S - 1] if s == S - 1 else b_done[i, s + 1]
@@ -138,14 +138,14 @@ def simulate(template: PipelineTemplate, record_spans: bool = False) -> SimResul
                 start = max(stage_t[s], dep)
                 dur = f_lat(m, s)  # PEFT: bwd == fwd per stage
                 end = start + dur
-                if kind == "F":
+                if phase == "F":
                     f_done[i, s] = end
                 else:
                     b_done[i, s] = end
                 stage_t[s] = end
                 busy[s] += dur
                 if record_spans:
-                    spans[s].append((start, end, f"{kind}{m.bucket}.{m.index}"))
+                    spans[s].append((start, end, f"{phase}{m.bucket}.{m.index}"))
                 ptr[s] += 1
                 remaining -= 1
                 progressed = True

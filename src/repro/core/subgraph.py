@@ -27,7 +27,7 @@ import numpy as np
 from repro.configs import ArchConfig
 from repro.core.cost_model import CostModel, HardwareProfile
 from repro.core.task import HTask, ParallelismSpec
-from repro.peft.adapters import adapter_flops_per_token, base_op_dims
+from repro.peft.adapters import base_op_dims
 
 
 @dataclass
@@ -38,6 +38,14 @@ class OpNode:
     latency: float
     task: int          # owning hTask index
     deps: Tuple[int, ...] = ()
+
+    @property
+    def is_comm(self) -> bool:
+        return self.kind in ("comm",)
+
+    @property
+    def is_adapter(self) -> bool:
+        return self.kind in ("adapter",)
 
 
 @dataclass
@@ -54,7 +62,7 @@ class Subgraph:
 
     @property
     def comm_latency(self) -> float:
-        return sum(n.latency for n in self.nodes if n.kind == "comm")
+        return sum(n.latency for n in self.nodes if n.is_comm)
 
     @property
     def compute_latency(self) -> float:
@@ -62,7 +70,7 @@ class Subgraph:
 
     @property
     def has_comm(self) -> bool:
-        return any(n.kind == "comm" for n in self.nodes)
+        return any(n.is_comm for n in self.nodes)
 
 
 def build_stage_dag(
@@ -120,15 +128,11 @@ def build_stage_dag(
 
 def _adapter_latency(cfg: ArchConfig, htask: HTask, cm: CostModel) -> float:
     lat = 0.0
-    dims = base_op_dims(cfg)
     for k in htask.task_ids:
         t = cm.tasks[k]
-        for name in t.adapter.targets:
-            if name in dims:
-                din, dout = dims[name]
-                fl = adapter_flops_per_token(t.adapter.kind, t.adapter.rank, din, dout)
-                lat += cm.hw.op_latency(fl * t.tokens_per_microbatch(),
-                                        t.tokens_per_microbatch() * (din + dout) * 2)
+        for _site, din, dout, fl_tok, _params in cm.task_sites(t):
+            lat += cm.hw.op_latency(fl_tok * t.tokens_per_microbatch(),
+                                    t.tokens_per_microbatch() * (din + dout) * 2)
     return lat
 
 
@@ -146,10 +150,10 @@ def segment_dag(nodes: Sequence[OpNode], sid_start: int = 0) -> List[Subgraph]:
             cur = []
 
     for n in nodes:
-        if n.kind == "adapter":
+        if n.is_adapter:
             flush()
             subs.append(Subgraph(next(sid), n.task, [n]))
-        elif n.kind == "comm":
+        elif n.is_comm:
             # a comm op closes the subgraph of its dependent compute run
             cur.append(n)
             flush()
@@ -182,12 +186,12 @@ def fuse_adapters(subgraphs_per_task: Sequence[List[Subgraph]]) -> List[List[Sub
         return out
     base = out[0]
     for i, s in enumerate(base):
-        if len(s.nodes) == 1 and s.nodes[0].kind == "adapter" and not s.has_comm:
+        if len(s.nodes) == 1 and s.nodes[0].is_adapter and not s.has_comm:
             partners = []
             for other in out[1:]:
                 if i < len(other):
                     o = other[i]
-                    if len(o.nodes) == 1 and o.nodes[0].kind == "adapter" and not o.has_comm:
+                    if len(o.nodes) == 1 and o.nodes[0].is_adapter and not o.has_comm:
                         partners.append(o.sid)
             s.fused_with = tuple(partners)
     return out

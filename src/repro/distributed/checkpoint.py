@@ -50,7 +50,7 @@ def save_checkpoint(directory: str, step: int, tree: Any, extra: Optional[Dict] 
     for i, (key, leaf) in enumerate(flat):
         arr = np.asarray(leaf)
         orig_dtype = str(arr.dtype)
-        if arr.dtype.kind == "V" or orig_dtype in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
+        if arr.dtype.kind in ("V",) or orig_dtype in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
             # numpy can't serialize ml_dtypes natively; widen losslessly
             arr = np.asarray(leaf, dtype=np.float32)
         fname = f"leaf_{i:05d}.npy"

@@ -23,6 +23,10 @@ The Pallas grouped_lora / packed_attention paths carry ``jax.custom_vjp``
 backward kernels (see the kernel modules), so ``set_impl("pallas")`` /
 ``set_impl("pallas_interpret")`` work under ``jax.value_and_grad`` — the
 training hot loop exercises the §3.4.3 grouped kernels end-to-end.
+``packed_attention`` additionally accepts learned PREFIX k/v rows
+(soft-prompt PEFT): extra leading segment rows with wildcard segment ids on
+the Pallas tiers, an online-softmax carry init on the XLA tier — both
+differentiable, with per-row gating.
 ``mamba_scan``'s Pallas tier is still forward-only (serving/prefill): a
 chunk-parallel backward kernel is an open ROADMAP item; train zamba2/xlstm
 cells on the ``xla`` path meanwhile.
@@ -114,23 +118,77 @@ def packed_attention(
     positions: Optional[jax.Array] = None,
     causal: bool = True,
     *,
+    prefix_kv: Optional[tuple] = None,   # (pk, pv): [B, P, Hkv, dh] each
+    prefix_keep: Optional[jax.Array] = None,  # [B, P] 1.0 = row owns prefix
     block_q: int = 128,
     block_k: int = 128,
 ) -> jax.Array:
+    """Segment-masked flash attention; optionally with learned per-task
+    PREFIX k/v rows (soft-prompt PEFT, §3.2).  A prefix row is visible to
+    every query of its batch row — across the row's packed segments,
+    regardless of causal position — iff ``prefix_keep`` gates it on.  On the
+    XLA tier the prefix folds into the online-softmax carry init; on the
+    Pallas tiers it enters the kernel as extra leading k/v segment rows with
+    wildcard segment ids."""
     impl = _IMPL.name
     if impl == "xla":
         from repro.models.attention import flash_attention_pairs
 
+        pref = None
+        if prefix_kv is not None:
+            pk, pv = prefix_kv
+            keep = prefix_keep if prefix_keep is not None else jnp.ones(
+                pk.shape[:2], jnp.float32)
+            pref = (pk, pv, keep)
         return flash_attention_pairs(
             q, k, v, block=block_q, causal=causal,
-            segment_ids=segment_ids, positions=positions,
+            segment_ids=segment_ids, positions=positions, kv_prefix=pref,
         )
     from repro.kernels.packed_attention import packed_attention_pallas
 
+    interpret = impl == "pallas_interpret"
+    if prefix_kv is None:
+        return packed_attention_pallas(
+            q, k, v, segment_ids=segment_ids, positions=positions,
+            causal=causal, block_q=block_q, block_k=block_k,
+            interpret=interpret,
+        )
+    import math
+
+    B, S = q.shape[0], q.shape[1]
+    pk, pv = prefix_kv
+    P = pk.shape[1]
+    keep = prefix_keep if prefix_keep is not None else jnp.ones(
+        (B, P), jnp.float32)
+    # Pad the prefix rows up to a tile-friendly count: block_k must divide
+    # S + P, and an unpadded P (e.g. 8 on S=512) would collapse the k-tile
+    # to gcd(S + P, block_k) and multiply kernel grid steps.  Pad rows are
+    # gated off (kseg = -2 matches no query), so they are pure masked work.
+    unit = math.gcd(math.gcd(S, block_k), 64)
+    if math.gcd(S + P, block_k) < min(unit, 32):
+        pad = (-P) % unit
+        pk = jnp.pad(pk, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pv = jnp.pad(pv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        keep = jnp.pad(keep, ((0, 0), (0, pad)))
+        P += pad
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if segment_ids is None:
+        segment_ids = jnp.zeros((B, S), jnp.int32)
+    # prefix rows: position -1 (always causally visible), segment -1 when the
+    # row's task owns the prefix (wildcard: matches every query segment) and
+    # -2 otherwise (matches none) — the kernel's extra-segment-row contract.
+    k_full = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+    v_full = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+    k_positions = jnp.concatenate(
+        [jnp.full((B, P), -1, jnp.int32), positions.astype(jnp.int32)], axis=1)
+    k_segment_ids = jnp.concatenate(
+        [jnp.where(keep > 0, -1, -2).astype(jnp.int32),
+         segment_ids.astype(jnp.int32)], axis=1)
     return packed_attention_pallas(
-        q, k, v, segment_ids=segment_ids, positions=positions, causal=causal,
-        block_q=block_q, block_k=block_k,
-        interpret=(impl == "pallas_interpret"),
+        q, k_full, v_full, segment_ids=segment_ids, positions=positions,
+        causal=causal, k_segment_ids=k_segment_ids, k_positions=k_positions,
+        block_q=block_q, block_k=block_k, interpret=interpret,
     )
 
 

@@ -50,7 +50,10 @@ def _tile_mask(qpos, kpos, qseg, kseg, causal, block_q, block_k):
     mask = jnp.ones((block_q, block_k), bool)
     if causal:
         mask &= qpos[:, None] >= kpos[None, :]
-    mask &= qseg[:, None] == kseg[None, :]
+    # wildcard k rows: kseg == -1 matches EVERY query segment (learned
+    # prefix-tuning k/v rows, gated per batch row); any other negative kseg
+    # matches none (prefix rows of tasks the row does not belong to)
+    mask &= (qseg[:, None] == kseg[None, :]) | (kseg[None, :] == -1)
     return mask
 
 
@@ -70,6 +73,7 @@ def _fwd_kernel(
     block_q: int,
     block_k: int,
     save_lse: bool,
+    k_offset: int = 0,
 ):
     m_ref, l_ref, acc_ref = rest[-3:]
     i = pl.program_id(1)
@@ -82,7 +86,8 @@ def _fwd_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     # causal frontier: skip tiles strictly above the diagonal band
-    run = (not causal) or (j * block_k <= (i + 1) * block_q - 1)
+    # (k_offset = leading always-visible k rows, e.g. learned prefixes)
+    run = (not causal) or (j * block_k <= (i + 1) * block_q - 1 + k_offset)
     should_run = jnp.asarray(True) if run is True else jnp.asarray(run)
 
     @pl.when(should_run)
@@ -135,6 +140,7 @@ def _dq_kernel(
     scale: float,
     block_q: int,
     block_k: int,
+    k_offset: int = 0,
 ):
     i = pl.program_id(1)
     j = pl.program_id(2)
@@ -146,7 +152,7 @@ def _dq_kernel(
         d_ref[...] = (do * o).sum(axis=-1)
         dq_acc[...] = jnp.zeros_like(dq_acc)
 
-    run = (not causal) or (j * block_k <= (i + 1) * block_q - 1)
+    run = (not causal) or (j * block_k <= (i + 1) * block_q - 1 + k_offset)
     should_run = jnp.asarray(True) if run is True else jnp.asarray(run)
 
     @pl.when(should_run)
@@ -190,6 +196,7 @@ def _dkv_kernel(
     scale: float,
     block_q: int,
     block_k: int,
+    k_offset: int = 0,
 ):
     j = pl.program_id(1)
     i = pl.program_id(2)
@@ -199,7 +206,7 @@ def _dkv_kernel(
         dk_acc[...] = jnp.zeros_like(dk_acc)
         dv_acc[...] = jnp.zeros_like(dv_acc)
 
-    run = (not causal) or ((i + 1) * block_q - 1 >= j * block_k)
+    run = (not causal) or ((i + 1) * block_q - 1 + k_offset >= j * block_k)
     should_run = jnp.asarray(True) if run is True else jnp.asarray(run)
 
     @pl.when(should_run)
@@ -267,12 +274,12 @@ def _specs(H, G, block_q, block_k, dh, *, kv_major):
     }
 
 
-def _fwd_call(q, k, v, positions, segment_ids, causal, block_q, block_k,
-              interpret, save_lse):
+def _fwd_call(q, k, v, positions, segment_ids, k_positions, k_segment_ids,
+              causal, block_q, block_k, interpret, save_lse):
     B, S, H, dh = q.shape
-    Hkv = k.shape[2]
+    Sk, Hkv = k.shape[1], k.shape[2]
     G = H // Hkv
-    n_q, n_k = S // block_q, S // block_k
+    n_q, n_k = S // block_q, Sk // block_k
     sp = _specs(H, G, block_q, block_k, dh, kv_major=False)
 
     out_shape = [jax.ShapeDtypeStruct(q.shape, q.dtype)]
@@ -285,6 +292,7 @@ def _fwd_call(q, k, v, positions, segment_ids, causal, block_q, block_k,
         functools.partial(
             _fwd_kernel, n_k=n_k, causal=causal, scale=1.0 / np.sqrt(dh),
             block_q=block_q, block_k=block_k, save_lse=save_lse,
+            k_offset=Sk - S,
         ),
         grid=(B * H, n_q, n_k),
         in_specs=[sp["q"], sp["k"], sp["k"],
@@ -298,23 +306,24 @@ def _fwd_call(q, k, v, positions, segment_ids, causal, block_q, block_k,
         ],
         interpret=interpret,
     )
-    out = fn(q, k, v, positions, positions, segment_ids, segment_ids)
+    out = fn(q, k, v, positions, k_positions, segment_ids, k_segment_ids)
     return out if save_lse else out[0]
 
 
-def _bwd_call(q, k, v, positions, segment_ids, o, lse, do, causal,
-              block_q, block_k, interpret):
+def _bwd_call(q, k, v, positions, segment_ids, k_positions, k_segment_ids,
+              o, lse, do, causal, block_q, block_k, interpret):
     B, S, H, dh = q.shape
-    Hkv = k.shape[2]
+    Sk, Hkv = k.shape[1], k.shape[2]
     G = H // Hkv
-    n_q, n_k = S // block_q, S // block_k
+    n_q, n_k = S // block_q, Sk // block_k
     scale = 1.0 / np.sqrt(dh)
+    k_offset = Sk - S
 
     sp = _specs(H, G, block_q, block_k, dh, kv_major=False)
     dq = pl.pallas_call(
         functools.partial(
             _dq_kernel, n_k=n_k, causal=causal, scale=scale,
-            block_q=block_q, block_k=block_k,
+            block_q=block_q, block_k=block_k, k_offset=k_offset,
         ),
         grid=(B * H, n_q, n_k),
         in_specs=[sp["q"], sp["k"], sp["k"],
@@ -327,7 +336,7 @@ def _bwd_call(q, k, v, positions, segment_ids, o, lse, do, causal,
             pltpu.VMEM((block_q, dh), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v, positions, positions, segment_ids, segment_ids, do, o, lse)
+    )(q, k, v, positions, k_positions, segment_ids, k_segment_ids, do, o, lse)
 
     sp = _specs(H, G, block_q, block_k, dh, kv_major=True)
     # dk/dv are accumulated per QUERY head (block written once per (bh, j))
@@ -338,7 +347,7 @@ def _bwd_call(q, k, v, positions, segment_ids, o, lse, do, causal,
     dkq, dvq = pl.pallas_call(
         functools.partial(
             _dkv_kernel, n_q=n_q, causal=causal, scale=scale,
-            block_q=block_q, block_k=block_k,
+            block_q=block_q, block_k=block_k, k_offset=k_offset,
         ),
         grid=(B * H, n_k, n_q),
         in_specs=[sp["q"], sp["k"], sp["k"],
@@ -346,42 +355,48 @@ def _bwd_call(q, k, v, positions, segment_ids, o, lse, do, causal,
                   sp["q"], sp["q"], sp["lse"]],
         out_specs=[dkq_spec, dkq_spec],
         out_shape=[
-            jax.ShapeDtypeStruct((B, S, H, dh), jnp.float32),
-            jax.ShapeDtypeStruct((B, S, H, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, Sk, H, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, Sk, H, dh), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((block_k, dh), jnp.float32),
             pltpu.VMEM((block_k, dh), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v, positions, positions, segment_ids, segment_ids, do, o, lse)
+    )(q, k, v, positions, k_positions, segment_ids, k_segment_ids, do, o, lse)
 
-    dk = dkq.reshape(B, S, Hkv, G, dh).sum(axis=3).astype(k.dtype)
-    dv = dvq.reshape(B, S, Hkv, G, dh).sum(axis=3).astype(v.dtype)
+    dk = dkq.reshape(B, Sk, Hkv, G, dh).sum(axis=3).astype(k.dtype)
+    dv = dvq.reshape(B, Sk, Hkv, G, dh).sum(axis=3).astype(v.dtype)
     return dq, dk, dv
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
-def _packed_attention(q, k, v, positions, segment_ids, causal, block_q,
-                      block_k, interpret):
-    return _fwd_call(q, k, v, positions, segment_ids, causal, block_q,
-                     block_k, interpret, save_lse=False)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10))
+def _packed_attention(q, k, v, positions, segment_ids, k_positions,
+                      k_segment_ids, causal, block_q, block_k, interpret):
+    return _fwd_call(q, k, v, positions, segment_ids, k_positions,
+                     k_segment_ids, causal, block_q, block_k, interpret,
+                     save_lse=False)
 
 
-def _packed_attention_fwd(q, k, v, positions, segment_ids, causal, block_q,
-                          block_k, interpret):
-    o, lse = _fwd_call(q, k, v, positions, segment_ids, causal, block_q,
-                       block_k, interpret, save_lse=True)
-    return o, (q, k, v, positions, segment_ids, o, lse)
+def _packed_attention_fwd(q, k, v, positions, segment_ids, k_positions,
+                          k_segment_ids, causal, block_q, block_k, interpret):
+    o, lse = _fwd_call(q, k, v, positions, segment_ids, k_positions,
+                       k_segment_ids, causal, block_q, block_k, interpret,
+                       save_lse=True)
+    return o, (q, k, v, positions, segment_ids, k_positions, k_segment_ids,
+               o, lse)
 
 
 def _packed_attention_bwd(causal, block_q, block_k, interpret, res, do):
-    q, k, v, positions, segment_ids, o, lse = res
-    dq, dk, dv = _bwd_call(q, k, v, positions, segment_ids, o, lse, do,
-                           causal, block_q, block_k, interpret)
+    q, k, v, positions, segment_ids, k_positions, k_segment_ids, o, lse = res
+    dq, dk, dv = _bwd_call(q, k, v, positions, segment_ids, k_positions,
+                           k_segment_ids, o, lse, do, causal, block_q,
+                           block_k, interpret)
     dpos = np.zeros(positions.shape, jax.dtypes.float0)
     dseg = np.zeros(segment_ids.shape, jax.dtypes.float0)
-    return dq, dk, dv, dpos, dseg
+    dkpos = np.zeros(k_positions.shape, jax.dtypes.float0)
+    dkseg = np.zeros(k_segment_ids.shape, jax.dtypes.float0)
+    return dq, dk, dv, dpos, dseg, dkpos, dkseg
 
 
 _packed_attention.defvjp(_packed_attention_fwd, _packed_attention_bwd)
@@ -389,24 +404,38 @@ _packed_attention.defvjp(_packed_attention_fwd, _packed_attention_bwd)
 
 def packed_attention_pallas(
     q: jax.Array,  # [B, S, H, dh]
-    k: jax.Array,  # [B, S, Hkv, dh]
+    k: jax.Array,  # [B, Sk, Hkv, dh] (Sk >= S: leading rows may be prefixes)
     v: jax.Array,
     segment_ids: Optional[jax.Array] = None,  # [B, S]
     positions: Optional[jax.Array] = None,    # [B, S]
     causal: bool = True,
     *,
+    k_segment_ids: Optional[jax.Array] = None,  # [B, Sk]; -1 = wildcard row
+    k_positions: Optional[jax.Array] = None,    # [B, Sk]
     block_q: int = 128,
     block_k: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
+    """Packed flash attention; the k/v sequence may carry ``Sk - S`` extra
+    leading rows (learned prefix-tuning k/v) with their own segment ids:
+    ``k_segment_ids == -1`` marks a row visible to EVERY query of the batch
+    row, any other negative value a row visible to none."""
     B, S, H, dh = q.shape
+    Sk = k.shape[1]
     block_q = math.gcd(S, min(block_q, S))
-    block_k = math.gcd(S, min(block_k, S))
+    block_k = math.gcd(Sk, min(block_k, Sk))
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     if segment_ids is None:
         segment_ids = jnp.zeros((B, S), jnp.int32)
+    if k_positions is None:
+        assert Sk == S, "k-side positions required when Sk != S"
+        k_positions = positions
+    if k_segment_ids is None:
+        assert Sk == S, "k-side segment ids required when Sk != S"
+        k_segment_ids = segment_ids
     return _packed_attention(
         q, k, v, positions.astype(jnp.int32), segment_ids.astype(jnp.int32),
+        k_positions.astype(jnp.int32), k_segment_ids.astype(jnp.int32),
         causal, block_q, block_k, interpret,
     )

@@ -171,9 +171,10 @@ def lower_cell(
     pshard = S.param_shardings(model, mesh, rules)
     pspecs = model.abstract_params()
 
+    role = kind
     with_pos = model.attn_mode == "striped_cp"
     with activate_rules(mesh, rules):
-        if kind == "train":
+        if role == "train":
             mta, seg = S.dryrun_tasks(cfg, shape, n_tasks=n_tasks)
             ad_specs = mta.abstract()
             ad_shard = S.adapter_shardings(mta, mesh, rules)
@@ -186,7 +187,7 @@ def lower_cell(
             fn = jax.jit(step, in_shardings=(pshard, ad_shard, opt_shard, bshard),
                          donate_argnums=(1, 2))
             lowered = fn.lower(pspecs, ad_specs, opt_specs, bspecs)
-        elif kind == "prefill":
+        elif role == "prefill":
             bspecs = S.batch_specs(cfg, shape, with_labels=False, with_positions=with_pos)
             bshard = S.batch_shardings(bspecs, mesh, rules)
             step = S.build_prefill_step(model)

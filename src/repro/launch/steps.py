@@ -44,7 +44,8 @@ BATCH_AXES: Dict[str, Tuple] = {
 def batch_specs(cfg: ArchConfig, shape: ShapeSpec, with_labels: bool = True,
                 with_positions: bool = False) -> Dict[str, jax.ShapeDtypeStruct]:
     B, S = shape.global_batch, shape.seq_len
-    if shape.kind == "decode":
+    role = shape.kind
+    if role == "decode":
         return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
     specs = {
         "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
@@ -52,7 +53,7 @@ def batch_specs(cfg: ArchConfig, shape: ShapeSpec, with_labels: bool = True,
     if with_positions:
         # striped-CP layout: global positions travel with the data
         specs["positions"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
-    if with_labels and shape.kind == "train":
+    if with_labels and role == "train":
         specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
         specs["loss_mask"] = jax.ShapeDtypeStruct((B, S), jnp.float32)
     if cfg.mrope:
@@ -127,17 +128,21 @@ def opt_shardings(opt_abstract: AdamWState, mesh: Mesh,
         axes[depth] = "adapter_tasks"
         return NamedSharding(mesh, logical_to_spec(axes, r))
 
-    def walk(tree, depth, kind=None):
+    def walk(tree, depth, kind=None, name=None):
         if not isinstance(tree, dict):
             if tree is None:
                 return None  # non-float leaf: stays an empty pytree node
             if kind is None:
                 return rep
+            from repro.peft.methods import shared_leaf
+
+            if name is not None and shared_leaf(kind, name):
+                return rep  # no task axis to slice: replicate
             return leaf_sharding(tree, depth)
         out = {}
         for k, v in tree.items():
             nk = k if k in mta.kind_tasks else kind
-            out[k] = walk(v, depth, nk)
+            out[k] = walk(v, depth, nk, k)
         return out
 
     def moments(tree):

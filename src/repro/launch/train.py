@@ -22,17 +22,18 @@ from repro.configs import get_config, smoke_config
 from repro.core import ExecutionPlanner, ModelGenerator, ParallelismSpec, PEFTEngine
 from repro.data import HTaskLoader, make_task
 from repro.distributed.fault_tolerance import SupervisorConfig, TrainSupervisor
-from repro.peft.adapters import ADAPTER_TUNING, DIFF_PRUNING, IA3, LORA, AdapterConfig
-
-KIND_MAP = {"lora": LORA, "adapter": ADAPTER_TUNING, "diff": DIFF_PRUNING, "ia3": IA3}
+from repro.peft.adapters import LORA, AdapterConfig
+from repro.peft.methods import resolve_kind
 
 
 def parse_tasks(spec: str, micro_batch: int):
+    """``ds[:kind[:rank]]`` per task — any registered PEFT method name
+    (lora, adapter, diff, ia3, prefix, dora, vera, bitfit, ...) works."""
     tasks = []
     for i, part in enumerate(spec.split(",")):
         bits = part.split(":")
         ds = bits[0]
-        kind = KIND_MAP[bits[1]] if len(bits) > 1 else LORA
+        kind = resolve_kind(bits[1]) if len(bits) > 1 else LORA
         rank = int(bits[2]) if len(bits) > 2 else 8
         tasks.append(make_task(f"task{i}-{ds}", ds, micro_batch,
                                AdapterConfig(kind, rank=rank), seed=i))

@@ -87,6 +87,23 @@ def _fit_block(S: int, want: int) -> int:
     return best
 
 
+def _prefix_carry(q5, kv_prefix, scale):
+    """Initial online-softmax carry from learned prefix k/v rows (§3.2 real
+    prefix-tuning): every query attends the gated prefix rows regardless of
+    causal position or packed segment, so the prefix contribution is exactly
+    an extra (always-visible) kv block folded in before the scan."""
+    pk, pv, keep = kv_prefix  # [B, P, Hkv, dh], [B, P, Hkv, dh], [B, P]
+    s = jnp.einsum("bskgd,bpkd->bskgp", q5.astype(jnp.float32),
+                   pk.astype(jnp.float32)) * scale
+    live = (keep > 0)[:, None, None, None, :]
+    s = jnp.where(live, s, NEG_INF)
+    m0 = s.max(axis=-1)                       # [B, S, Hkv, G]
+    p = jnp.where(live, jnp.exp(s - m0[..., None]), 0.0)
+    l0 = p.sum(axis=-1)
+    o0 = jnp.einsum("bskgp,bpkd->bskgd", p, pv.astype(jnp.float32))
+    return o0, m0, l0
+
+
 def flash_attention_pairs(
     q: jax.Array,  # [B, S, H, dh]
     k: jax.Array,  # [B, S, Hkv, dh]
@@ -96,6 +113,7 @@ def flash_attention_pairs(
     causal: bool = True,
     segment_ids: Optional[jax.Array] = None,  # [B, S]
     positions: Optional[jax.Array] = None,  # [B, S] (packed: within-segment)
+    kv_prefix=None,  # (pk [B,P,Hkv,dh], pv [B,P,Hkv,dh], keep [B,P])
 ) -> jax.Array:
     B, S, H, dh = q.shape
     Hkv = k.shape[2]
@@ -112,9 +130,16 @@ def flash_attention_pairs(
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     posb = positions.reshape(B, n, blk)
 
-    o = jnp.zeros((B, n, blk, Hkv, G, dh), jnp.float32)
-    m = jnp.full((B, n, blk, Hkv, G), NEG_INF, jnp.float32)
-    l = jnp.zeros((B, n, blk, Hkv, G), jnp.float32)
+    if kv_prefix is not None:
+        q5 = q.reshape(B, S, Hkv, G, dh)
+        o0, m0, l0 = _prefix_carry(q5, kv_prefix, scale)
+        o = o0.reshape(B, n, blk, Hkv, G, dh)
+        m = m0.reshape(B, n, blk, Hkv, G)
+        l = l0.reshape(B, n, blk, Hkv, G)
+    else:
+        o = jnp.zeros((B, n, blk, Hkv, G, dh), jnp.float32)
+        m = jnp.full((B, n, blk, Hkv, G), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, n, blk, Hkv, G), jnp.float32)
 
     pairs = jnp.asarray(_block_pairs(n, n, causal, 1))
 
@@ -173,6 +198,7 @@ def flash_attention_kvscan(
     causal: bool = True,
     segment_ids: Optional[jax.Array] = None,
     positions: Optional[jax.Array] = None,  # [B, S]
+    kv_prefix=None,  # (pk [B,P,Hkv,dh], pv [B,P,Hkv,dh], keep [B,P])
 ) -> jax.Array:
     B, S, H, dh = q.shape
     Sk, Hkv = k.shape[1], k.shape[2]
@@ -193,9 +219,12 @@ def flash_attention_kvscan(
     kposb = k_positions.reshape(B, n, blk)
     segb = segment_ids.reshape(B, n, blk) if segment_ids is not None else None
 
-    o = jnp.zeros((B, S, Hkv, G, dh), jnp.float32)
-    m = jnp.full((B, S, Hkv, G), NEG_INF, jnp.float32)
-    l = jnp.zeros((B, S, Hkv, G), jnp.float32)
+    if kv_prefix is not None:
+        o, m, l = _prefix_carry(q5, kv_prefix, scale)
+    else:
+        o = jnp.zeros((B, S, Hkv, G, dh), jnp.float32)
+        m = jnp.full((B, S, Hkv, G), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, S, Hkv, G), jnp.float32)
 
     def step(carry, j):
         o, m, l = carry
@@ -300,7 +329,22 @@ def attention_apply(
         out = flash_attention_kvscan(q, k, v, kv_block=cfg.attn_kv_block, causal=False)
         from repro.peft.hooks import apply_base_op
         return apply_base_op("attn_o", out, p["w_o"], "bshk,hkd->bsd", bias=p.get("b_o"))
+    # Soft-prompt PEFT: the active adapter context may carry learned per-row
+    # k/v prefix rows for this layer (real prefix-tuning, §3.2).
+    from repro.peft.hooks import active_context
+
+    adapter_ctx = active_context()
+    prefix = adapter_ctx.attn_prefix() if adapter_ctx is not None else None
+    if prefix is not None:
+        pk, pv, keep = prefix  # [B, P, kv_dim] pair + [B, P] row gate
+        hkv, dh_ = cfg.num_kv_heads, cfg.resolved_head_dim()
+        P = pk.shape[1]
+        prefix = (pk.reshape(B, P, hkv, dh_).astype(k.dtype),
+                  pv.reshape(B, P, hkv, dh_).astype(v.dtype), keep)
     if mode == "striped_cp":
+        if prefix is not None:
+            raise NotImplementedError(
+                "prefix-tuning is not supported under striped-CP attention")
         # §Perf: exact-causal load-balanced CP (striped seq layout inputs)
         from repro.distributed.sharding import active_rules
         from repro.models.cp_attention import striped_cp_attention
@@ -330,6 +374,8 @@ def attention_apply(
         out = kops.packed_attention(
             q, k, v, causal=causal, block_q=cfg.attn_q_block,
             segment_ids=segment_ids, positions=positions if causal else None,
+            prefix_kv=prefix[:2] if prefix is not None else None,
+            prefix_keep=prefix[2] if prefix is not None else None,
         )
         out = shard(out, "batch", None, "heads", None)
     else:  # kvscan (CP): q stays seq-sharded, kv gathered
@@ -339,6 +385,7 @@ def attention_apply(
         out = flash_attention_kvscan(
             q, k, v, kv_block=cfg.attn_kv_block, causal=causal,
             segment_ids=segment_ids, positions=positions if causal else None,
+            kv_prefix=prefix,
         )
         out = shard(out, "batch", "seq", None, None)
     from repro.peft.hooks import apply_base_op

@@ -44,6 +44,8 @@ def materialize(spec_tree, key: jax.Array):
             return jnp.zeros(spec.shape, dt)
         if spec.init == "ones":
             return jnp.ones(spec.shape, dt)
+        if spec.init == "const":  # constant fill at ``scale`` (e.g. VeRA d=0.1)
+            return jnp.full(spec.shape, spec.scale, dt)
         return (jax.random.normal(k, spec.shape, jnp.float32) * spec.scale).astype(dt)
 
     return jax.tree.unflatten(treedef, [one(s, k) for s, k in zip(leaves, keys)])

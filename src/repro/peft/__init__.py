@@ -1,10 +1,53 @@
-from repro.peft.hooks import adapter_scope, apply_base_op  # noqa: F401
+"""Unified PEFT layer: method registry + stacked multi-task adapters.
+
+New API (PR 3): ``repro.peft.methods`` — a :class:`PEFTMethod` protocol +
+registry; each method declares its ParamSpecs, Dispatch/Aggregate rules,
+Eq. 5 footprint, optimizer hints and checkpoint schema.  Legacy names
+(``KINDS``, kind constants, ``adapter_spec``...) keep working through the
+deprecation shim in :mod:`repro.peft.adapters`.
+"""
+from repro.peft.hooks import (  # noqa: F401
+    AdapterContext,
+    adapter_scope,
+    apply_base_op,
+)
 from repro.peft.adapters import (  # noqa: F401
+    ADAPTER_TUNING,
+    BITFIT,
+    DEFAULT_TARGETS,
+    DIFF_PRUNING,
+    DORA,
+    IA3,
+    LORA,
+    PREFIX_TUNING,
+    VERA,
     AdapterConfig,
     adapter_spec,
-    LORA,
-    ADAPTER_TUNING,
-    DIFF_PRUNING,
-    PREFIX_TUNING,
+    base_op_dims,
+    supports_attention_prefix,
+)
+from repro.peft.methods import (  # noqa: F401
+    ApplyContext,
+    PEFTMethod,
+    adapter_sites,
+    get_method,
+    method_names,
+    register_method,
+    resolve_kind,
 )
 from repro.peft.multitask import MultiTaskAdapters, TaskSegments  # noqa: F401
+
+
+def __getattr__(name):
+    if name == "KINDS":
+        # dynamic: reflects every registered method (shim-compatible)
+        return method_names()
+    if name in ("adapter_param_count", "adapter_flops_per_token"):
+        from repro.peft import adapters as _shim
+        return getattr(_shim, name)
+    raise AttributeError(
+        f"module 'repro.peft' has no attribute {name!r}. The PEFT method "
+        f"API moved to repro.peft.methods (PR 3): get_method(kind) returns "
+        f"the PEFTMethod plugin (param_specs / apply / param_count / "
+        f"flops_per_token / checkpoint_schema); register_method(...) adds "
+        f"new methods. Registered: {', '.join(method_names())}.")

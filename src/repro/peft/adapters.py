@@ -1,31 +1,50 @@
-"""PEFT adapter types and their unified parameter declarations (§2.1, §3.2).
+"""Adapter config + BaseOp dims + the PR-3 deprecation shim (§2.1, §3.2).
 
-Three categories from the paper (Fig. 2) + one bonus:
-  * Reparameterized — LoRA [Hu et al.]: y += (x A) B * alpha/r
-  * Additive        — Adapter-Tuning [Houlsby et al.]: y += U(gelu(D(y)))
-  * Selective       — Diff-Pruning [Guo et al.], structured-row variant:
-                      y += x[:, rows] @ delta   (mask fixed, delta learned)
-  * IA3-style scaling (bonus): y *= (1 + s)
+The unified PEFT representation now lives in ``repro.peft.methods``: each
+method is a :class:`~repro.peft.methods.base.PEFTMethod` plugin declaring
+its ParamSpecs, Dispatch/Aggregate rules, Eq. 5 footprint, optimizer hints
+and checkpoint schema.  This module keeps:
 
-Each type is declared through the same quad: BaseOp target names, adapter
-ParamSpecs, and Dispatch/Aggregate rules realized in
-``repro.peft.multitask`` (grouped, spatially-fused application).
+  * :class:`AdapterConfig` — the per-task adapter hyperparams (kind names
+    resolve through the method registry, legacy aliases included);
+  * :func:`base_op_dims` — the architecture-level (d_in, d_out) inventory
+    of adapter-capable BaseOps (method-agnostic);
+  * legacy constants (``LORA``...) and thin deprecated wrappers
+    (``adapter_spec`` etc.) so pre-PR-3 callers keep working with guidance
+    instead of ImportError.
+
+``PREFIX_TUNING`` notably now names REAL prefix-tuning (learned per-task
+k/v rows entering packed attention) — the old declared-but-faked
+IA3-style alias is gone; resolving the name warns once.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass
 from typing import Dict, Tuple
 
 from repro.configs import ArchConfig
 from repro.models.layers import ParamSpec
+from repro.peft.methods import get_method, method_names, resolve_kind
 
 LORA = "lora"
 ADAPTER_TUNING = "adapter"
 DIFF_PRUNING = "diff"
 IA3 = "ia3"
-PREFIX_TUNING = "prefix"  # declared for API parity; realized as IA3-style k/v scaling
+PREFIX_TUNING = "prefix"  # real prefix-tuning since PR 3 (was a fake alias)
+DORA = "dora"
+VERA = "vera"
+BITFIT = "bitfit"
 
-KINDS = (LORA, ADAPTER_TUNING, DIFF_PRUNING, IA3)
+
+def __getattr__(name):
+    if name == "KINDS":  # dynamic: every registered method
+        return method_names()
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}. PEFT method "
+        f"declarations moved to repro.peft.methods (PR 3): use "
+        f"get_method(kind) / register_method(...).")
+
 
 DEFAULT_TARGETS = ("attn_q", "attn_k", "attn_v", "attn_o")
 
@@ -33,14 +52,25 @@ DEFAULT_TARGETS = ("attn_q", "attn_k", "attn_v", "attn_o")
 @dataclass(frozen=True)
 class AdapterConfig:
     kind: str = LORA
-    rank: int = 8            # lora rank / houlsby bottleneck / diff row count
+    rank: int = 8            # lora rank / bottleneck / diff rows / prefix len
     alpha: float = 16.0
     targets: Tuple[str, ...] = DEFAULT_TARGETS
     lr: float = 1e-4         # per-task learning rate (isolation: per-task optim)
 
+    def __post_init__(self):
+        # canonicalize through the registry: legacy aliases map to the new
+        # method names with a one-time warning; unknown kinds fail loudly.
+        object.__setattr__(self, "kind", resolve_kind(self.kind))
+
     @property
     def scale(self) -> float:
         return self.alpha / max(self.rank, 1)
+
+
+def supports_attention_prefix(cfg: ArchConfig) -> bool:
+    """Whether the backbone has standard softmax attention that learned
+    prefix k/v rows can enter (pure-SSM / GLA cells do not)."""
+    return cfg.attention != "none"
 
 
 def base_op_dims(cfg: ArchConfig) -> Dict[str, Tuple[int, int]]:
@@ -88,52 +118,32 @@ def base_op_dims(cfg: ArchConfig) -> Dict[str, Tuple[int, int]]:
     return dims
 
 
-def adapter_spec(
-    kind: str, rank: int, d_in: int, d_out: int, n_tasks: int
-) -> Dict[str, ParamSpec]:
-    """Per-BaseOp adapter params, stacked over ``n_tasks`` (spatial fusion)."""
-    t = (n_tasks,)
-    if kind == LORA:
-        return {
-            "a": ParamSpec(t + (d_in, rank), (None, "embed", None), scale=0.02),
-            "b": ParamSpec(t + (rank, d_out), (None, None, None), init="zeros"),
-        }
-    if kind == ADAPTER_TUNING:
-        return {
-            "down": ParamSpec(t + (d_out, rank), (None, None, None), scale=0.02),
-            "up": ParamSpec(t + (rank, d_out), (None, None, None), init="zeros"),
-        }
-    if kind == DIFF_PRUNING:
-        return {
-            # fixed structured mask: ``rows`` selects rank input rows of W
-            "rows": ParamSpec(t + (rank,), (None, None), init="zeros", dtype="int32"),
-            "delta": ParamSpec(t + (rank, d_out), (None, None, None), init="zeros"),
-        }
-    if kind == IA3:
-        return {"s": ParamSpec(t + (d_out,), (None, None), init="zeros")}
-    raise ValueError(kind)
+# ---------------------------------------------------------------------------
+# Deprecated wrappers (pre-PR-3 API) — delegate to the method registry
+# ---------------------------------------------------------------------------
+
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.peft.adapters.{old} is deprecated; use "
+        f"repro.peft.methods.get_method(kind).{new}", DeprecationWarning,
+        stacklevel=3)
+
+
+def adapter_spec(kind: str, rank: int, d_in: int, d_out: int,
+                 n_tasks: int) -> Dict[str, ParamSpec]:
+    """DEPRECATED: per-BaseOp adapter params, stacked over ``n_tasks``."""
+    _deprecated("adapter_spec", "param_specs(rank, d_in, d_out, capacity)")
+    return get_method(kind).param_specs(rank, d_in, d_out, n_tasks)
 
 
 def adapter_param_count(kind: str, rank: int, d_in: int, d_out: int) -> int:
-    if kind == LORA:
-        return d_in * rank + rank * d_out
-    if kind == ADAPTER_TUNING:
-        return 2 * rank * d_out
-    if kind == DIFF_PRUNING:
-        return rank * d_out
-    if kind == IA3:
-        return d_out
-    raise ValueError(kind)
+    """DEPRECATED: per-task trainable params of one adapter site."""
+    _deprecated("adapter_param_count", "param_count(rank, d_in, d_out)")
+    return get_method(kind).param_count(rank, d_in, d_out)
 
 
 def adapter_flops_per_token(kind: str, rank: int, d_in: int, d_out: int) -> int:
-    """Forward FLOPs/token of one adapter application (paper cost model t_a)."""
-    if kind == LORA:
-        return 2 * rank * (d_in + d_out)
-    if kind == ADAPTER_TUNING:
-        return 4 * rank * d_out
-    if kind == DIFF_PRUNING:
-        return 2 * rank * d_out
-    if kind == IA3:
-        return d_out
-    raise ValueError(kind)
+    """DEPRECATED: forward FLOPs/token of one adapter application."""
+    _deprecated("adapter_flops_per_token", "flops_per_token(rank, d_in, d_out)")
+    return get_method(kind).flops_per_token(rank, d_in, d_out)

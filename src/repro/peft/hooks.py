@@ -23,20 +23,30 @@ import jax.numpy as jnp
 class AdapterContext:
     """Interface: maps BaseOp names to adapter transforms.
 
-    ``apply(name, x, base_out)`` implements Dispatch (prepare adapter input
-    from ``x``), the Adapter computation itself, and Aggregate (merge with
-    ``base_out``).  Must return an array shaped like ``base_out``.
+    ``apply(name, x, base_out, w)`` implements Dispatch (prepare adapter
+    input from ``x``), the Adapter computation itself, and Aggregate (merge
+    with ``base_out``).  ``w`` is the op's effective weight (reparameterized
+    methods like DoRA renormalize against it).  Must return an array shaped
+    like ``base_out``.
     """
 
     def has(self, name: str) -> bool:  # pragma: no cover - interface
         raise NotImplementedError
 
-    def apply(self, name: str, x: jax.Array, base_out: jax.Array) -> jax.Array:
+    def apply(self, name: str, x: jax.Array, base_out: jax.Array,
+              w: Optional[jax.Array] = None) -> jax.Array:
         raise NotImplementedError  # pragma: no cover - interface
 
     def base_weight(self, name: str, w: jax.Array) -> jax.Array:
         """Selective PEFT (Diff-Pruning) rewrites the effective weight."""
         return w
+
+    def attn_prefix(self):
+        """Soft-prompt Dispatch: per-row learned k/v prefix rows for the
+        current layer's attention, as ``(pk, pv, keep)`` with pk/pv
+        [B, P, kv_dim] and keep [B, P] (1.0 where the row's task owns the
+        prefix token); None when no soft-prompt method is attached."""
+        return None
 
 
 class _Env(threading.local):
@@ -77,5 +87,5 @@ def apply_base_op(
     if bias is not None:
         out = out + bias
     if ctx is not None and ctx.has(name):
-        out = ctx.apply(name, x, out)
+        out = ctx.apply(name, x, out, w)
     return out

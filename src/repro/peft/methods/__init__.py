@@ -1,0 +1,135 @@
+"""PEFT method registry — the single place method names resolve to code.
+
+Every layer of the system (spec building, grouped Dispatch/Aggregate, the
+Eq. 5 planner/admission footprint, optimizer masking, checkpoint schema)
+consumes the :class:`~repro.peft.methods.base.PEFTMethod` protocol through
+this registry; no ``kind == ...`` string branching exists outside this
+package (enforced by ``tests/test_peft_methods.py``).
+
+Adding a method::
+
+    from repro.peft.methods import PEFTMethod, register_method
+
+    class MyMethod(PEFTMethod):
+        name = "mine"
+        ...
+
+    register_method(MyMethod())
+
+See README "Writing a custom PEFTMethod" (walkthrough: ``bitfit.py``).
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+from repro.peft.methods.base import ApplyContext, PEFTMethod, SiteDims
+
+_REGISTRY: Dict[str, PEFTMethod] = {}
+_ALIASES: Dict[str, str] = {}
+_WARNED: set = set()
+
+
+def register_method(method: PEFTMethod, aliases: Iterable[str] = ()) -> PEFTMethod:
+    """Register a method instance under ``method.name`` (+ optional aliases)."""
+    if not method.name:
+        raise ValueError("PEFTMethod.name must be a non-empty string")
+    _REGISTRY[method.name] = method
+    for a in aliases:
+        _ALIASES[a] = method.name
+    return method
+
+
+def method_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_kind(kind: str) -> str:
+    """Canonicalize a method name, mapping legacy aliases with a one-time
+    warning (the PR-3 deprecation shim's entry point)."""
+    if kind in _REGISTRY:
+        if kind == "prefix" and "prefix" not in _WARNED:
+            _WARNED.add("prefix")
+            warnings.warn(
+                "'prefix' is now REAL prefix-tuning (learned per-task k/v "
+                "rows entering packed attention); before PR 3 the constant "
+                "was declared but unimplemented (documented as an IA3-style "
+                "k/v-scaling stand-in).",
+                UserWarning, stacklevel=3)
+        return kind
+    if kind in _ALIASES:
+        canon = _ALIASES[kind]
+        if kind not in _WARNED:
+            _WARNED.add(kind)
+            warnings.warn(
+                f"PEFT kind {kind!r} is a legacy alias; use {canon!r} "
+                f"(repro.peft.methods registry).", UserWarning, stacklevel=3)
+        return canon
+    raise KeyError(
+        f"unknown PEFT method {kind!r}; registered methods: "
+        f"{', '.join(method_names())}. Implement a PEFTMethod subclass and "
+        f"call repro.peft.methods.register_method(...) to add one.")
+
+
+def get_method(kind: str) -> PEFTMethod:
+    try:
+        return _REGISTRY[kind]
+    except KeyError:
+        return _REGISTRY[resolve_kind(kind)]
+
+
+def shared_leaf(kind: str, leaf: str) -> bool:
+    """True if ``leaf`` of method ``kind`` has no task axis (frozen/shared)."""
+    return leaf in get_method(kind).shared_params
+
+
+def adapter_sites(adapter, dims: SiteDims, attention: bool = True
+                  ) -> List[Tuple[str, int, int, float, int]]:
+    """Flat per-site cost view for the planner / admission gate / subgraph
+    builder: ``(site, d_in, d_out, flops_per_token, trainable_params)``."""
+    m = get_method(adapter.kind)
+    out = []
+    for site, (din, dout) in m.sites(tuple(adapter.targets), dims,
+                                     attention=attention).items():
+        out.append((site, din, dout,
+                    m.flops_per_token(adapter.rank, din, dout),
+                    m.param_count(adapter.rank, din, dout)))
+    return out
+
+
+def adapter_shared_params(adapter, dims: SiteDims, attention: bool = True
+                          ) -> Dict[str, int]:
+    """Per-site params of the method's SHARED (task-axis-free) leaves — the
+    Eq. 5 model charges these once per kind stack, not per tenant."""
+    m = get_method(adapter.kind)
+    return {
+        site: m.shared_param_count(adapter.rank, din, dout)
+        for site, (din, dout) in m.sites(tuple(adapter.targets), dims,
+                                         attention=attention).items()
+    }
+
+
+# --- built-in methods ------------------------------------------------------
+from repro.peft.methods.adapter_tuning import AdapterTuning
+from repro.peft.methods.bitfit import BitFit
+from repro.peft.methods.diff_pruning import DiffPruning
+from repro.peft.methods.dora import DoRA
+from repro.peft.methods.ia3 import IA3
+from repro.peft.methods.lora import LoRA
+from repro.peft.methods.prefix_tuning import PrefixTuning
+from repro.peft.methods.vera import VeRA
+
+register_method(LoRA())
+register_method(AdapterTuning(), aliases=("adapter_tuning", "houlsby"))
+register_method(DiffPruning(), aliases=("diff_pruning",))
+register_method(IA3())
+register_method(PrefixTuning(), aliases=("prefix_tuning", "prefix-tuning"))
+register_method(DoRA())
+register_method(VeRA())
+register_method(BitFit())
+
+__all__ = [
+    "ApplyContext", "PEFTMethod", "adapter_shared_params", "adapter_sites",
+    "get_method", "method_names", "register_method", "resolve_kind",
+    "shared_leaf",
+]

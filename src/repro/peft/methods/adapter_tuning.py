@@ -1,0 +1,39 @@
+"""Adapter-Tuning [Houlsby et al.] — additive: y += U(gelu(D(y)))."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec
+from repro.peft.methods.base import ApplyContext, PEFTMethod
+
+
+class AdapterTuning(PEFTMethod):
+    name = "adapter"
+    category = "additive"
+
+    def param_specs(self, rank, d_in, d_out, capacity) -> Dict[str, ParamSpec]:
+        t = (capacity,)
+        return {
+            "down": ParamSpec(t + (d_out, rank), (None, None, None), scale=0.02),
+            "up": ParamSpec(t + (rank, d_out), (None, None, None), init="zeros"),
+        }
+
+    def param_count(self, rank, d_in, d_out) -> int:
+        return 2 * rank * d_out
+
+    def flops_per_token(self, rank, d_in, d_out) -> float:
+        return 4.0 * rank * d_out
+
+    def apply(self, p, x, base_out, ctx: ApplyContext
+              ) -> Tuple[Optional[jax.Array], Optional[jax.Array]]:
+        t = ctx.rows
+        dwn = p["down"][t]  # [B, d_out, r]
+        up = p["up"][t]     # [B, r, d_out]
+        h = jnp.einsum("bso,bor->bsr", base_out.astype(jnp.float32),
+                       dwn.astype(jnp.float32))
+        h = jax.nn.gelu(h)
+        add = jnp.einsum("bsr,bro->bso", h, up.astype(jnp.float32))
+        return add * ctx.gate[:, None, None], None

@@ -1,0 +1,154 @@
+"""The ``PEFTMethod`` protocol — first-class unified PEFT representation.
+
+MuxTune's core enabler is "flexible, modularized backbone sharing via
+unified PEFT representations" (§2.1, §3.2).  A method *declares* everything
+the system needs to multiplex it against a shared backbone; no other layer
+branches on the method's name:
+
+  * ``sites``/``param_specs``  — which BaseOps it attaches to and the
+    stacked adapter ``ParamSpec``s per site (Dispatch targets);
+  * ``apply``/``attn_prefix``  — the Dispatch/Aggregate rules over a fused
+    batch (grouped-kernel routing through ``repro.kernels.ops``);
+  * ``param_count``/``flops_per_token`` — the per-task Eq. 5 memory/FLOP
+    footprint the planner and the admission gate cost with;
+  * ``shared_params``/``trainable`` — optimizer masking hints (leaves with
+    no task axis are frozen + excluded from per-slot updates);
+  * ``checkpoint_schema`` — the per-task artifact layout a completed tenant
+    checkpoints out (and warm-starts from).
+
+Categories follow the PEFT survey's extension axis (Han et al., 2024):
+``reparameterized`` (LoRA, DoRA, VeRA), ``additive`` (Adapter-Tuning,
+BitFit), ``selective`` (Diff-Pruning), ``soft_prompt`` (Prefix-Tuning).
+
+Register a new method with ``repro.peft.methods.register_method``; the
+README's "writing a custom PEFTMethod" section walks through a minimal
+BitFit implementation (shipped here as ``bitfit.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec
+
+Array = jax.Array
+SiteDims = Dict[str, Tuple[int, int]]  # site name -> (d_in, d_out)
+
+
+@dataclass
+class ApplyContext:
+    """Per-site Dispatch context for one fused batch (all traced arrays are
+    batch-row indexed — B entries, never per token)."""
+
+    slots: Array            # [B] int32 slot within this kind's stack; -1 = none
+    gate: Array             # [B] f32: 1.0 where slots >= 0
+    scale: Array            # [capacity] f32 per-slot aggregate scale
+    d_in: int = 0
+    d_out: int = 0
+    base_weight: Optional[Array] = None  # [d_in, d_out] effective W (DoRA etc.)
+
+    @property
+    def rows(self) -> Array:
+        """Gather-safe slot index per batch row (clamped; mask via gate)."""
+        return jnp.maximum(self.slots, 0)
+
+
+class PEFTMethod:
+    """Base class / protocol for a PEFT method plugin."""
+
+    name: str = ""
+    category: str = ""                       # survey axis (see module doc)
+    #: adapter leaf names WITHOUT a task axis — shared across all tenants of
+    #: this kind and frozen (deterministically re-initialized, never updated)
+    shared_params: frozenset = frozenset()
+    #: True if the method injects learned k/v rows into packed attention
+    uses_attention_prefix: bool = False
+
+    # ------------------------------------------------------------- declare
+    def sites(self, targets: Sequence[str], dims: SiteDims,
+              attention: bool = True) -> SiteDims:
+        """Map the requested BaseOp targets onto this method's attach sites.
+
+        Default: attach at every requested target the architecture has.
+        Soft-prompt methods override to declare attention-level sites.
+        ``attention`` is False when the backbone has no standard softmax
+        attention for prefix rows to enter (e.g. pure-SSM cells)."""
+        return {n: dims[n] for n in targets if n in dims}
+
+    def param_specs(self, rank: int, d_in: int, d_out: int,
+                    capacity: int) -> Dict[str, ParamSpec]:
+        """Adapter ParamSpecs for one site, stacked over ``capacity`` slots
+        (leaves named in ``shared_params`` omit the capacity axis)."""
+        raise NotImplementedError
+
+    def post_init(self, params: Dict[str, Array], site: str, d_in: int,
+                  d_out: int) -> Dict[str, Array]:
+        """Deterministic post-init fixups (structural masks, shared frozen
+        matrices).  MUST be a pure function of (site, dims): it re-runs on
+        every stack rebuild, and shared/structural leaves have to come back
+        bit-identical or surviving tenants' training state is corrupted."""
+        return params
+
+    # ----------------------------------------------------- Eq. 5 footprint
+    def param_count(self, rank: int, d_in: int, d_out: int) -> int:
+        """Trainable params per task per site (drives Eq. 5 memory)."""
+        raise NotImplementedError
+
+    def shared_param_count(self, rank: int, d_in: int, d_out: int) -> int:
+        """Params of the ``shared_params`` leaves per site — paid ONCE per
+        kind stack (not per task) in the Eq. 5 memory model."""
+        return 0
+
+    def flops_per_token(self, rank: int, d_in: int, d_out: int) -> float:
+        """Forward FLOPs/token of one adapter application (cost model t_a)."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------ optimizer hints
+    def slot_scale(self, adapter: Any) -> float:
+        """Aggregate scale for a task's slot (e.g. LoRA alpha/r)."""
+        return 1.0
+
+    def trainable(self, leaf: str) -> bool:
+        return leaf not in self.shared_params
+
+    # ------------------------------------------------------------ execution
+    def apply(self, p: Dict[str, Array], x: Array, base_out: Array,
+              ctx: ApplyContext) -> Tuple[Optional[Array], Optional[Array]]:
+        """Dispatch/Aggregate over the fused batch at one site.
+
+        ``x`` is [B, S, d_in], ``base_out`` is [B, S, d_out].  Returns
+        ``(add, mul)``: an additive f32 delta [B, S, d_out] (or None) and a
+        multiplicative factor broadcastable to [B, S, d_out] (or None).  The
+        site output is ``(base_out + sum(add)) * prod(mul)``.  Both terms
+        MUST be identity (0 / 1) on rows whose ``ctx.gate`` is 0."""
+        raise NotImplementedError
+
+    def attn_prefix(self, p: Dict[str, Array],
+                    ctx: ApplyContext) -> Optional[Tuple[Array, Array]]:
+        """Per-row learned k/v prefixes ([B, P, kv_dim] pair) for methods
+        with ``uses_attention_prefix``; None otherwise."""
+        return None
+
+    # ------------------------------------------------------------ artifacts
+    def checkpoint_schema(self, rank: int, d_in: int,
+                          d_out: int) -> Dict[str, Dict[str, Any]]:
+        """Per-leaf layout of one task's checkpointed-out artifact at one
+        site (before layer stacking): shape, dtype and whether the leaf is a
+        shared (frozen, deterministically reconstructible) matrix."""
+        out: Dict[str, Dict[str, Any]] = {}
+        for leaf, spec in self.param_specs(rank, d_in, d_out, 1).items():
+            shared = leaf in self.shared_params
+            out[leaf] = {
+                "shape": spec.shape if shared else spec.shape[1:],
+                "dtype": spec.dtype,
+                "shared": shared,
+            }
+        return out
+
+    def describe(self) -> Dict[str, Any]:
+        return {"name": self.name, "category": self.category,
+                "shared_params": sorted(self.shared_params),
+                "uses_attention_prefix": self.uses_attention_prefix}

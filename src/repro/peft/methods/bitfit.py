@@ -1,0 +1,35 @@
+"""BitFit [Ben Zaken et al.] — bias-only tuning: y += b.
+
+The minimal PEFTMethod: one per-task bias vector per site.  This file is
+the README's "writing a custom PEFTMethod" walkthrough — every protocol
+hook it doesn't override falls back to a sensible default (attach at all
+requested targets, no shared leaves, no post-init, unit slot scale).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec
+from repro.peft.methods.base import ApplyContext, PEFTMethod
+
+
+class BitFit(PEFTMethod):
+    name = "bitfit"
+    category = "additive"
+
+    def param_specs(self, rank, d_in, d_out, capacity) -> Dict[str, ParamSpec]:
+        return {"b": ParamSpec((capacity, d_out), (None, None), init="zeros")}
+
+    def param_count(self, rank, d_in, d_out) -> int:
+        return d_out
+
+    def flops_per_token(self, rank, d_in, d_out) -> float:
+        return float(d_out)
+
+    def apply(self, p, x, base_out, ctx: ApplyContext
+              ) -> Tuple[Optional[jax.Array], Optional[jax.Array]]:
+        b = p["b"][ctx.rows].astype(jnp.float32)  # [B, d_out]
+        return b[:, None, :] * ctx.gate[:, None, None], None

@@ -1,0 +1,59 @@
+"""Diff-Pruning [Guo et al.], structured-row variant — selective:
+y += x[:, rows] @ delta with a fixed per-task row mask and learned delta."""
+from __future__ import annotations
+
+import zlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import ParamSpec
+from repro.peft.methods.base import ApplyContext, PEFTMethod
+
+
+class DiffPruning(PEFTMethod):
+    name = "diff"
+    category = "selective"
+
+    def param_specs(self, rank, d_in, d_out, capacity) -> Dict[str, ParamSpec]:
+        t = (capacity,)
+        return {
+            # fixed structured mask: ``rows`` selects rank input rows of W
+            "rows": ParamSpec(t + (rank,), (None, None), init="zeros",
+                              dtype="int32"),
+            "delta": ParamSpec(t + (rank, d_out), (None, None, None),
+                               init="zeros"),
+        }
+
+    def post_init(self, params, site, d_in, d_out):
+        """Deterministic per-slot row subsets, seeded by the site identity so
+        every stack rebuild regenerates the same masks (migration then
+        carries survivors' masks verbatim; fresh slots get these)."""
+        leaf = params["rows"]
+        shape = leaf.shape  # [..., capacity, rank]
+        rank = shape[-1]
+        n = int(np.prod(shape[:-1]))
+        seed = zlib.crc32(f"diff:{site}:{d_in}x{d_out}".encode()) % (2**31)
+        rng = np.random.RandomState(seed)
+        rows = np.stack([
+            rng.choice(d_in, size=rank, replace=d_in < rank) for _ in range(n)
+        ]).reshape(shape)
+        return dict(params, rows=jnp.asarray(rows, jnp.int32))
+
+    def param_count(self, rank, d_in, d_out) -> int:
+        return rank * d_out
+
+    def flops_per_token(self, rank, d_in, d_out) -> float:
+        return 2.0 * rank * d_out
+
+    def apply(self, p, x, base_out, ctx: ApplyContext
+              ) -> Tuple[Optional[jax.Array], Optional[jax.Array]]:
+        t = ctx.rows
+        idx = jnp.minimum(p["rows"][t], ctx.d_in - 1)  # [B, rank]
+        x_sel = jnp.take_along_axis(x, idx[:, None, :], axis=2)  # [B, S, rank]
+        delta = p["delta"][t]  # [B, rank, d_out]
+        add = jnp.einsum("bsr,bro->bso", x_sel.astype(jnp.float32),
+                         delta.astype(jnp.float32))
+        return add * ctx.gate[:, None, None], None

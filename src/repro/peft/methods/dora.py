@@ -1,0 +1,77 @@
+"""DoRA [Liu et al., 2024] — magnitude-decomposed LoRA (reparameterized).
+
+W' = m . (W + s*BA) / ||W + s*BA||_col : the direction update is a plain
+LoRA delta (routed through the SAME §3.4.3 grouped kernel), the magnitude
+is a learned per-column vector.  We parametrize the magnitude RELATIVE to
+the frozen backbone's column norms, m = ||W||_col * (1 + dm) with dm init
+zero, so a fresh slot is exactly the identity and no backbone access is
+needed at init time — the effective W reaches ``apply`` via the BaseOp
+hook's ``base_weight``.
+
+Column norms of W + s*BA are computed WITHOUT materializing BA per task:
+||.||^2_col = ||W||^2 + 2 s <W, AB>_col + s^2 ||AB||^2_col, all of which
+reduce to O(d r + r^2 d) einsums per slot.
+
+Known approximation: the BaseOp hook aggregates AFTER the op's bias add,
+so on the few biased BaseOps (audio MLPs, attention_bias configs) the
+magnitude rescale also scales the bias term — exact DoRA semantics hold
+for the bias-free ops that dominate every shipped config.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.layers import ParamSpec
+from repro.peft.methods.base import ApplyContext, PEFTMethod
+
+
+class DoRA(PEFTMethod):
+    name = "dora"
+    category = "reparameterized"
+
+    def param_specs(self, rank, d_in, d_out, capacity) -> Dict[str, ParamSpec]:
+        t = (capacity,)
+        return {
+            "a": ParamSpec(t + (d_in, rank), (None, "embed", None), scale=0.02),
+            "b": ParamSpec(t + (rank, d_out), (None, None, None), init="zeros"),
+            # relative magnitude: effective m = ||W||_col * (1 + dm)
+            "dm": ParamSpec(t + (d_out,), (None, None), init="zeros"),
+        }
+
+    def param_count(self, rank, d_in, d_out) -> int:
+        return d_in * rank + rank * d_out + d_out
+
+    def flops_per_token(self, rank, d_in, d_out) -> float:
+        # LoRA delta + the per-token magnitude rescale; the per-slot norm
+        # computation amortizes over all tokens of the micro-batch
+        return 2.0 * rank * (d_in + d_out) + 6.0 * d_out
+
+    def slot_scale(self, adapter) -> float:
+        return adapter.scale
+
+    def apply(self, p, x, base_out, ctx: ApplyContext
+              ) -> Tuple[Optional[jax.Array], Optional[jax.Array]]:
+        add = kops.grouped_lora(x, p["a"], p["b"], ctx.slots, ctx.scale)
+        add = add.astype(jnp.float32)
+        if ctx.base_weight is None:
+            return add, None  # no weight in scope: degrade to plain LoRA
+        w = ctx.base_weight.astype(jnp.float32)          # [d_in, d_out]
+        af = p["a"].astype(jnp.float32)                  # [T, d_in, r]
+        bf = p["b"].astype(jnp.float32)                  # [T, r, d_out]
+        s = ctx.scale.astype(jnp.float32)                # [T]
+        wcol2 = (w * w).sum(axis=0)                      # [d_out]
+        wta = jnp.einsum("io,tir->tor", w, af)           # [T, d_out, r]
+        cross = jnp.einsum("tor,tro->to", wta, bf)       # <W, AB>_col
+        gram = jnp.einsum("tir,tip->trp", af, af)        # [T, r, r]
+        ab2 = jnp.einsum("trp,tro,tpo->to", gram, bf, bf)
+        c2 = wcol2[None] + 2.0 * s[:, None] * cross + (s * s)[:, None] * ab2
+        c = jnp.sqrt(jnp.maximum(c2, 1e-12))             # ||W + s*BA||_col
+        mag = jnp.sqrt(jnp.maximum(wcol2, 1e-12))[None] * (
+            1.0 + p["dm"].astype(jnp.float32))
+        ratio = (mag / c)[ctx.rows]                      # [B, d_out]
+        mul = 1.0 + (ratio - 1.0) * ctx.gate[:, None]
+        return add, mul[:, None, :]

@@ -1,0 +1,42 @@
+"""LoRA [Hu et al.] — reparameterized: y += (x A) B * alpha/r.
+
+Dispatch/Aggregate routes through the §3.4.3 grouped kernel
+(``kernels.ops.grouped_lora``): ONE fused GEMM pair covers every co-batched
+LoRA task, with per-row slot routing and per-slot scales.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.layers import ParamSpec
+from repro.peft.methods.base import ApplyContext, PEFTMethod
+
+
+class LoRA(PEFTMethod):
+    name = "lora"
+    category = "reparameterized"
+
+    def param_specs(self, rank, d_in, d_out, capacity) -> Dict[str, ParamSpec]:
+        t = (capacity,)
+        return {
+            "a": ParamSpec(t + (d_in, rank), (None, "embed", None), scale=0.02),
+            "b": ParamSpec(t + (rank, d_out), (None, None, None), init="zeros"),
+        }
+
+    def param_count(self, rank, d_in, d_out) -> int:
+        return d_in * rank + rank * d_out
+
+    def flops_per_token(self, rank, d_in, d_out) -> float:
+        return 2.0 * rank * (d_in + d_out)
+
+    def slot_scale(self, adapter) -> float:
+        return adapter.scale
+
+    def apply(self, p, x, base_out, ctx: ApplyContext
+              ) -> Tuple[Optional[jax.Array], Optional[jax.Array]]:
+        add = kops.grouped_lora(x, p["a"], p["b"], ctx.slots, ctx.scale)
+        return add.astype(jnp.float32), None

@@ -1,0 +1,66 @@
+"""Prefix-Tuning [Li & Liang] — soft-prompt: learned per-task k/v prefixes.
+
+Real prefix tuning (replacing the old IA3-style k/v-scaling fake): each
+task owns ``rank`` learned key/value rows per layer that enter
+``packed_attention`` as extra segment rows.  The prefixes live in
+*post-RoPE* key space (they are free parameters, so the pre/post-rotary
+parametrizations are equivalent) and are visible to every query token of
+the owning task's batch rows — across that row's packed segments — while
+rows of other tasks never see them (per-row wildcard segment gating in the
+kernel; carry-initialized online softmax on the XLA tier).
+
+The attach site is the pseudo-target ``attn_prefix`` (one per attention
+layer), declared only when the backbone has standard softmax attention.
+Prefixes enter SELF-attention only: encoder-decoder cross-attention reads
+a fixed encoder memory and takes no prefix rows (the standard
+self-attention prefix variant), and decode/serve paths ignore them (a
+ROADMAP item: fold prefixes into the KV cache at prefill).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec
+from repro.peft.methods.base import ApplyContext, PEFTMethod, SiteDims
+
+SITE = "attn_prefix"
+
+
+class PrefixTuning(PEFTMethod):
+    name = "prefix"
+    category = "soft_prompt"
+    uses_attention_prefix = True
+
+    def sites(self, targets: Sequence[str], dims: SiteDims,
+              attention: bool = True) -> SiteDims:
+        if not attention or "attn_k" not in dims:
+            return {}
+        kv_dim = dims["attn_k"][1]
+        return {SITE: (kv_dim, kv_dim)}
+
+    def param_specs(self, rank, d_in, d_out, capacity) -> Dict[str, ParamSpec]:
+        t = (capacity,)
+        return {
+            "pk": ParamSpec(t + (rank, d_out), (None, None, None), scale=0.02),
+            "pv": ParamSpec(t + (rank, d_out), (None, None, None), scale=0.02),
+        }
+
+    def param_count(self, rank, d_in, d_out) -> int:
+        return 2 * rank * d_out
+
+    def flops_per_token(self, rank, d_in, d_out) -> float:
+        # score (q . pk) + weighted pv sum over the `rank` prefix positions
+        return 4.0 * rank * d_out
+
+    def apply(self, p, x, base_out, ctx: ApplyContext
+              ) -> Tuple[Optional[jax.Array], Optional[jax.Array]]:
+        # never called: ``attn_prefix`` is not a BaseOp name
+        return None, None
+
+    def attn_prefix(self, p, ctx: ApplyContext
+                    ) -> Optional[Tuple[jax.Array, jax.Array]]:
+        t = ctx.rows
+        return p["pk"][t], p["pv"][t]  # [B, P, kv_dim] each

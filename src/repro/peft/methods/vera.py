@@ -1,0 +1,87 @@
+"""VeRA [Kopiczko et al., 2024] — shared frozen A/B + per-task vectors.
+
+y += diag(b) . B . diag(d) . A . x : the big projection matrices A/B are
+FROZEN, shared across every tenant of the kind (and across layers), and
+deterministically reconstructible; only the tiny per-task scaling vectors
+``d`` (init 0.1) and ``b`` (init zero) train.  A strong multi-tenant fit:
+per-tenant state is O(r + d_out) while the O(d*r) matrices are paid once
+per backbone — the admission gate's Eq. 5 footprint reflects exactly that.
+
+Determinism contract: A's columns / B's rows are generated per rank-index
+from a site-keyed PRNG (``fold_in`` per index), so (a) every stack rebuild
+regenerates bit-identical matrices — surviving tenants' trained d/b stay
+meaningful across churn — and (b) growing the stack rank appends NEW
+columns/rows while the leading slices survivors trained against are
+unchanged.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec
+from repro.peft.methods.base import ApplyContext, PEFTMethod
+
+
+def _det_rows(tag: str, n_rows: int, row_len: int) -> jax.Array:
+    """[n_rows, row_len] normal matrix, row i a pure function of (tag, i)."""
+    key = jax.random.PRNGKey(zlib.crc32(tag.encode()) & 0x7FFFFFFF)
+    idx = jnp.arange(n_rows)
+    return jax.vmap(
+        lambda i: jax.random.normal(jax.random.fold_in(key, i), (row_len,))
+    )(idx)
+
+
+class VeRA(PEFTMethod):
+    name = "vera"
+    category = "reparameterized"
+    shared_params = frozenset({"A", "B"})
+
+    def param_specs(self, rank, d_in, d_out, capacity) -> Dict[str, ParamSpec]:
+        t = (capacity,)
+        return {
+            # shared frozen projections (no task axis; post_init overwrites
+            # with the deterministic site-keyed values)
+            "A": ParamSpec((d_in, rank), ("embed", None), scale=0.02),
+            "B": ParamSpec((rank, d_out), (None, None), scale=0.02),
+            # per-task trainable scaling vectors
+            "d": ParamSpec(t + (rank,), (None, None), init="const", scale=0.1),
+            "b": ParamSpec(t + (d_out,), (None, None), init="zeros"),
+        }
+
+    def post_init(self, params, site, d_in, d_out):
+        rank = int(params["A"].shape[-1])
+        a = _det_rows(f"vera:A:{site}:{d_in}", rank, d_in).T * 0.02  # [d_in, r]
+        b = _det_rows(f"vera:B:{site}:{d_out}", rank, d_out) * 0.02  # [r, d_out]
+        out = dict(params)
+        out["A"] = jnp.broadcast_to(a, params["A"].shape).astype(params["A"].dtype)
+        out["B"] = jnp.broadcast_to(b, params["B"].shape).astype(params["B"].dtype)
+        return out
+
+    def param_count(self, rank, d_in, d_out) -> int:
+        # per-TASK footprint: only the scaling vectors; the shared frozen
+        # A/B are charged once per kind stack via shared_param_count
+        return rank + d_out
+
+    def shared_param_count(self, rank, d_in, d_out) -> int:
+        return d_in * rank + rank * d_out
+
+    def flops_per_token(self, rank, d_in, d_out) -> float:
+        return 2.0 * rank * (d_in + d_out) + rank + d_out
+
+    def apply(self, p, x, base_out, ctx: ApplyContext
+              ) -> Tuple[Optional[jax.Array], Optional[jax.Array]]:
+        t = ctx.rows
+        # A/B are frozen: stop_gradient skips their (largest-leaf) backward
+        # work outright — the engine's shared-leaf mask would discard the
+        # update anyway, but this way it is never computed
+        a = jax.lax.stop_gradient(p["A"].astype(jnp.float32))
+        bm = jax.lax.stop_gradient(p["B"].astype(jnp.float32))
+        h = jnp.einsum("bsi,ir->bsr", x.astype(jnp.float32), a)
+        h = h * p["d"][t].astype(jnp.float32)[:, None, :]     # diag(d)
+        y = jnp.einsum("bsr,ro->bso", h, bm)
+        y = y * p["b"][t].astype(jnp.float32)[:, None, :]     # diag(b)
+        return y * ctx.gate[:, None, None], None

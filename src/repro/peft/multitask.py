@@ -6,16 +6,21 @@ so the map is compile-time constant and the grouped kernels see static
 segment plans.
 
 ``MultiTaskAdapters`` builds one stacked parameter tree per PEFT *kind*
-(LoRA tasks stack together, Diff-Pruning tasks together, ...), mirroring the
+(LoRA tasks stack together, VeRA tasks together, ...), mirroring the
 backbone's stacked-layer layout so the model's layer scan slices adapters
-alongside backbone weights.  ``MultiTaskContext`` realizes Dispatch (route
-fused-batch rows to their task's adapter) and Aggregate (add/scale into the
-BaseOp output) — the horizontal adapter fusion of §3.4.3: one grouped
-computation per kind covers all tasks.
+alongside backbone weights.  Everything method-specific — which sites a
+kind attaches to, its ParamSpecs, its Dispatch/Aggregate rule, its slot
+scale — comes from the :mod:`repro.peft.methods` registry; this module
+never branches on a method's name.
+
+``MultiTaskContext`` realizes Dispatch (route fused-batch rows to their
+task's adapter) and Aggregate (merge add/mul contributions into the BaseOp
+output) — the horizontal adapter fusion of §3.4.3: one grouped computation
+per kind covers all tasks.  Soft-prompt methods additionally surface
+per-row k/v prefix rows to packed attention via ``attn_prefix``.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -24,18 +29,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ArchConfig
-from repro.kernels import ops as kops
-from repro.models.layers import ParamSpec, materialize, abstract
+from repro.models.layers import ParamSpec, abstract, materialize
 from repro.peft.adapters import (
-    ADAPTER_TUNING,
-    DIFF_PRUNING,
-    IA3,
-    LORA,
     AdapterConfig,
-    adapter_spec,
     base_op_dims,
+    supports_attention_prefix,
 )
 from repro.peft.hooks import AdapterContext
+from repro.peft.methods import ApplyContext, get_method
 
 
 @dataclass(frozen=True)
@@ -93,7 +94,9 @@ class MultiTaskAdapters:
     capacities stable across task arrival/departure keeps every adapter
     leaf's *shape* stable, which is what lets the engine reuse compiled
     hTask steps across re-plans (no retrace on churn).  Unused slots hold
-    fresh-init values that no batch row ever routes to.
+    fresh-init values that no batch row ever routes to.  Leaves a method
+    declares ``shared_params`` carry NO task axis: they are frozen,
+    deterministic, and shared by every tenant of the kind.
     """
 
     def __init__(
@@ -107,6 +110,7 @@ class MultiTaskAdapters:
         self.cfg = cfg
         self.task_cfgs = tuple(task_cfgs)
         self.dims = base_op_dims(cfg)
+        self.attention_ok = supports_attention_prefix(cfg)
         # group tasks by kind; record slot of each task within its kind stack
         self.kind_tasks: Dict[str, List[int]] = {}
         for i, tc in enumerate(task_cfgs):
@@ -141,17 +145,29 @@ class MultiTaskAdapters:
 
     # ------------------------------------------------------------------
 
+    def kind_targets(self, kind: str) -> Tuple[str, ...]:
+        """Union of the member tasks' requested BaseOp targets."""
+        tgts = set().union(*(self.task_cfgs[i].targets
+                             for i in self.kind_tasks[kind]))
+        return tuple(sorted(tgts))
+
+    def kind_sites(self, kind: str,
+                   targets_filter: Optional[set] = None) -> Dict[str, Tuple[int, int]]:
+        """The method's attach sites, restricted to a BaseOp-dims filter."""
+        dims = self.dims if targets_filter is None else {
+            n: d for n, d in self.dims.items() if n in targets_filter}
+        return get_method(kind).sites(self.kind_targets(kind), dims,
+                                      attention=self.attention_ok)
+
     def _per_layer_spec(self, targets_filter=None) -> Dict[str, Any]:
         out: Dict[str, Any] = {}
-        for kind, ids in self.kind_tasks.items():
+        for kind in self.kind_tasks:
+            method = get_method(kind)
             rank = self.kind_rank[kind]
             kspec: Dict[str, Any] = {}
-            for name, (din, dout) in self.dims.items():
-                wanted = any(name in self.task_cfgs[i].targets for i in ids)
-                if not wanted or (targets_filter and name not in targets_filter):
-                    continue
-                kspec[name] = adapter_spec(kind, rank, din, dout,
-                                           self.kind_capacity[kind])
+            for site, (din, dout) in self.kind_sites(kind, targets_filter).items():
+                kspec[site] = method.param_specs(rank, din, dout,
+                                                self.kind_capacity[kind])
             if kspec:
                 out[kind] = kspec
         return out
@@ -187,40 +203,45 @@ class MultiTaskAdapters:
         raise ValueError(cfg.family)
 
     def init(self, key: jax.Array) -> Any:
-        params = materialize(self.spec(), key)
-        return self._init_diff_rows(params)
+        return self._post_init(materialize(self.spec(), key))
 
     def abstract(self) -> Any:
         return abstract(self.spec())
 
-    def _init_diff_rows(self, params: Any) -> Any:
-        """Diff-pruning masks: fixed per-task row subsets (deterministic)."""
-        rng = np.random.RandomState(0)
+    def _post_init(self, params: Any) -> Any:
+        """Deterministic per-method fixups: structural masks (Diff-Pruning
+        rows), shared frozen matrices (VeRA A/B).  Pure in (site, dims), so
+        every stack rebuild reproduces identical values — migration then
+        never has to special-case them."""
+        site_dims = {k: self.kind_sites(k) for k in self.kind_tasks}
 
-        def walk(node: Any, target: Optional[str]) -> Any:
+        def walk(node: Any) -> Any:
             if not isinstance(node, dict):
                 return node
-            if "rows" in node and "delta" in node and target in self.dims:
-                d_in = self.dims[target][0]
-                shape = node["rows"].shape  # [..., rank]
-                rank = shape[-1]
-                n = int(np.prod(shape[:-1]))
-                rows = np.stack([
-                    rng.choice(d_in, size=rank, replace=d_in < rank) for _ in range(n)
-                ]).reshape(shape)
-                return dict(node, rows=jnp.asarray(rows, jnp.int32))
-            return {k: walk(v, k if k in self.dims else target) for k, v in node.items()}
+            out = {}
+            for k, v in node.items():
+                if k in self.kind_tasks and isinstance(v, dict):
+                    method = get_method(k)
+                    out[k] = {
+                        site: method.post_init(dict(leaves), site,
+                                               *site_dims[k].get(site, (0, 0)))
+                        if isinstance(leaves, dict) else leaves
+                        for site, leaves in v.items()
+                    }
+                else:
+                    out[k] = walk(v)
+            return out
 
-        return walk(params, None)
+        return walk(params)
 
     # ------------------------------------------------------------------
 
     def scales(self, kind: str) -> np.ndarray:
         """Per-slot aggregate scale, sized to the kind's stack capacity."""
+        method = get_method(kind)
         out = np.ones((self.kind_capacity[kind],), np.float32)
-        if kind == LORA:
-            for i in self.kind_tasks[kind]:
-                out[int(self.task_slot[i])] = self.task_cfgs[i].scale
+        for i in self.kind_tasks[kind]:
+            out[int(self.task_slot[i])] = method.slot_scale(self.task_cfgs[i])
         return out
 
     def slot_values(self, kind: str, per_task: Dict[int, float],
@@ -234,10 +255,11 @@ class MultiTaskAdapters:
 
     def kind_row_slots(self, segments: TaskSegments, kind: str) -> np.ndarray:
         """Per batch-row slot within the ``kind`` stack; -1 => not this kind."""
+        members = set(self.kind_tasks[kind])
         rt = segments.row_task_array()
         slots = np.full_like(rt, -1)
         for r, t in enumerate(rt):
-            if self.task_cfgs[t].kind == kind:
+            if t in members:
                 slots[r] = self.task_slot[t]
         return slots
 
@@ -248,65 +270,82 @@ class MultiTaskAdapters:
             for kind in self.kind_tasks
         }
         kind_scales = {kind: jnp.asarray(self.scales(kind)) for kind in self.kind_tasks}
-        task_targets = {
-            kind: set().union(*(self.task_cfgs[i].targets for i in ids))
-            for kind, ids in self.kind_tasks.items()
-        }
 
         def factory(layer_adapters: Any) -> AdapterContext:
-            return MultiTaskContext(layer_adapters, kind_slots, kind_scales, task_targets)
+            return MultiTaskContext(layer_adapters, kind_slots, kind_scales)
 
         return factory
 
 
 class MultiTaskContext(AdapterContext):
-    def __init__(self, layer_adapters, kind_slots, kind_scales, task_targets):
+    """Grouped Dispatch/Aggregate over a fused batch: one contribution per
+    PEFT kind, each produced by that kind's registered method."""
+
+    def __init__(self, layer_adapters, kind_slots, kind_scales):
         self.ad = layer_adapters or {}
         self.kind_slots = kind_slots
         self.kind_scales = kind_scales
-        self.task_targets = task_targets
 
     def has(self, name: str) -> bool:
         return any(name in kspec for kspec in self.ad.values())
 
-    def apply(self, name: str, x: jax.Array, base_out: jax.Array) -> jax.Array:
+    def _site_ctx(self, kind: str, d_in: int = 0, d_out: int = 0,
+                  base_weight=None) -> ApplyContext:
+        slots = self.kind_slots[kind]
+        return ApplyContext(
+            slots=slots,
+            gate=(slots >= 0).astype(jnp.float32),
+            scale=self.kind_scales[kind],
+            d_in=d_in, d_out=d_out, base_weight=base_weight,
+        )
+
+    def apply(self, name: str, x: jax.Array, base_out: jax.Array,
+              w: Optional[jax.Array] = None) -> jax.Array:
         """Dispatch/Aggregate over the fused batch.  All adapter params are
         gathered per *batch row* (B entries), never per token — memory-lean
-        on the XLA path and block-aligned for the Pallas path."""
+        on the XLA path and block-aligned for the Pallas path.  The site
+        output is ``(base_out + sum_k add_k) * prod_k mul_k``; each method's
+        contribution is identity on rows it doesn't own (one task per row,
+        one kind per task, so cross-kind terms never mix on a row)."""
         B, S = x.shape[0], x.shape[1]
         d_in = int(np.prod(x.shape[2:]))
         d_out = int(np.prod(base_out.shape[2:]))
         x3 = x.reshape(B, S, d_in)
         out3 = base_out.reshape(B, S, d_out)
+        w2 = w.reshape(d_in, d_out) if w is not None else None
         add = jnp.zeros_like(out3, dtype=jnp.float32)
         mul = None
         for kind, kspec in self.ad.items():
             if name not in kspec:
                 continue
-            p = kspec[name]
-            slots = self.kind_slots[kind]  # [B]
-            scl = self.kind_scales[kind]
-            t = jnp.maximum(slots, 0)
-            gate = (slots >= 0).astype(jnp.float32)  # [B]
-            if kind == LORA:
-                add = add + kops.grouped_lora(x3, p["a"], p["b"], slots, scl).astype(jnp.float32)
-            elif kind == ADAPTER_TUNING:
-                dwn = p["down"][t]  # [B, d_out, r]
-                up = p["up"][t]     # [B, r, d_out]
-                h = jnp.einsum("bso,bor->bsr", out3.astype(jnp.float32), dwn.astype(jnp.float32))
-                h = jax.nn.gelu(h)
-                add = add + jnp.einsum("bsr,bro->bso", h, up.astype(jnp.float32)) * gate[:, None, None]
-            elif kind == DIFF_PRUNING:
-                idx = jnp.minimum(p["rows"][t], d_in - 1)  # [B, rank]
-                x_sel = jnp.take_along_axis(x3, idx[:, None, :], axis=2)  # [B, S, rank]
-                delta = p["delta"][t]  # [B, rank, d_out]
-                add = add + jnp.einsum("bsr,bro->bso", x_sel.astype(jnp.float32),
-                                       delta.astype(jnp.float32)) * gate[:, None, None]
-            elif kind == IA3:
-                s = p["s"][t].astype(jnp.float32)  # [B, d_out]
-                m1 = 1.0 + s[:, None, :] * gate[:, None, None]
+            ctx = self._site_ctx(kind, d_in, d_out, w2)
+            a, m1 = get_method(kind).apply(kspec[name], x3, out3, ctx)
+            if a is not None:
+                add = add + a
+            if m1 is not None:
                 mul = m1 if mul is None else mul * m1
         y = out3.astype(jnp.float32) + add
         if mul is not None:
             y = y * mul
         return y.astype(base_out.dtype).reshape(base_out.shape)
+
+    def attn_prefix(self):
+        """Collect every soft-prompt kind's per-row k/v prefix rows for this
+        layer; concatenated along the prefix-token axis."""
+        pks, pvs, keeps = [], [], []
+        for kind, kspec in self.ad.items():
+            p = kspec.get("attn_prefix")
+            if p is None:
+                continue
+            ctx = self._site_ctx(kind)
+            pref = get_method(kind).attn_prefix(p, ctx)
+            if pref is None:
+                continue
+            pk, pv = pref  # [B, P, kv_dim]
+            pks.append(pk)
+            pvs.append(pv)
+            keeps.append(jnp.broadcast_to(ctx.gate[:, None], pk.shape[:2]))
+        if not pks:
+            return None
+        return (jnp.concatenate(pks, axis=1), jnp.concatenate(pvs, axis=1),
+                jnp.concatenate(keeps, axis=1))

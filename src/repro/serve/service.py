@@ -34,7 +34,11 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 from repro.configs import ArchConfig
-from repro.core.cost_model import HardwareProfile
+from repro.core.cost_model import (
+    CalibrationSample,
+    HardwareProfile,
+    calibrate_profile,
+)
 from repro.core.engine import PEFTEngine, StepMetrics
 from repro.core.planner import ExecutionPlan, ExecutionPlanner
 from repro.core.registry import ModelGenerator, load_task_tree, slice_task_tree
@@ -152,6 +156,11 @@ class MuxTuneService:
         self.memory_trace: List[float] = []  # Eq. 5 bytes after every event
         self.replans = 0
         self._cache_stats = [0, 0]           # hits/misses of retired engines
+        # measured (tasks, hTask schedule, wall) per iteration — the raw
+        # material for HardwareProfile calibration (ROADMAP: calibrate the
+        # admission saturation gate from StepMetrics wall times)
+        self.calibration_trace: List[CalibrationSample] = []
+        self._calibration_window = 256
 
     # ------------------------------------------------------------------
     # introspection
@@ -369,6 +378,7 @@ class MuxTuneService:
                 self._drain_queue()
             return None
         metrics = self.engine.run_iteration(self._loaders, n_micro=self.n_micro)
+        self._record_calibration_sample(metrics)
         self.clock += 1
         completed: List[TenantRecord] = []
         for gi, task in enumerate(self.plan.tasks):
@@ -394,3 +404,43 @@ class MuxTuneService:
                 break
             self.step()
         return self.accounting()
+
+    # ------------------------------------------------------------------
+    # hardware calibration (measured StepMetrics -> admission gate)
+
+    def _htask_counts(self) -> List[tuple]:
+        """(hTask, micro-steps) actually executed per iteration of the
+        current plan — the schedule the cost model predicts against."""
+        counts: Dict[int, int] = {}
+        for hid in self.engine._schedule(self.n_micro):
+            counts[hid] = counts.get(hid, 0) + 1
+        return [(self.plan.htasks[h], n) for h, n in counts.items()]
+
+    def _record_calibration_sample(self, metrics: StepMetrics) -> None:
+        self.calibration_trace.append((
+            tuple(self.plan.tasks), tuple(self._htask_counts()),
+            metrics.wall_seconds,
+        ))
+        if len(self.calibration_trace) > self._calibration_window:
+            del self.calibration_trace[:-self._calibration_window]
+
+    def calibrate(self, window: Optional[int] = None) -> HardwareProfile:
+        """Fit the cost model's saturation knee + analytic->wall scale to the
+        measured ``StepMetrics`` of recent iterations and install the fitted
+        profile into BOTH the planner and the admission controller — the
+        saturation gate then tracks the hardware this service actually runs
+        on (Fig. 9b on real timings) instead of the analytic TPU roofline."""
+        samples = self.calibration_trace[-(window or self._calibration_window):]
+        hw = calibrate_profile(self.cfg, self.parallelism, samples,
+                               base_hw=self.planner.hw)
+        self.planner.hw = hw
+        self.admission.hw = hw
+        return hw
+
+    def predicted_iteration_seconds(self) -> float:
+        """Current plan's predicted wall time per iteration under the (poss.
+        calibrated) profile — compare against StepMetrics.wall_seconds."""
+        if self.plan is None or self.engine is None:
+            return 0.0
+        cm = self.planner.cost_model(self.plan.tasks)
+        return cm.schedule_latency(self._htask_counts())

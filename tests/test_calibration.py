@@ -1,0 +1,123 @@
+"""Measured-trace hardware calibration (ROADMAP: admission saturation gate
+from StepMetrics wall times via HardwareProfile.calibrate).
+
+The fit recovers BOTH the global analytic->wall scale and the saturation
+knee (util_x_half) from a recorded trace, so calibrated predictions track
+the trace and the admission gate's latency-inflation ratio — which a pure
+global scale would leave untouched — reflects the measured hardware.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.cost_model import (
+    CostModel,
+    HardwareProfile,
+    calibrate_profile,
+)
+from repro.core.fusion import build_htask
+from repro.core.task import ParallelismSpec
+from repro.data.synthetic import make_task
+from repro.peft.adapters import AdapterConfig
+
+CFG = smoke_config("llama3.2-3b")
+PAR = ParallelismSpec()
+
+
+def _tasks(n):
+    return [make_task(f"t{i}", ["sst2", "qa", "rte"][i % 3], 2,
+                      AdapterConfig("lora", rank=4), seed=i)
+            for i in range(n)]
+
+
+def _schedule(tasks):
+    return tuple(
+        (build_htask(tasks, [i], "chunked")[0], 1) for i in range(len(tasks)))
+
+
+def _trace(hw_true, sizes=(1, 2, 3, 4, 2, 3)):
+    samples = []
+    for j, n in enumerate(sizes):
+        tasks = _tasks(n)
+        sched = _schedule(tasks)
+        cm = CostModel(CFG, tasks, PAR, hw_true)
+        wall = cm.schedule_latency(sched) * (1.0 + 0.03 * np.sin(j))
+        samples.append((tasks, sched, wall))
+    return samples
+
+
+def test_calibration_recovers_profile_and_tracks_trace():
+    base = HardwareProfile()
+    truth = HardwareProfile(util_x_half=base.util_x_half * 31.6)
+    truth.calibrate("__wall__", 2.5)
+    samples = _trace(truth)
+
+    fitted = calibrate_profile(CFG, PAR, samples, base_hw=base)
+    # knee recovered to within one grid step
+    ratio = fitted.util_x_half / truth.util_x_half
+    assert 1 / 3.5 < ratio < 3.5, (fitted.util_x_half, truth.util_x_half)
+    assert "__wall__" in fitted.calibration
+
+    def errors(hw):
+        errs = []
+        for tasks, sched, wall in samples:
+            pred = CostModel(CFG, tasks, PAR, hw).schedule_latency(sched)
+            errs.append(abs(pred - wall) / wall)
+        return float(np.mean(errs))
+
+    err_cal = errors(fitted)
+    err_raw = errors(base)
+    assert err_cal < 0.10, err_cal          # calibrated tracks the trace
+    assert err_cal < err_raw / 2, (err_cal, err_raw)
+
+
+def test_calibration_changes_saturation_ratio_not_just_scale():
+    """The admission gate consumes a latency RATIO; a fitted knee must move
+    it (a pure wall scale would cancel)."""
+    tasks = _tasks(4)
+    fused, _ = build_htask(tasks, list(range(4)), "chunked")
+    singles = [build_htask(tasks, [i], "chunked")[0] for i in range(4)]
+
+    def saturation(hw):
+        cm = CostModel(CFG, tasks, PAR, hw)
+        solo = max(cm.stage_latency(h) for h in singles)
+        return cm.stage_latency(fused) / solo
+
+    base = HardwareProfile()
+    truth = HardwareProfile(util_x_half=base.util_x_half * 100.0)
+    fitted = calibrate_profile(CFG, PAR, _trace(truth), base_hw=base)
+    assert abs(saturation(fitted) - saturation(base)) > 0.05
+
+
+def test_calibration_empty_trace_is_identity():
+    base = HardwareProfile()
+    assert calibrate_profile(CFG, PAR, [], base_hw=base) is base
+
+
+def test_service_calibrate_from_measured_steps(tmp_path):
+    """End-to-end: a live service calibrates from its own StepMetrics and
+    the calibrated prediction lands within a small factor of the measured
+    per-iteration wall time (loose: CPU timing noise)."""
+    from repro.serve import MuxTuneService
+
+    svc = MuxTuneService(CFG, PAR, lr=1e-3, n_micro=1, enable_fusion=False,
+                         reserve_slots=2, seed=0)
+    svc.submit(_tasks(2)[0], target_steps=99)
+    svc.submit(_tasks(2)[1], target_steps=99)
+    walls = []
+    for _ in range(6):
+        m = svc.step()
+        walls.append(m.wall_seconds)
+    hw = svc.calibrate(window=4)
+    assert "__wall__" in hw.calibration
+    assert svc.planner.hw is hw and svc.admission.hw is hw
+    pred = svc.predicted_iteration_seconds()
+    meas = float(np.mean(walls[-4:]))
+    assert pred > 0 and meas > 0
+    assert 0.2 < pred / meas < 5.0, (pred, meas)
+    # admission still functions under the calibrated profile
+    extra = make_task("x", "rte", 2, AdapterConfig("ia3", rank=2), seed=9)
+    decision = svc.admission.check(svc.resident, extra)
+    assert decision.reason in ("ok", "memory", "saturated", "tenant_cap")
+    svc.cancel("t0")
+    svc.cancel("t1")

@@ -196,6 +196,67 @@ def test_packed_attention_multisegment_grads(key):
         assert _max_err(p, q_) < 2e-3, (name, _max_err(p, q_))
 
 
+def test_packed_attention_prefix_rows_grads(key):
+    """Learned prefix k/v rows (soft-prompt PEFT): the Pallas wildcard-
+    segment path and the XLA carry-init path agree with a dense reference,
+    gradients included, and ungated rows' prefixes get exactly zero grad."""
+    B, S, H, Hkv, dh, P = 2, 64, 4, 2, 16, 8
+    ks = jax.random.split(key, 6)
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, Hkv, dh))
+    v = jax.random.normal(ks[2], (B, S, Hkv, dh))
+    pk = jax.random.normal(ks[3], (B, P, Hkv, dh)) * 0.5
+    pv = jax.random.normal(ks[4], (B, P, Hkv, dh)) * 0.5
+    keep = jnp.asarray([[1.0] * P, [0.0] * P])  # row 0 gated on, row 1 off
+    half = S // 2
+    seg = jnp.concatenate([jnp.zeros((B, half), jnp.int32),
+                           jnp.ones((B, half), jnp.int32)], axis=1)
+    pos = jnp.broadcast_to(
+        jnp.concatenate([jnp.arange(half), jnp.arange(half)]).astype(jnp.int32),
+        (B, S))
+    g = jax.random.normal(ks[5], (B, S, H, dh))
+
+    def dense_ref(q, k, v, pk, pv):
+        G = H // Hkv
+        q5 = q.reshape(B, S, Hkv, G, dh).astype(jnp.float32)
+        kf = jnp.concatenate([pk, k], 1).astype(jnp.float32)
+        vf = jnp.concatenate([pv, v], 1).astype(jnp.float32)
+        s = jnp.einsum("bskgd,bpkd->bskgp", q5, kf) / np.sqrt(dh)
+        kseg = jnp.concatenate(
+            [jnp.where(keep > 0, -1, -2).astype(jnp.int32), seg], 1)
+        kpos = jnp.concatenate([jnp.full((B, P), -1, jnp.int32), pos], 1)
+        mask = ((seg[:, :, None] == kseg[:, None, :])
+                | (kseg[:, None, :] == -1))
+        mask &= pos[:, :, None] >= kpos[:, None, :]
+        s = jnp.where(mask[:, :, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bskgp,bpkd->bskgd", p, vf).reshape(B, S, H, dh)
+
+    def loss_ref(q, k, v, pk, pv):
+        return (dense_ref(q, k, v, pk, pv) * g).sum()
+
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3, 4))(q, k, v, pk, pv)
+    prev = kops.get_impl()
+    try:
+        for impl in ("xla", "pallas_interpret"):
+            kops.set_impl(impl)
+
+            def loss(q, k, v, pk, pv):
+                o = kops.packed_attention(q, k, v, segment_ids=seg,
+                                          positions=pos, causal=True,
+                                          prefix_kv=(pk, pv),
+                                          prefix_keep=keep)
+                return (o * g).sum()
+
+            gp = jax.grad(loss, argnums=(0, 1, 2, 3, 4))(q, k, v, pk, pv)
+            for name, a, b in zip(("dq", "dk", "dv", "dpk", "dpv"), gp, gr):
+                assert _max_err(a, b) < 1e-3, (impl, name, _max_err(a, b))
+            np.testing.assert_array_equal(np.asarray(gp[3][1]), 0.0)
+            np.testing.assert_array_equal(np.asarray(gp[4][1]), 0.0)
+    finally:
+        kops.set_impl(prev)
+
+
 # ---------------------------------------------------------------------------
 # end-to-end: value_and_grad of a full train step under the Pallas tier
 # ---------------------------------------------------------------------------
