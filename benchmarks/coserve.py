@@ -1,0 +1,74 @@
+"""Co-serve SLO benchmark: decode latency under concurrent fine-tuning.
+
+Drives the REAL ``MuxTuneService`` with two training tenants and a stream
+of inference requests, measuring:
+
+  * decode token latency p50/p99 while training iterations run (the SLO
+    the interleave scheduler packs against);
+  * the training-iteration slowdown the decode traffic imposes (co-serve
+    overhead vs a traffic-free run of the same tenants);
+  * request completion throughput.
+
+Rows join the ``--json`` BENCH artifact, so decode-latency regressions are
+tracked by the cross-PR ``--compare`` gate like every other hot path.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_config, csv_row
+
+
+def _run(with_traffic: bool, steps: int = 6):
+    from repro.core.task import ParallelismSpec
+    from repro.data.synthetic import make_task
+    from repro.peft.adapters import AdapterConfig
+    from repro.serve import CoServeConfig, MuxTuneService
+
+    cfg = bench_config("llama3.2-3b")
+    svc = MuxTuneService(
+        cfg, ParallelismSpec(), lr=1e-3, n_micro=1, enable_fusion=False,
+        reserve_slots=4, auto_recalibrate=False,
+        coserve=CoServeConfig(decode_slots=2, decode_max_len=48,
+                              max_new_cap=8, slo_seconds=2.0))
+    svc.submit(make_task("a", "sst2", 2, AdapterConfig("lora", rank=8),
+                         seed=0), target_steps=steps + 1)
+    svc.submit(make_task("b", "qa", 2, AdapterConfig("prefix", rank=4),
+                         seed=1), target_steps=steps + 1)
+    svc.step()  # compile the training path outside the measured region
+    rng = np.random.RandomState(0)
+    walls, n_req = [], 0
+    for i in range(steps):
+        if with_traffic:
+            # keep both pool rows busy: top the queue up every iteration
+            while sum(r.state in ("pending", "decoding")
+                      for r in svc.coserve.requests.values()) < 2:
+                svc.submit_request(
+                    "a" if n_req % 2 else "b",
+                    rng.randint(1, cfg.vocab_size, size=6), max_new_tokens=6)
+                n_req += 1
+        t0 = time.perf_counter()
+        svc.step()
+        walls.append(time.perf_counter() - t0)
+    return svc, walls
+
+
+def run() -> list[str]:
+    svc_ref, walls_ref = _run(with_traffic=False)
+    svc, walls = _run(with_traffic=True)
+    acc = svc.accounting()["coserve"]
+    # drop each run's first measured step (bind/decode compile transients)
+    train_ref = float(np.median(walls_ref[1:]))
+    train_co = float(np.median(walls[1:]))
+    p50, p99 = acc["decode_p50_s"], acc["decode_p99_s"]
+    return [
+        csv_row("coserve/decode_token_p50", p50 * 1e6,
+                f"p99_us={p99 * 1e6:.0f};tokens={acc['decode_tokens']}"),
+        csv_row("coserve/decode_token_p99", p99 * 1e6,
+                f"completed_requests={acc['completed_requests']}"),
+        csv_row("coserve/step_wall_coserve", train_co * 1e6,
+                f"train_only_us={train_ref * 1e6:.0f};"
+                f"overhead={train_co / max(train_ref, 1e-9):.2f}x"),
+    ]

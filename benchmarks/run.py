@@ -15,12 +15,21 @@ directory against baselines of the same name under <dir> (e.g. artifacts
 downloaded from the previous main run), printing per-metric deltas.  Exit
 code is 1 when any metric regressed beyond ``--threshold`` (default +25%,
 metrics are lower-is-better) — wire it as a NON-blocking CI step.
+
+Every ``--compare`` run also APPENDS the current artifacts to
+``<dir>/history/run-<n>[-<tag>]/`` and regenerates ``<dir>/DASHBOARD.md``
+— a markdown table of each metric's trajectory across the retained runs.
+Retention policy: the newest ``--retain`` (default 8) untagged runs are
+kept; runs recorded with ``--tag <name>`` are pinned baselines and never
+pruned.
 """
 from __future__ import annotations
 
 import glob
 import json
 import os
+import re
+import shutil
 import sys
 import time
 import traceback
@@ -36,17 +45,103 @@ MODULES = [
     "throughput",
     "roofline",
     "serve_trace",
+    "coserve",
 ]
 
 
-def compare(baseline_dir: str, threshold: float, bootstrap: bool = True) -> int:
+# ---------------------------------------------------------------------------
+# Artifact history: retention policy + markdown dashboard
+# ---------------------------------------------------------------------------
+
+_RUN_RE = re.compile(r"^run-(\d+)(?:-(.+))?$")
+
+
+def _history_runs(baseline_dir: str):
+    """Sorted [(seq, tag_or_None, path)] of recorded history runs."""
+    out = []
+    hist = os.path.join(baseline_dir, "history")
+    for name in (os.listdir(hist) if os.path.isdir(hist) else []):
+        m = _RUN_RE.match(name)
+        if m and os.path.isdir(os.path.join(hist, name)):
+            out.append((int(m.group(1)), m.group(2), os.path.join(hist, name)))
+    return sorted(out)
+
+
+def record_history(baseline_dir: str, retain: int = 8,
+                   tag: str | None = None) -> str:
+    """Append the cwd's BENCH_*.json as the next history run and prune
+    untagged runs beyond ``retain`` (tagged runs are pinned baselines)."""
+    runs = _history_runs(baseline_dir)
+    seq = (runs[-1][0] + 1) if runs else 1
+    name = f"run-{seq}" + (f"-{tag}" if tag else "")
+    dst = os.path.join(baseline_dir, "history", name)
+    os.makedirs(dst, exist_ok=True)
+    for path in sorted(glob.glob("BENCH_*.json")):
+        shutil.copy(path, os.path.join(dst, os.path.basename(path)))
+    runs = _history_runs(baseline_dir)
+    untagged = [r for r in runs if r[1] is None]
+    for _seq, _tag, path in untagged[:max(len(untagged) - retain, 0)]:
+        shutil.rmtree(path, ignore_errors=True)
+    return dst
+
+
+def write_dashboard(baseline_dir: str, max_cols: int = 10) -> str:
+    """Regenerate <dir>/DASHBOARD.md: per-module metric history across the
+    retained runs (oldest -> newest; tagged runs marked with their tag)."""
+    runs = _history_runs(baseline_dir)[-max_cols:]
+    lines = ["# Benchmark history", "",
+             "Per-PR metric trajectory (us/call, lower is better) over the "
+             f"retained runs under `history/`.  Columns are runs oldest to "
+             f"newest; tagged runs are pinned baselines.", ""]
+    modules: dict[str, dict[str, dict[int, float]]] = {}
+    for seq, _tag, path in runs:
+        for art in sorted(glob.glob(os.path.join(path, "BENCH_*.json"))):
+            mod = os.path.basename(art)[len("BENCH_"):-len(".json")]
+            with open(art) as f:
+                data = json.load(f)
+            tbl = modules.setdefault(mod, {})
+            for metric, val in data.items():
+                tbl.setdefault(metric, {})[seq] = float(val)
+    cols = [(seq, tag) for seq, tag, _ in runs]
+    for mod in sorted(modules):
+        lines.append(f"## {mod}")
+        lines.append("")
+        head = " | ".join(f"run-{s}" + (f" ({t})" if t else "")
+                          for s, t in cols)
+        lines.append(f"| metric | {head} |")
+        lines.append("|" + "---|" * (len(cols) + 1))
+        for metric in sorted(modules[mod]):
+            vals = modules[mod][metric]
+            cells = []
+            prev = None
+            for s, _t in cols:
+                v = vals.get(s)
+                if v is None:
+                    cells.append("")
+                elif prev not in (None, 0.0) and abs(v / prev - 1) > 0.25:
+                    cells.append(f"**{v:.1f}**")  # >25% move vs prior run
+                else:
+                    cells.append(f"{v:.1f}")
+                prev = v if v is not None else prev
+            lines.append(f"| {metric} | " + " | ".join(cells) + " |")
+        lines.append("")
+    out = os.path.join(baseline_dir, "DASHBOARD.md")
+    with open(out, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    return out
+
+
+def compare(baseline_dir: str, threshold: float, bootstrap: bool = True,
+            retain: int = 8, tag: str | None = None) -> int:
     """Cross-PR bench diff: current ./BENCH_*.json vs baseline_dir's.
 
     First-run bootstrap: when the baseline directory is missing or holds no
     artifacts (a fresh repo, expired artifact retention, or a renamed CI
     artifact), the current artifacts are seeded INTO it and the compare
     passes — so the very first CI run establishes the baseline instead of
-    failing the fetch."""
+    failing the fetch.  Every call also appends the current artifacts to the
+    baseline's history (``--retain``/``--tag`` policy) and regenerates the
+    DASHBOARD.md metric-trajectory table."""
     current = sorted(glob.glob("BENCH_*.json"))
     if not current:
         print(f"# no BENCH_*.json in {os.getcwd()} to compare", file=sys.stderr)
@@ -57,10 +152,10 @@ def compare(baseline_dir: str, threshold: float, bootstrap: bool = True) -> int:
             print(f"# no baseline artifacts under {baseline_dir}", file=sys.stderr)
             return 2
         os.makedirs(baseline_dir, exist_ok=True)
-        import shutil
-
         for path in current:
             shutil.copy(path, os.path.join(baseline_dir, os.path.basename(path)))
+        record_history(baseline_dir, retain=retain, tag=tag)
+        write_dashboard(baseline_dir)
         print(f"# bootstrap: no baseline under {baseline_dir}; seeded "
               f"{len(current)} artifact(s) as the new baseline")
         return 0
@@ -97,6 +192,9 @@ def compare(baseline_dir: str, threshold: float, bootstrap: bool = True) -> int:
             print(f"{mod},{metric},{b:.1f},{c:.1f},{delta * 100:+.1f},{flag}")
     print(f"# compared {compared} metrics, {regressions} regression(s) "
           f"beyond +{threshold * 100:.0f}%")
+    dst = record_history(baseline_dir, retain=retain, tag=tag)
+    dash = write_dashboard(baseline_dir)
+    print(f"# history: recorded {os.path.basename(dst)}, dashboard {dash}")
     return 1 if regressions else 0
 
 
@@ -105,11 +203,13 @@ def main() -> None:
     as_json = "--json" in args
     compare_dir = None
     threshold = 0.25
+    retain = 8
+    tag = None
     only = []
     i = 0
     while i < len(args):
         a = args[i]
-        if a in ("--compare", "--threshold"):
+        if a in ("--compare", "--threshold", "--retain", "--tag"):
             i += 1
             if i >= len(args):
                 # usage error: distinct from the rc=1 "regression" signal
@@ -117,13 +217,17 @@ def main() -> None:
                 sys.exit(2)
             if a == "--compare":
                 compare_dir = args[i]
-            else:
+            elif a == "--threshold":
                 threshold = float(args[i])
+            elif a == "--retain":
+                retain = int(args[i])
+            else:
+                tag = args[i]
         elif not a.startswith("--"):
             only.append(a)
         i += 1
     if compare_dir is not None:
-        sys.exit(compare(compare_dir, threshold))
+        sys.exit(compare(compare_dir, threshold, retain=retain, tag=tag))
 
     print("name,us_per_call,derived")
     for name in MODULES:

@@ -214,6 +214,46 @@ class CostModel:
     def fits_memory(self, htasks: Sequence[HTask], budget: float = HBM_BYTES) -> bool:
         return self.stage_memory(htasks) <= budget
 
+    # -------------------------------------------------- decode-token term
+    def decode_token_latency(self, rows: int, ctx_len: int) -> float:
+        """Predicted wall seconds for ONE fused decode micro-step of the
+        co-serving pool: ``rows`` requests, one token each, over a mean
+        context of ``ctx_len`` cached positions.
+
+        Decode is the memory-bound regime of §2.2 — each BaseOp reads its
+        full weight for a handful of tokens, so ``bytes_fixed`` dominates
+        and the saturation curve sits far below the knee.  The attention
+        term reads every cached k/v row.  The SLO interleave scheduler uses
+        this to size the decode micro-batch that fits next to a training
+        iteration (FlexLLM-style token packing).
+        """
+        p = self.parallelism
+        lat = 0.0
+        for op in self._ops:
+            flops = op.flops_per_token * rows
+            bytes_moved = op.bytes_fixed + op.bytes_per_token * rows
+            cal = self.hw.calibration.get(op.name, 1.0)
+            lat += cal * self.hw.op_latency(flops / p.tp, bytes_moved / p.tp)
+        # attention over the KV cache: score+pv FLOPs plus the cache read
+        kv_dim = 2 * self.cfg.kv_dim if self.cfg.attention != "none" else 0
+        att_flops = attention_flops_per_token(self.cfg, max(ctx_len, 1)) * 2.0 * rows
+        kv_bytes = rows * ctx_len * kv_dim * self.dtype_bytes
+        lat += self.hw.op_latency(att_flops / p.tp, kv_bytes / p.tp)
+        # adapters: every resident method applies at decode exactly as at
+        # train time — one token per row, mean per-task site cost
+        if self.tasks:
+            a = sum(sum(fl for _s, _i, _o, fl, _p in self.task_sites(t))
+                    for t in self.tasks) / len(self.tasks)
+            lat += self.hw.op_latency(a * rows, rows * self.cfg.d_model
+                                      * self.dtype_bytes)
+        # decode runs the FULL depth (every stage) per token
+        lat *= self._layers_per_stage * self.parallelism.num_stages
+        # unembedding projection (the argmax feedback stays on device)
+        lat += self.hw.op_latency(
+            2.0 * rows * self.cfg.d_model * self.cfg.vocab_size,
+            self.cfg.d_model * self.cfg.vocab_size * self.dtype_bytes)
+        return lat * self.hw.wall_scale()
+
     def schedule_latency(self, htask_counts: Sequence[Tuple[HTask, int]]) -> float:
         """Predicted wall time of one engine iteration: the scheduled
         hTask micro-steps run back-to-back over all stages (the engine's

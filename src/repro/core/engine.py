@@ -51,6 +51,17 @@ class StepMetrics:
     tokens: int
     effective_tokens: int
     wall_seconds: float
+    # co-serving (token-level decode interleave) — zero when no inference
+    # traffic rode along with this training iteration
+    decode_tokens: int = 0
+    decode_seconds: float = 0.0
+    decode_p50_s: float = 0.0   # windowed per-token latency percentiles
+    decode_p99_s: float = 0.0
+
+    @property
+    def decode_token_seconds(self) -> float:
+        """Mean wall seconds per decode token of this iteration's batch."""
+        return self.decode_seconds / max(self.decode_tokens, 1)
 
 
 class PEFTEngine:
@@ -77,6 +88,13 @@ class PEFTEngine:
         self._lr_scales = self._build_lr_scales()
         self._slot_steps = self._fresh_slot_steps()
         self._member_ids = self._build_member_ids()
+        # task-aware decode pool (co-serving data plane); fns are compiled
+        # lazily and invalidated with the training step cache (adapter-stack
+        # shape changes), NOT on churn — the slot-stable decode contract
+        self._decode_pool: Optional[Dict[str, Any]] = None
+        self._decode_geom: Optional[Tuple] = None  # (rows, max_len, cap, prefix)
+        self._decode_fns: Dict[Any, Callable] = {}
+        self.decode_pool_gen = 0  # bumps when the pool is (re)allocated
 
     # ------------------------------------------------------------------
 
@@ -175,6 +193,7 @@ class PEFTEngine:
         new_sig = self._adapter_shape_sig()
         if new_sig != self._adapter_sig:
             self._steps.clear()  # stack shapes changed: every step is stale
+            self._decode_fns.clear()  # decode steps close over the stacks too
             self._adapter_sig = new_sig
         self._lr_scales = self._build_lr_scales()
         self._slot_steps = self._carry_slot_steps(old_reg)
@@ -332,8 +351,98 @@ class PEFTEngine:
             order = kept
         return [hid for b in order for hid in buckets[b].htask_ids]
 
+    # ------------------------------------------------------------------
+    # Task-aware decode pool (SLO co-serving data plane)
+
+    def decode_prefix_reserve(self) -> int:
+        from repro.launch.steps import decode_prefix_reserve
+
+        return decode_prefix_reserve(self.reg.mta)
+
+    def ensure_decode_pool(self, rows: int, max_len: int,
+                           max_new_cap: int) -> Dict[str, Any]:
+        """Allocate (or re-allocate on geometry change) the fused decode
+        pool.  A re-allocation bumps ``decode_pool_gen`` — in-flight rows
+        are lost and the owning scheduler must re-bind its requests."""
+        pres = self.decode_prefix_reserve()
+        geom = (rows, max_len, max_new_cap, pres)
+        if self._decode_pool is None or self._decode_geom != geom:
+            from repro.launch.steps import init_decode_pool
+
+            self._decode_pool = init_decode_pool(
+                self.model, rows, max_len, max_new_cap, prefix_reserve=pres)
+            self._decode_geom = geom
+            self._decode_fns.clear()
+            self.decode_pool_gen += 1
+        return self._decode_pool
+
+    def decode_row_ctx(self, row_task: Sequence[int]):
+        """(row_slots, scales) device-feedable dicts for a row->GLOBAL-task
+        map (-1 = unbound row) under the CURRENT registration."""
+        mta = self.reg.mta
+        slots = {k: jnp.asarray(v)
+                 for k, v in mta.decode_row_slots(row_task).items()}
+        scales = {k: jnp.asarray(mta.scales(k)) for k in mta.kind_tasks}
+        return slots, scales
+
+    def decode_micro_ready(self) -> bool:
+        """True once the fused decode micro-step is compiled — latency
+        samples taken before this are trace/compile transients and must not
+        enter the SLO p50/p99 window."""
+        return "micro" in self._decode_fns
+
+    def _decode_fn(self, key, builder) -> Callable:
+        fn = self._decode_fns.get(key)
+        if fn is None:
+            fn = self._decode_fns[key] = builder()
+        return fn
+
+    def dispatch_decode_micro(self, row_slots, scales) -> None:
+        """Enqueue ONE fused decode token for the pool (async dispatch —
+        no host sync; interleavable between training micro-steps)."""
+        from repro.launch.steps import build_decode_micro_step
+
+        fn = self._decode_fn(
+            "micro", lambda: build_decode_micro_step(
+                self.model, self.reg.mta, self._decode_geom[3]))
+        self._decode_pool = fn(self.backbone, self.reg.adapter_params,
+                               self._decode_pool, row_slots, scales)
+
+    def dispatch_decode_bind(self, row: int, tokens: np.ndarray, length: int,
+                             row_slots, scales, max_new: int) -> None:
+        """Bind a request to pool row ``row``: single-row prefill + prefix
+        KV fold + scatter (async).  ``tokens`` is [1, Lp] (a fixed prompt
+        bucket: one compiled bind per Lp)."""
+        from repro.launch.steps import build_decode_bind_step
+
+        fn = self._decode_fn(
+            ("bind", int(tokens.shape[1])),
+            lambda: build_decode_bind_step(
+                self.model, self.reg.mta, self._decode_geom[1],
+                self._decode_geom[3]))
+        self._decode_pool = fn(
+            self.backbone, self.reg.adapter_params, self._decode_pool,
+            jnp.asarray(row, jnp.int32), jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(length, jnp.int32), row_slots, scales,
+            jnp.asarray(max_new, jnp.int32))
+
+    def decode_accounting(self) -> Dict[str, np.ndarray]:
+        """The per-iteration host sync of the decode pool: small counters
+        only (generated counts, active flags, context lengths)."""
+        p = self._decode_pool
+        got = jax.device_get({"n_out": p["n_out"], "active": p["active"],
+                              "pos": p["state"]["pos"]})
+        return {k: np.asarray(v) for k, v in got.items()}
+
+    def decode_outputs(self, row: int) -> np.ndarray:
+        """Generated token buffer of one pool row (request completion)."""
+        return np.asarray(jax.device_get(self._decode_pool["out"][row]))
+
+    # ------------------------------------------------------------------
+
     def run_iteration(
-        self, loaders: Dict[int, Iterator], n_micro: Optional[int] = None
+        self, loaders: Dict[int, Iterator], n_micro: Optional[int] = None,
+        interleave: Optional[Callable[[], None]] = None,
     ) -> StepMetrics:
         """One training iteration: all buckets, template order, C micro each.
 
@@ -346,6 +455,12 @@ class PEFTEngine:
         flight while the current step computes.  The local→global per-task
         loss scatter uses the pre-staged device index vectors, so it adds no
         transfer either.
+
+        ``interleave`` (token-level co-serving): a callable invoked after
+        every training micro-step's dispatch.  It may enqueue decode
+        micro-steps (``dispatch_decode_micro``) — because dispatch is
+        asynchronous, this interleaves inference tokens INTO the training
+        iteration's device queue without stalling either stream.
         """
         from repro.launch.steps import prefetch_to_device
 
@@ -373,6 +488,8 @@ class PEFTEngine:
             h = self.plan.htasks[hid]
             tokens += h.tokens
             eff += h.effective_tokens
+            if interleave is not None:
+                interleave()
         # The iteration's single host sync: one explicit transfer of the
         # device accumulators (blocks until the whole iteration retires).
         loss_h, pt_h = jax.device_get(acc)

@@ -160,8 +160,9 @@ def _state_axes(cfg: ArchConfig, state: Any) -> Any:
         if isinstance(node, dict):
             return {k: walk(v, path + (k,)) for k, v in node.items()}
         nd = node.ndim if hasattr(node, "ndim") else 0
-        if path[-1] == "pos" or nd == 0:
-            return ()
+        if path[-1] in ("pos", "t", "lo") or nd == 0:
+            # per-row decode-pool counters shard with the cache batch
+            return ("cache_batch",)[:nd]
         if path[0] == "kv" or path[-1] in ("cross_k", "cross_v"):
             return ("layers", "cache_batch", "cache_seq", "kv_heads", "head_dim")[:nd] if path[0] == "kv" else (
                 "layers", "cache_batch", None, "heads", "head_dim")[:nd]
@@ -304,3 +305,169 @@ def build_serve_step(model: Model):
         return model.decode_step(backbone, state, tokens)
 
     return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Task-aware decode pool (SLO co-serving data plane)
+# ---------------------------------------------------------------------------
+#
+# The pool is a fixed-geometry fused decode batch: ``rows`` independent
+# inference requests share ONE compiled micro-step, each row bound to a
+# tenant's adapter slot (-1 = idle).  Row->task routing enters the jitted
+# steps as TRACED slot vectors (``ctx_factory_from_slots``), so binding and
+# unbinding requests — and tenant churn that renumbers tasks — never
+# retraces; only adapter-stack shape changes do (the same invalidation rule
+# as the training step cache).  The whole generation loop stays on device:
+# greedy sampling feeds back internally, tokens accumulate in the ``out``
+# buffer, and the host syncs accounting once per iteration.
+
+
+def decode_prefix_reserve(mta: MultiTaskAdapters) -> int:
+    """Static prefix region of the pool's KV cache: the widest soft-prompt
+    row count any resident kind can fold in (rows are owned exclusively, so
+    the max — not the sum — bounds the region)."""
+    from repro.peft.methods import get_method
+
+    return max((mta.kind_rank[k] for k in mta.kind_tasks
+                if get_method(k).uses_attention_prefix), default=0)
+
+
+def init_decode_pool(model: Model, rows: int, max_len: int, max_new_cap: int,
+                     prefix_reserve: int = 0, cache_dtype=jnp.bfloat16):
+    """Allocate the fused decode pool (all rows idle)."""
+    state = model.init_decode_state(None, rows, max_len,
+                                    cache_dtype=cache_dtype,
+                                    prefix_reserve=prefix_reserve,
+                                    per_row=True)
+    def z():  # distinct buffers: the pool is donated through jitted steps
+        return jnp.zeros((rows,), jnp.int32)
+
+    return {
+        "state": state,
+        "cur": z(),                                 # next input token per row
+        "out": jnp.zeros((rows, max_new_cap), jnp.int32),  # generated tokens
+        "n_out": z(),                               # generated count per row
+        "active": z(),                              # 1 while generating
+        "max_new": z(),                             # per-row generation target
+    }
+
+
+def build_decode_micro_step(model: Model, mta: MultiTaskAdapters,
+                            prefix_reserve: int = 0):
+    """One fused generation token for every active pool row (jitted).
+
+    Greedy decode: feeds each row's ``cur`` token, records the argmax
+    continuation, advances only active rows.  Inactive rows still compute
+    (static shapes) but their decode state is frozen — the cache rows they
+    touch stay outside the valid window, so a later rebind sees a clean
+    slate.
+    """
+
+    def decode_micro(backbone, adapters, pool, row_slots, scales):
+        ctxf = mta.ctx_factory_from_slots(row_slots, scales)
+        st = pool["state"]
+        active = pool["active"] > 0
+        logits, new_st = model.decode_step(
+            backbone, st, pool["cur"][:, None], adapters=adapters,
+            ctx_factory=ctxf, prefix_reserve=prefix_reserve)
+        nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+        B = pool["cur"].shape[0]
+        rows = jnp.arange(B)
+        widx = jnp.minimum(pool["n_out"], pool["out"].shape[1] - 1)
+        out_buf = pool["out"].at[rows, widx].set(
+            jnp.where(active, nxt, pool["out"][rows, widx]))
+        n_out = pool["n_out"] + active.astype(jnp.int32)
+        # freeze inactive rows' per-row counters (their cache writes land
+        # outside the frozen window and are overwritten before re-exposure)
+        new_st = dict(new_st)
+        new_st["pos"] = jnp.where(active, new_st["pos"], st["pos"])
+        return {
+            "state": new_st,
+            "cur": jnp.where(active, nxt, pool["cur"]),
+            "out": out_buf,
+            "n_out": n_out,
+            "active": (active & (n_out < pool["max_new"])).astype(jnp.int32),
+            "max_new": pool["max_new"],
+        }
+
+    return jax.jit(decode_micro, donate_argnums=(2,))
+
+
+def build_decode_bind_step(model: Model, mta: MultiTaskAdapters,
+                           max_len: int, prefix_reserve: int = 0):
+    """Bind one request to a pool row (jitted): single-row chunked PREFILL
+    into a fresh row cache, soft-prompt k/v rows folded into the reserved
+    prefix region (right-aligned, per-row window ``lo``), then the whole
+    row scattered into the pool.  ``row``/slot routing are traced, so one
+    compiled bind serves every (row, tenant) pair of a prompt-length
+    bucket.
+    """
+    cfg = model.cfg
+    from repro.peft.methods import get_method
+
+    prefix_kinds = tuple(k for k in mta.kind_tasks
+                         if get_method(k).uses_attention_prefix)
+    hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim()
+
+    def bind(backbone, adapters, pool, row, tokens, length, row_slots,
+             scales, max_new):
+        # tokens [1, Lp] (padded), length [] true prompt len, row [] int32,
+        # row_slots {kind: [1]}, max_new [] int32
+        ctxf = mta.ctx_factory_from_slots(row_slots, scales)
+        st1 = model.init_decode_state(None, 1, max_len,
+                                      cache_dtype=pool["state"]["kv"]["k"].dtype,
+                                      prefix_reserve=prefix_reserve,
+                                      per_row=True)
+        batch = {"tokens": tokens}
+        if cfg.mrope:
+            S = tokens.shape[1]
+            batch["mrope_positions"] = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32), (3, 1, S))
+        logits, st1 = model.prefill(backbone, batch, st1, adapters=adapters,
+                                    ctx_factory=ctxf,
+                                    prefix_reserve=prefix_reserve,
+                                    lengths=jnp.reshape(length, (1,)))
+        # fold soft-prompt rows into the reserved prefix region + window
+        k1, v1 = st1["kv"]["k"], st1["kv"]["v"]
+        lo_val = jnp.asarray(prefix_reserve, jnp.int32)
+        for kind in prefix_kinds if prefix_reserve else ():
+            kspec = adapters.get(kind, {}).get("attn_prefix")
+            if kspec is None:
+                continue
+            slot = row_slots[kind][0]
+            has = slot >= 0
+            pk = kspec["pk"][:, jnp.maximum(slot, 0)]  # [L, P, kv_dim]
+            pv = kspec["pv"][:, jnp.maximum(slot, 0)]
+            P = pk.shape[1]
+            pk = pk.reshape(pk.shape[0], P, hkv, dh).astype(k1.dtype)
+            pv = pv.reshape(pv.shape[0], P, hkv, dh).astype(v1.dtype)
+            sl = slice(prefix_reserve - P, prefix_reserve)
+            k1 = k1.at[:, 0, sl].set(jnp.where(has, pk, k1[:, 0, sl]))
+            v1 = v1.at[:, 0, sl].set(jnp.where(has, pv, v1[:, 0, sl]))
+            lo_val = jnp.where(has, lo_val - P, lo_val)
+        # first generated token: argmax at the last TRUE prompt position
+        last = jnp.take_along_axis(
+            logits.astype(jnp.float32),
+            jnp.reshape(jnp.maximum(length - 1, 0), (1, 1, 1)), axis=1)
+        first = jnp.argmax(last[0, 0], axis=-1).astype(jnp.int32)
+        # scatter the bound row into the pool
+        ps = pool["state"]
+        new_kv = {
+            "k": ps["kv"]["k"].at[:, row].set(k1[:, 0]),
+            "v": ps["kv"]["v"].at[:, row].set(v1[:, 0]),
+        }
+        new_state = dict(ps)
+        new_state["kv"] = new_kv
+        new_state["pos"] = ps["pos"].at[row].set(st1["pos"][0])
+        new_state["lo"] = ps["lo"].at[row].set(lo_val)
+        return {
+            "state": new_state,
+            "cur": pool["cur"].at[row].set(first),
+            "out": pool["out"].at[row].set(0).at[row, 0].set(first),
+            "n_out": pool["n_out"].at[row].set(1),
+            "active": pool["active"].at[row].set(
+                (max_new > 1).astype(jnp.int32)),
+            "max_new": pool["max_new"].at[row].set(max_new),
+        }
+
+    return jax.jit(bind, donate_argnums=(2,))

@@ -264,8 +264,15 @@ def decode_attention(
     q: jax.Array,  # [B, 1, H, dh]
     k_cache: jax.Array,  # [B, Smax, Hkv, dh]
     v_cache: jax.Array,
-    cache_len: jax.Array,  # [] or [B] int32 — number of valid positions
+    cache_len: jax.Array,  # [] or [B] int32 — end of the valid window
+    cache_start: Optional[jax.Array] = None,  # [] or [B] int32 — window start
 ) -> jax.Array:
+    """One query token over a KV cache window ``[cache_start, cache_len)``.
+
+    Per-row bounds support the fused multi-task decode pool: each batch row
+    is an independent request at its own context length, and rows whose task
+    has no folded prefix mask the cache's reserved prefix region out via
+    ``cache_start`` (see :func:`init_kv_cache`)."""
     B, _, H, dh = q.shape
     Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
     G = H // Hkv
@@ -275,6 +282,8 @@ def decode_attention(
     s = s * scale  # [B, Hkv, G, Smax]
     pos = jnp.arange(Smax, dtype=jnp.int32)
     valid = pos[None, :] < jnp.reshape(cache_len, (-1, 1))  # [B or 1, Smax]
+    if cache_start is not None:
+        valid &= pos[None, :] >= jnp.reshape(cache_start, (-1, 1))
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     m = s.max(axis=-1, keepdims=True)
     p = jnp.exp(s - m)
@@ -318,7 +327,11 @@ def attention_apply(
     mrope_positions: Optional[jax.Array] = None,
     segment_ids: Optional[jax.Array] = None,
     kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,  # cross-attn
+    return_kv: bool = False,
 ) -> jax.Array:
+    """``return_kv=True`` additionally returns the post-RoPE (k, v) rows —
+    the prefill path captures them into the decode KV cache so a served
+    prompt is processed in ONE chunked forward instead of token-by-token."""
     B, S, _ = x.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
@@ -328,7 +341,8 @@ def attention_apply(
         # Cross-attention: q/kv lengths differ -> kvscan handles ragged Sk.
         out = flash_attention_kvscan(q, k, v, kv_block=cfg.attn_kv_block, causal=False)
         from repro.peft.hooks import apply_base_op
-        return apply_base_op("attn_o", out, p["w_o"], "bshk,hkd->bsd", bias=p.get("b_o"))
+        y = apply_base_op("attn_o", out, p["w_o"], "bshk,hkd->bsd", bias=p.get("b_o"))
+        return (y, (k, v)) if return_kv else y
     # Soft-prompt PEFT: the active adapter context may carry learned per-row
     # k/v prefix rows for this layer (real prefix-tuning, §3.2).
     from repro.peft.hooks import active_context
@@ -342,10 +356,9 @@ def attention_apply(
         prefix = (pk.reshape(B, P, hkv, dh_).astype(k.dtype),
                   pv.reshape(B, P, hkv, dh_).astype(v.dtype), keep)
     if mode == "striped_cp":
-        if prefix is not None:
-            raise NotImplementedError(
-                "prefix-tuning is not supported under striped-CP attention")
-        # §Perf: exact-causal load-balanced CP (striped seq layout inputs)
+        # §Perf: exact-causal load-balanced CP (striped seq layout inputs);
+        # prefix rows (soft-prompt PEFT) ride along via the CP-aware prefix
+        # broadcast — replicated per rank, folded into the carry init.
         from repro.distributed.sharding import active_rules
         from repro.models.cp_attention import striped_cp_attention
 
@@ -359,6 +372,7 @@ def attention_apply(
         blk = max(min(cfg.attn_q_block, 256, S // (4 * P_sz)), 16)
         out = striped_cp_attention(
             q, k, v, positions, segment_ids, mesh, axis="model", block=blk,
+            kv_prefix=prefix,
         )
         out = shard(out, "batch", "seq", None, None)
     elif mode == "pairs":
@@ -391,6 +405,8 @@ def attention_apply(
     from repro.peft.hooks import apply_base_op
 
     y = apply_base_op("attn_o", out, p["w_o"], "bshk,hkd->bsd", bias=p.get("b_o"))
+    if return_kv:
+        return y, (k, v)
     return y
 
 
@@ -403,27 +419,79 @@ def attention_decode_apply(
     mrope_positions: Optional[jax.Array] = None,
     update_cache: bool = True,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    pos = cache["len"]  # scalar int32: current length
-    positions = jnp.reshape(pos, (1,)).astype(jnp.int32)
+    """One decode token over the KV cache.
+
+    Adapters apply exactly as at train time: every projection routes through
+    ``apply_base_op``, so the active adapter context's Dispatch/Aggregate
+    rules (LoRA, DoRA, IA3, ... — whatever methods the fused rows carry) hit
+    the decode token identically to a training token.  Prefix-tuning needs
+    no context here at all: its learned k/v rows were folded into the
+    cache's reserved prefix region at prefill/bind time (``init_kv_cache``),
+    so ``decode_attention`` sees them as ordinary cache rows.
+
+    Cache keys: ``len`` is the next write index ([] scalar for the legacy
+    lockstep path, [B] for the per-row request pool); optional ``t`` is the
+    REAL token count (RoPE position — differs from ``len`` when the cache
+    layout reserves prefix rows); optional ``lo`` [B] is the per-row start
+    of the valid window (masks the unused prefix region of rows whose task
+    folded no prefix).
+    """
+    pos = cache["len"]  # [] or [B] int32: next cache write index
+    t = cache.get("t", pos)  # [] or [B]: real-token count (RoPE position)
+    lo = cache.get("lo")  # [B] window start, or None (whole cache valid)
+    B = x.shape[0]
+    positions = jnp.reshape(t, (-1, 1)).astype(jnp.int32)  # [1|B, 1]
     q, k_new, v_new = _project_qkv(p, x, cfg, positions, mrope_positions)
     if update_cache:
-        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+        if pos.ndim == 0:  # lockstep: one shared write index
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+        else:  # per-row write index (fused request pool)
+            rows = jnp.arange(B)
+            wr = jnp.minimum(pos, cache["k"].shape[1] - 1)
+            k_cache = cache["k"].at[rows, wr].set(k_new[:, 0].astype(cache["k"].dtype))
+            v_cache = cache["v"].at[rows, wr].set(v_new[:, 0].astype(cache["v"].dtype))
         new_len = pos + 1
     else:  # cross-attention: cache fixed
         k_cache, v_cache, new_len = cache["k"], cache["v"], pos
-    out = decode_attention(q, k_cache, v_cache, new_len)
+    out = decode_attention(q, k_cache, v_cache, new_len, cache_start=lo)
     from repro.peft.hooks import apply_base_op
 
     y = apply_base_op("attn_o", out, p["w_o"], "bshk,hkd->bsd", bias=p.get("b_o"))
-    new_cache = {"k": k_cache, "v": v_cache, "len": new_len}
+    new_cache = dict(cache)
+    new_cache.update({"k": k_cache, "v": v_cache, "len": new_len})
+    if "t" in cache:
+        new_cache["t"] = t + (1 if update_cache else 0)
     return y, new_cache
 
 
-def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+                  prefix_reserve: int = 0, per_row: bool = False):
+    """ONE layer's KV cache in exactly the per-layer dict contract
+    ``attention_decode_apply`` consumes: ``len`` is the next WRITE index
+    (pre-offset by the prefix region), ``t`` the real-token/RoPE count,
+    ``lo`` the valid-window start.  The stacked serving path builds its
+    [L, ...] state via ``Model.init_decode_state`` (whose ``pos`` counts
+    real tokens; ``decode_step`` derives these per-layer dicts from it) —
+    this constructor is the single-layer reference of the layout.
+
+    With ``prefix_reserve=P`` the cache grows ``P`` extra leading rows per
+    sequence: prefix-tuning's learned k/v rows are written (right-aligned)
+    into ``[P - p, P)`` at prefill/bind time, real tokens start at offset
+    ``P``, and the per-row window ``[lo, len)`` exposes exactly the folded
+    prefix plus the decoded context.  ``per_row=True`` makes ``len``/``t``
+    per-row [B] vectors so independent requests decode fused in one batch.
+    """
     hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim()
-    return {
-        "k": jnp.zeros((batch, max_len, hkv, dh), dtype),
-        "v": jnp.zeros((batch, max_len, hkv, dh), dtype),
-        "len": jnp.zeros((), jnp.int32),
+    shp = (batch,) if per_row else ()
+    cache = {
+        "k": jnp.zeros((batch, prefix_reserve + max_len, hkv, dh), dtype),
+        "v": jnp.zeros((batch, prefix_reserve + max_len, hkv, dh), dtype),
+        "len": jnp.full(shp, prefix_reserve, jnp.int32),
     }
+    if prefix_reserve or per_row:
+        cache["t"] = jnp.zeros(shp, jnp.int32)
+        cache["lo"] = jnp.full((batch,), prefix_reserve, jnp.int32)
+    return cache

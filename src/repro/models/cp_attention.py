@@ -61,15 +61,30 @@ def _flash_ragged_pairs(
     kpos: jax.Array,  # [B, nc, cblk]
     qseg: Optional[jax.Array],
     kseg: Optional[jax.Array],
+    kv_prefix=None,  # (pk [B,P,Hkv,dh], pv [B,P,Hkv,dh], keep [B,P])
 ) -> jax.Array:
     B, nq, blk, Hkv, G, dh = q.shape
     nc, cblk = k.shape[1], k.shape[2]
     scale = 1.0 / np.sqrt(dh)
     pairs = np.asarray([(i, t) for i in range(nq) for t in range(i + 1)], np.int32)
 
-    o = jnp.zeros((B, nq, blk, Hkv, G, dh), jnp.float32)
-    m = jnp.full((B, nq, blk, Hkv, G), NEG_INF, jnp.float32)
-    l = jnp.zeros((B, nq, blk, Hkv, G), jnp.float32)
+    if kv_prefix is not None:
+        # CP-aware prefix broadcast: the learned rows are replicated to every
+        # rank (they are tiny — rank * kv_dim), each rank folds them into its
+        # LOCAL q blocks' online-softmax carry.  Prefix rows are visible to
+        # every query of the owning batch row regardless of causal position
+        # or stripe placement, so the carry init is layout-transparent.
+        from repro.models.attention import _prefix_carry
+
+        q5 = q.reshape(B, nq * blk, Hkv, G, dh)
+        o0, m0, l0 = _prefix_carry(q5, kv_prefix, scale)
+        o = o0.reshape(B, nq, blk, Hkv, G, dh)
+        m = m0.reshape(B, nq, blk, Hkv, G)
+        l = l0.reshape(B, nq, blk, Hkv, G)
+    else:
+        o = jnp.zeros((B, nq, blk, Hkv, G, dh), jnp.float32)
+        m = jnp.full((B, nq, blk, Hkv, G), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, nq, blk, Hkv, G), jnp.float32)
 
     def step(carry, pair):
         o, m, l = carry
@@ -117,8 +132,15 @@ def striped_cp_attention(
     mesh: Mesh,
     axis: str = "model",
     block: int = 256,
+    kv_prefix=None,  # (pk [B,P,Hkv,dh], pv [B,P,Hkv,dh], keep [B,P])
 ) -> jax.Array:
-    """Exact-causal, load-balanced CP attention over mesh axis ``axis``."""
+    """Exact-causal, load-balanced CP attention over mesh axis ``axis``.
+
+    ``kv_prefix`` carries soft-prompt PEFT's learned k/v rows: replicated
+    along the CP axis (batch-sharded like q over the DP axes) and folded
+    into each rank's local online-softmax carry before the triangular chunk
+    scan — the CP-aware prefix broadcast of the serving-layer ROADMAP item.
+    """
     B, S, H, dh = q.shape
     Hkv = k.shape[2]
     G = H // Hkv
@@ -131,14 +153,14 @@ def striped_cp_attention(
         qp = positions.reshape(B, n, block)
         sg0 = segment_ids if segment_ids is not None else jnp.zeros((B, S), jnp.int32)
         qs = sg0.reshape(B, n, block)
-        o = _flash_ragged_pairs(q6, k5, v5, qp, qp, qs, qs)
+        o = _flash_ragged_pairs(q6, k5, v5, qp, qp, qs, qs, kv_prefix=kv_prefix)
         return o.reshape(B, S, H, dh).astype(q.dtype)
     P_sz = mesh.shape[axis]
     dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
     seg = segment_ids if segment_ids is not None else jnp.zeros((B, S), jnp.int32)
 
-    def body(q_l, k_l, v_l, pos_l, seg_l):
+    def body(q_l, k_l, v_l, pos_l, seg_l, *prefix_args):
         # local: [B_loc, S/P, ...]
         B = q_l.shape[0]
         S_l = q_l.shape[1]
@@ -171,16 +193,25 @@ def striped_cp_attention(
         kp = pg.reshape(B, nc, cblk)
         qs = seg_l.reshape(B, nq, block)
         ks = sg.reshape(B, nc, cblk)
-        o = _flash_ragged_pairs(q6, k5, v5, qp, kp, qs, ks)
+        pref = tuple(prefix_args) if prefix_args else None
+        o = _flash_ragged_pairs(q6, k5, v5, qp, kp, qs, ks, kv_prefix=pref)
         return o.reshape(B, S_l, H, dh).astype(q_l.dtype)
 
     bspec = P(dp_axes if dp_axes else None, axis, None, None)
     pspec = P(dp_axes if dp_axes else None, axis)
     from repro.compat import shard_map
 
+    in_specs = [bspec, bspec, bspec, pspec, pspec]
+    args = [q, k, v, positions, seg]
+    if kv_prefix is not None:
+        # prefix rows: batch-sharded with q, REPLICATED along the CP axis
+        prow = P(dp_axes if dp_axes else None, None, None, None)
+        pkeep = P(dp_axes if dp_axes else None, None)
+        in_specs += [prow, prow, pkeep]
+        args += list(kv_prefix)
     return shard_map(
         body, mesh=mesh,
-        in_specs=(bspec, bspec, bspec, pspec, pspec),
+        in_specs=tuple(in_specs),
         out_specs=bspec,
         check_vma=False,
-    )(q, k, v, positions, seg)
+    )(*args)

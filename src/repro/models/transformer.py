@@ -186,7 +186,8 @@ class Model:
     # ------------------------------------------------------------------
 
     def _attn_mlp_block(
-        self, lp, x, *, causal, positions, mrope_positions, segment_ids, aux_sink
+        self, lp, x, *, causal, positions, mrope_positions, segment_ids, aux_sink,
+        collect_kv: bool = False,
     ):
         cfg = self.cfg
         h = _apply_norm(lp["ln1"], x, cfg.norm_eps)
@@ -194,7 +195,11 @@ class Model:
             lp["attn"], h, cfg,
             mode=self.attn_mode, causal=causal, positions=positions,
             mrope_positions=mrope_positions, segment_ids=segment_ids,
+            return_kv=collect_kv,
         )
+        if collect_kv:
+            a, kv = a
+            aux_sink["__kv__"] = kv
         x = shard(x + a, "batch", "seq", None)
         h = _apply_norm(lp["ln2"], x, cfg.norm_eps)
         if cfg.family == "moe" and "moe" in lp:
@@ -218,6 +223,7 @@ class Model:
         adapters: Any = None,
         ctx_factory: Optional[CtxFactory] = None,
         return_logits: bool = False,
+        collect_kv: bool = False,
     ) -> Dict[str, Any]:
         cfg = self.cfg
         if cfg.family == "audio":
@@ -237,6 +243,7 @@ class Model:
         if cfg.family in ("dense", "vlm", "moe"):
             x, aux = self._run_stack(
                 params["layers"], x, adapters, ctx_factory,
+                collect_kv=collect_kv,
                 positions=positions, mrope_positions=mrope_positions,
                 segment_ids=segment_ids,
             )
@@ -248,9 +255,12 @@ class Model:
         elif cfg.family == "ssm":
             x, aux = self._run_xlstm(params, x, adapters, ctx_factory, reset=reset)
 
+        kv = aux.pop("__kv__", None)
         x = _apply_norm(params["final_norm"], x, cfg.norm_eps)
         logits = self._logits(params, x)
         out: Dict[str, Any] = {"aux": aux}
+        if collect_kv:
+            out["kv"] = kv
         if return_logits:
             out["logits"] = logits
         if "labels" in batch:
@@ -276,14 +286,15 @@ class Model:
 
     # ---- dense / vlm / moe stack ----
 
-    def _run_stack(self, layers, x, adapters, ctx_factory, **kw):
+    def _run_stack(self, layers, x, adapters, ctx_factory, collect_kv=False, **kw):
         cfg = self.cfg
         aux: Dict[str, jax.Array] = {}
 
         def body(x, lp, ad):
             sink: Dict[str, jax.Array] = {}
             with adapter_scope(ctx_factory(ad) if ctx_factory and ad is not None else None):
-                y = self._attn_mlp_block(lp, x, causal=True, aux_sink=sink, **kw)
+                y = self._attn_mlp_block(lp, x, causal=True, aux_sink=sink,
+                                         collect_kv=collect_kv, **kw)
             return y, sink
 
         if cfg.scan_layers:
@@ -294,14 +305,23 @@ class Model:
 
             xs = (layers, adapters)
             x, sinks = jax.lax.scan(scan_body, x, xs)
-            aux = {k: v.sum() for k, v in sinks.items()} if sinks else {}
+            # "__kv__" is the prefill capture: per-layer (k, v) rows stacked
+            # along the scanned layer axis — passed through, never summed
+            aux = {k: (v if k == "__kv__" else v.sum())
+                   for k, v in sinks.items()} if sinks else {}
         else:
             n = cfg.num_layers
+            kvs = []
             for i in range(n):
                 x, sink = body(x, _slice_layer(layers, i),
                                _slice_layer(adapters, i) if adapters is not None else None)
                 for k, v in sink.items():
-                    aux[k] = aux.get(k, 0.0) + v
+                    if k == "__kv__":
+                        kvs.append(v)
+                    else:
+                        aux[k] = aux.get(k, 0.0) + v
+            if kvs:
+                aux["__kv__"] = jax.tree.map(lambda *a: jnp.stack(a), *kvs)
         return x, aux
 
     # ---- hybrid (zamba2) ----
@@ -469,18 +489,28 @@ class Model:
 
     def init_decode_state(
         self, params, batch: int, max_len: int, audio_embed: Optional[jax.Array] = None,
-        cache_dtype=jnp.bfloat16,
+        cache_dtype=jnp.bfloat16, prefix_reserve: int = 0, per_row: bool = False,
     ) -> Dict[str, Any]:
+        """Decode state; ``prefix_reserve=P`` grows every KV cache by ``P``
+        leading rows where soft-prompt PEFT's learned k/v rows fold in at
+        prefill/bind time (real tokens start at offset ``P``); ``per_row``
+        makes ``pos`` a [B] vector so a fused request pool decodes rows at
+        independent context lengths.  ``state["lo"]`` is each row's first
+        valid cache index (``P`` minus that row's folded prefix length)."""
         cfg = self.cfg
         hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim()
+        cache_rows = prefix_reserve + max_len
 
         def kv(n):
             return {
-                "k": jnp.zeros((n, batch, max_len, hkv, dh), cache_dtype),
-                "v": jnp.zeros((n, batch, max_len, hkv, dh), cache_dtype),
+                "k": jnp.zeros((n, batch, cache_rows, hkv, dh), cache_dtype),
+                "v": jnp.zeros((n, batch, cache_rows, hkv, dh), cache_dtype),
             }
 
-        state: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+        state: Dict[str, Any] = {
+            "pos": jnp.zeros((batch,) if per_row else (), jnp.int32)}
+        if prefix_reserve or per_row:
+            state["lo"] = jnp.full((batch,), prefix_reserve, jnp.int32)
         if cfg.family in ("dense", "vlm", "moe"):
             state["kv"] = kv(cfg.num_layers)
         elif cfg.family == "hybrid":
@@ -512,20 +542,82 @@ class Model:
             state["cross_k"], state["cross_v"] = ck[0].astype(cache_dtype), ck[1].astype(cache_dtype)
         return state
 
+    def prefill(
+        self, params, batch: Dict[str, jax.Array], state: Dict[str, Any],
+        adapters: Any = None, ctx_factory: Optional[CtxFactory] = None,
+        prefix_reserve: int = 0, lengths: Optional[jax.Array] = None,
+    ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Chunked prompt processing INTO the decode KV cache.
+
+        Runs the ordinary (adapter-aware) training forward over the prompt
+        and captures every layer's post-RoPE k/v rows into ``state`` at
+        offset ``prefix_reserve`` — the prefix-aware cache layout of
+        ``init_decode_state``, whose reserved leading region the serving
+        layer fills with soft-prompt rows at bind time.  ``lengths`` [B]
+        gives each row's true prompt length (rows are padded to a common
+        S); positions past a row's length hold junk that stays outside the
+        valid cache window and is overwritten as decode advances.  Returns
+        (logits over the prompt, updated state).  Dense/VLM/MoE families
+        (full-depth KV stacks) only.
+        """
+        cfg = self.cfg
+        if cfg.family not in ("dense", "vlm", "moe"):
+            raise NotImplementedError(
+                f"prefill-into-cache supports dense/vlm/moe families, not "
+                f"{cfg.family}; drive the prompt through decode_step instead")
+        out = self.forward(params, batch, adapters=adapters,
+                           ctx_factory=ctx_factory, return_logits=True,
+                           collect_kv=True)
+        ks, vs = out["kv"]  # [L, B, S, Hkv, dh]
+        B, S = batch["tokens"].shape
+        kc, vc = state["kv"]["k"], state["kv"]["v"]
+        new_state = dict(state)
+        new_state["kv"] = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                kc, ks.astype(kc.dtype), prefix_reserve, axis=2),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                vc, vs.astype(vc.dtype), prefix_reserve, axis=2),
+        }
+        t = jnp.asarray(S, jnp.int32) if lengths is None else lengths.astype(jnp.int32)
+        if state["pos"].ndim == 1:
+            t = jnp.broadcast_to(t, (B,))
+        new_state["pos"] = t
+        return out["logits"], new_state
+
     def decode_step(
         self, params, state: Dict[str, Any], tokens: jax.Array,
         adapters: Any = None, ctx_factory: Optional[CtxFactory] = None,
+        prefix_reserve: int = 0,
     ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """One decode token for every row.  With ``adapters``/``ctx_factory``
+        the step is fully task-aware: every family threads the per-layer
+        adapter slice into the BaseOp hook scope, so all registered PEFT
+        methods apply at decode exactly as at train time.  ``prefix_reserve``
+        is the static prefix region of the cache layout (see
+        ``init_decode_state``); ``state["pos"]`` counts REAL tokens."""
         cfg = self.cfg
-        pos = state["pos"]
+        pos = state["pos"]  # [] or [B]: real-token count (RoPE position)
+        lo = state.get("lo")  # [B] per-row cache-window start, or None
         x = embed_apply(params["embed"], tokens)  # [B, 1, d]
         if cfg.family == "audio":
             max_len = state["kv"]["k"].shape[2]
-            pe = sinusoidal_positions(max_len, cfg.d_model)  # static table, slice at pos
-            x = x + jax.lax.dynamic_slice_in_dim(pe, pos, 1, axis=0)[None].astype(x.dtype)
+            pe = sinusoidal_positions(max_len, cfg.d_model)  # static table
+            pe_tok = jnp.take(pe, jnp.reshape(pos, (-1,)), axis=0)[:, None]
+            x = x + pe_tok.astype(x.dtype)
         mrope = None
         if cfg.mrope:
-            mrope = jnp.broadcast_to(jnp.reshape(pos, (1, 1, 1)), (3, tokens.shape[0], 1)).astype(jnp.int32)
+            mrope = jnp.broadcast_to(
+                jnp.reshape(pos, (1, -1, 1)), (3, tokens.shape[0], 1)
+            ).astype(jnp.int32)
+
+        def attn_cache(kc, vc):
+            """Per-layer cache dict: write index = prefix_reserve + pos."""
+            c = {"k": kc, "v": vc, "len": prefix_reserve + pos}
+            if prefix_reserve or lo is not None:
+                c["t"] = pos
+            if lo is not None:
+                c["lo"] = lo
+            return c
 
         new_state = dict(state)
 
@@ -535,7 +627,7 @@ class Model:
                 with adapter_scope(ctx_factory(ad) if ctx_factory and ad is not None else None):
                     h = _apply_norm(lp["ln1"], x, cfg.norm_eps)
                     a, cache = attn.attention_decode_apply(
-                        lp["attn"], h, cfg, {"k": kc, "v": vc, "len": pos}, mrope_positions=mrope,
+                        lp["attn"], h, cfg, attn_cache(kc, vc), mrope_positions=mrope,
                     )
                     x = x + a
                     h = _apply_norm(lp["ln2"], x, cfg.norm_eps)
@@ -553,27 +645,34 @@ class Model:
 
         elif cfg.family == "hybrid":
             per = cfg.hybrid_period - 1
+            ad_mamba = adapters.get("mamba") if isinstance(adapters, dict) else None
+            ad_shared = adapters.get("shared_attn") if isinstance(adapters, dict) else None
 
             def super_body(x, xs):
-                mb, mstate, kc, vc = xs
+                mb, mstate, kc, vc, ad = xs
                 mstates_new = []
                 for i in range(per):
                     lp = _slice_layer(mb, i)
                     st = _slice_layer(mstate, i)
-                    h = _apply_norm(lp["ln"], x, cfg.norm_eps)
-                    y, st2 = ssm.mamba2_apply(lp["mamba"], h, cfg, state=st)
+                    adi = _slice_layer(ad, i) if ad is not None else None
+                    with adapter_scope(ctx_factory(adi) if ctx_factory and adi is not None else None):
+                        h = _apply_norm(lp["ln"], x, cfg.norm_eps)
+                        y, st2 = ssm.mamba2_apply(lp["mamba"], h, cfg, state=st)
                     mstates_new.append(st2)
                     x = x + y
                 shared = params["shared_attn"]
-                h = _apply_norm(shared["ln1"], x, cfg.norm_eps)
-                a, cache = attn.attention_decode_apply(shared["attn"], h, cfg, {"k": kc, "v": vc, "len": pos})
-                x = x + a
-                h = _apply_norm(shared["ln2"], x, cfg.norm_eps)
-                x = x + mlp_apply(shared["mlp"], h, cfg.gated_mlp)
+                with adapter_scope(ctx_factory(ad_shared) if ctx_factory and ad_shared is not None else None):
+                    h = _apply_norm(shared["ln1"], x, cfg.norm_eps)
+                    a, cache = attn.attention_decode_apply(
+                        shared["attn"], h, cfg, attn_cache(kc, vc))
+                    x = x + a
+                    h = _apply_norm(shared["ln2"], x, cfg.norm_eps)
+                    x = x + mlp_apply(shared["mlp"], h, cfg.gated_mlp)
                 mst = jax.tree.map(lambda *a: jnp.stack(a), *mstates_new)
                 return x, (mst, cache["k"], cache["v"])
 
-            xs = (params["blocks"]["mamba"], state["mamba"], state["kv"]["k"], state["kv"]["v"])
+            xs = (params["blocks"]["mamba"], state["mamba"],
+                  state["kv"]["k"], state["kv"]["v"], ad_mamba)
             n_super = cfg.num_layers // cfg.hybrid_period
             x, (mst, ks, vs) = _scan_or_loop(super_body, x, xs, n_super, cfg.scan_layers)
             new_state["mamba"] = mst
@@ -581,45 +680,54 @@ class Model:
 
         elif cfg.family == "ssm":
             per = cfg.slstm_period - 1
+            ad_m = adapters.get("mlstm") if isinstance(adapters, dict) else None
+            ad_s = adapters.get("slstm") if isinstance(adapters, dict) else None
 
             def super_body(x, xs):
-                mb, sb, mstate, sstate = xs
+                mb, sb, mstate, sstate, adm, ads = xs
                 msts = []
                 for i in range(per):
                     lp = _slice_layer(mb, i)
                     st = _slice_layer(mstate, i)
-                    h = _apply_norm(lp["ln"], x, cfg.norm_eps)
-                    y, st2 = ssm.mlstm_apply(lp["mlstm"], h, cfg, state=st)
+                    adi = _slice_layer(adm, i) if adm is not None else None
+                    with adapter_scope(ctx_factory(adi) if ctx_factory and adi is not None else None):
+                        h = _apply_norm(lp["ln"], x, cfg.norm_eps)
+                        y, st2 = ssm.mlstm_apply(lp["mlstm"], h, cfg, state=st)
                     msts.append(st2)
                     x = x + y
-                h = _apply_norm(sb["ln"], x, cfg.norm_eps)
-                y, sst2 = ssm.slstm_apply(sb["slstm"], h, cfg, state=sstate)
+                with adapter_scope(ctx_factory(ads) if ctx_factory and ads is not None else None):
+                    h = _apply_norm(sb["ln"], x, cfg.norm_eps)
+                    y, sst2 = ssm.slstm_apply(sb["slstm"], h, cfg, state=sstate)
                 x = x + y
                 return x, (jax.tree.map(lambda *a: jnp.stack(a), *msts), sst2)
 
-            xs = (params["blocks"]["mlstm"], params["blocks"]["slstm"], state["mlstm"], state["slstm"])
+            xs = (params["blocks"]["mlstm"], params["blocks"]["slstm"],
+                  state["mlstm"], state["slstm"], ad_m, ad_s)
             n_super = cfg.num_layers // cfg.slstm_period
             x, (mst, sst) = _scan_or_loop(super_body, x, xs, n_super, cfg.scan_layers)
             new_state["mlstm"], new_state["slstm"] = mst, sst
 
         elif cfg.family == "audio":
             def body(x, xs):
-                lp, kc, vc, ck, cv = xs
-                h = _apply_norm(lp["ln1"], x, cfg.norm_eps)
-                a, cache = attn.attention_decode_apply(lp["attn"], h, cfg, {"k": kc, "v": vc, "len": pos})
-                x = x + a
-                h = _apply_norm(lp["ln_cross"], x, cfg.norm_eps)
-                c, _ = attn.attention_decode_apply(
-                    lp["cross"], h, cfg,
-                    {"k": ck, "v": cv, "len": jnp.asarray(ck.shape[1], jnp.int32)},
-                    update_cache=False,
-                )
-                x = x + c
-                h = _apply_norm(lp["ln2"], x, cfg.norm_eps)
-                x = x + mlp_apply(lp["mlp"], h, cfg.gated_mlp)
+                lp, kc, vc, ck, cv, ad = xs
+                with adapter_scope(ctx_factory(ad) if ctx_factory and ad is not None else None):
+                    h = _apply_norm(lp["ln1"], x, cfg.norm_eps)
+                    a, cache = attn.attention_decode_apply(
+                        lp["attn"], h, cfg, attn_cache(kc, vc))
+                    x = x + a
+                    h = _apply_norm(lp["ln_cross"], x, cfg.norm_eps)
+                    c, _ = attn.attention_decode_apply(
+                        lp["cross"], h, cfg,
+                        {"k": ck, "v": cv, "len": jnp.asarray(ck.shape[1], jnp.int32)},
+                        update_cache=False,
+                    )
+                    x = x + c
+                    h = _apply_norm(lp["ln2"], x, cfg.norm_eps)
+                    x = x + mlp_apply(lp["mlp"], h, cfg.gated_mlp)
                 return x, (cache["k"], cache["v"])
 
-            xs = (params["layers"], state["kv"]["k"], state["kv"]["v"], state["cross_k"], state["cross_v"])
+            xs = (params["layers"], state["kv"]["k"], state["kv"]["v"],
+                  state["cross_k"], state["cross_v"], adapters)
             x, (ks, vs) = _scan_or_loop(body, x, xs, cfg.num_layers, cfg.scan_layers)
             new_state["kv"] = {"k": ks, "v": vs}
 

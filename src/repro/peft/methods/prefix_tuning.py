@@ -13,8 +13,12 @@ The attach site is the pseudo-target ``attn_prefix`` (one per attention
 layer), declared only when the backbone has standard softmax attention.
 Prefixes enter SELF-attention only: encoder-decoder cross-attention reads
 a fixed encoder memory and takes no prefix rows (the standard
-self-attention prefix variant), and decode/serve paths ignore them (a
-ROADMAP item: fold prefixes into the KV cache at prefill).
+self-attention prefix variant).  At decode/serve time the learned rows are
+FOLDED into the KV cache's reserved prefix region at prefill/bind time
+(``models.attention.init_kv_cache`` / ``launch.steps`` bind step), so the
+decode path needs no soft-prompt special case; under striped-CP attention
+they ride the CP-aware prefix broadcast (replicated per rank, folded into
+the online-softmax carry).
 """
 from __future__ import annotations
 

@@ -270,11 +270,41 @@ class MultiTaskAdapters:
             for kind in self.kind_tasks
         }
         kind_scales = {kind: jnp.asarray(self.scales(kind)) for kind in self.kind_tasks}
+        return self.ctx_factory_from_slots(kind_slots, kind_scales)
+
+    def ctx_factory_from_slots(self, kind_slots: Dict[str, jax.Array],
+                               kind_scales: Optional[Dict[str, jax.Array]] = None):
+        """Adapter-context factory over EXPLICIT per-row slot vectors.
+
+        ``kind_slots[kind]`` is [B] int32 (slot in that kind's stack, -1 =
+        row not of this kind).  Unlike :meth:`ctx_factory`, the vectors may
+        be TRACED arrays — formal inputs of a jitted step — so one compiled
+        task-aware decode step serves ANY row->task binding: requests bind
+        and unbind against the pool without retracing (the serving layer's
+        slot-stable decode contract)."""
+        if kind_scales is None:
+            kind_scales = {kind: jnp.asarray(self.scales(kind))
+                           for kind in self.kind_tasks}
 
         def factory(layer_adapters: Any) -> AdapterContext:
             return MultiTaskContext(layer_adapters, kind_slots, kind_scales)
 
         return factory
+
+    def decode_row_slots(self, row_task: Sequence[int]) -> Dict[str, np.ndarray]:
+        """Per-kind [B] slot vectors for an ad-hoc row->task map (decode
+        pool bindings; -1 = unbound row).  Host-side numpy — feed as traced
+        inputs to a step built with :meth:`ctx_factory_from_slots`."""
+        rt = np.asarray(row_task, np.int32)
+        out: Dict[str, np.ndarray] = {}
+        for kind, ids in self.kind_tasks.items():
+            members = set(ids)
+            slots = np.full(rt.shape, -1, np.int32)
+            for r, t in enumerate(rt):
+                if t in members:
+                    slots[r] = self.task_slot[t]
+            out[kind] = slots
+        return out
 
 
 class MultiTaskContext(AdapterContext):

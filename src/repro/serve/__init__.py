@@ -1,7 +1,8 @@
 # Online multi-tenant serving layer: live tenant arrival/departure against a
 # running PEFTEngine — admission (Eq. 5 memory + saturation gate), bounded
-# priority wait queue, incremental re-planning with compiled-step reuse, and
-# adapter lifecycle (hot-attach, checkpoint-out, warm-start).
+# priority wait queue, incremental re-planning with compiled-step reuse,
+# adapter lifecycle (hot-attach, checkpoint-out, warm-start), and SLO-aware
+# token-level co-serving of inference decode traffic next to fine-tuning.
 from repro.serve.admission import (  # noqa: F401
     AdmissionConfig,
     AdmissionController,
@@ -16,6 +17,11 @@ from repro.serve.service import (  # noqa: F401
     REJECTED,
     RUNNING,
     TenantRecord,
+)
+from repro.serve.inference import (  # noqa: F401
+    CoServeConfig,
+    DecodeScheduler,
+    InferenceRequest,
 )
 from repro.serve.replay import (  # noqa: F401
     arrival_to_task,

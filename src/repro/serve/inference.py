@@ -1,0 +1,332 @@
+"""Token-level SLO co-serving: inference decode traffic next to fine-tuning.
+
+MuxTune's serving tier (FlexLLM-style): the same multiplexed backbone that
+fine-tunes N tenants also answers their inference requests.  Decode tokens
+are packed into each training iteration under a latency SLO — the scheduler
+sizes the per-iteration decode micro-batch from the calibrated cost model's
+decode-token term (falling back to measured per-token latency once samples
+exist), so training throughput degrades by at most the SLO headroom and
+decode latency stays bounded while fine-tuning runs at full tilt.
+
+Data plane: ONE fused decode pool (``launch.steps``) with ``decode_slots``
+rows; each row binds to a request serving some resident tenant's adapter
+stack (any registered PEFT method — the decode path routes through the same
+``ApplyContext`` Dispatch/Aggregate as training, and prefix-tuning's
+learned k/v rows are folded into the row's KV cache at bind/prefill time).
+Row->task routing enters the compiled steps as traced slot vectors, so
+binding, unbinding and tenant churn never retrace.
+
+Dispatch discipline: request BINDS (single-row chunked prefill) are
+dispatched through the engine's ``interleave`` hook — their device work
+overlaps the training iteration's micro-step queue — and the iteration's
+decode micro-batch runs as one timed segment against the iteration's single
+sync point, which is what makes the recorded p50/p99 honest on a
+single-stream backend.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+PENDING = "pending"
+DECODING = "decoding"
+DONE = "done"
+CANCELLED = "cancelled"
+REJECTED = "rejected"
+
+
+@dataclass(frozen=True)
+class CoServeConfig:
+    decode_slots: int = 2        # fused pool rows (concurrent requests)
+    decode_max_len: int = 64     # per-row context cap (prompt + generation)
+    max_new_cap: int = 16        # generation buffer rows
+    prompt_bucket: int = 16      # prompts pad up to a bucket (one bind compile)
+    slo_seconds: float = 0.5     # per-iteration latency target (train + decode)
+    min_tokens: int = 1          # decode floor per iteration when traffic waits
+    max_tokens_per_iter: int = 64
+    latency_window: int = 512    # per-token latency samples kept for p50/p99
+
+
+@dataclass
+class InferenceRequest:
+    request_id: str
+    task_id: str                 # tenant whose adapter serves this request
+    prompt: np.ndarray           # [Lp] int32
+    max_new_tokens: int
+    state: str = PENDING
+    reason: str = ""
+    submit_clock: int = 0
+    bind_clock: int = -1
+    finish_clock: int = -1
+    row: int = -1
+    tokens_out: Optional[np.ndarray] = None
+
+    @property
+    def queue_wait(self) -> int:
+        return self.bind_clock - self.submit_clock if self.bind_clock >= 0 else -1
+
+    def accounting(self) -> Dict[str, Any]:
+        return {
+            "request_id": self.request_id,
+            "task_id": self.task_id,
+            "state": self.state,
+            "reason": self.reason,
+            "queue_wait": self.queue_wait,
+            "prompt_tokens": int(len(self.prompt)),
+            "generated": 0 if self.tokens_out is None else int(len(self.tokens_out)),
+            "makespan": (self.finish_clock - self.submit_clock
+                         if self.finish_clock >= 0 else -1),
+        }
+
+
+class DecodeScheduler:
+    """Owns the decode pool bindings and the SLO token-packing policy."""
+
+    def __init__(self, config: Optional[CoServeConfig] = None):
+        self.config = config or CoServeConfig()
+        self.requests: Dict[str, InferenceRequest] = {}
+        self.queue: deque = deque()   # request ids awaiting a pool row
+        self.rows: List[Optional[str]] = [None] * self.config.decode_slots
+        self._pool_gen = -1
+        self._prev_n_out = np.zeros((self.config.decode_slots,), np.int64)
+        self._pending_binds: List[tuple] = []
+        #: binds assigned for the current iteration — their prefill (and
+        #: first-call compile) rides the training dispatch queue, so the
+        #: service excludes such iterations from the calibration trace
+        self.last_bind_count = 0
+        self._row_ctx = None          # (row_slots, scales) for this iteration
+        self.token_seconds: deque = deque(maxlen=self.config.latency_window)
+        # per fused MICRO-STEP wall samples — the budget unit (one micro-step
+        # yields one token on EVERY active row, so per-token and per-step
+        # latency differ by the active-row factor)
+        self.step_seconds: deque = deque(maxlen=self.config.latency_window)
+        self._cold_token_seconds: deque = deque(maxlen=8)  # compile-polluted
+        self.total_tokens = 0
+
+    # ------------------------------------------------------------------
+    # request lifecycle
+
+    def submit(self, request: InferenceRequest) -> InferenceRequest:
+        c = self.config
+        if request.request_id in self.requests and \
+                self.requests[request.request_id].state in (PENDING, DECODING):
+            raise ValueError(f"request {request.request_id} already live")
+        if (len(request.prompt) + request.max_new_tokens > c.decode_max_len
+                or request.max_new_tokens > c.max_new_cap
+                or len(request.prompt) < 1):
+            return self.reject(request, "length_caps")
+        self.requests[request.request_id] = request
+        self.queue.append(request.request_id)
+        return request
+
+    def reject(self, request: InferenceRequest, reason: str) -> InferenceRequest:
+        request.state, request.reason = REJECTED, reason
+        self.requests[request.request_id] = request
+        return request
+
+    def cancel(self, request_id: str, clock: int, reason: str = "") -> None:
+        req = self.requests[request_id]
+        if req.state not in (PENDING, DECODING):
+            return
+        if req.state == DECODING and req.row >= 0:
+            self.rows[req.row] = None  # device row decays outside any window
+        if request_id in self.queue:
+            self.queue.remove(request_id)
+        req.state, req.reason, req.finish_clock = CANCELLED, reason, clock
+
+    def drop_task(self, task_id: str, clock: int) -> None:
+        """A tenant departed: cancel its queued AND in-flight requests."""
+        for rid, req in list(self.requests.items()):
+            if req.task_id == task_id and req.state in (PENDING, DECODING):
+                self.cancel(rid, clock, reason="tenant_departed")
+
+    def has_traffic(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.rows)
+
+    def has_actionable(self, task_index: Dict[str, int]) -> bool:
+        """True when this iteration has decode work to run: a bound row, or
+        a queued request whose tenant is resident.  Queued traffic for
+        never-resident tenants must NOT allocate the pool or add the
+        per-iteration decode sync."""
+        return any(r is not None for r in self.rows) or any(
+            self.requests[q].task_id in task_index for q in self.queue)
+
+    # ------------------------------------------------------------------
+    # per-iteration protocol (driven by MuxTuneService.step)
+
+    def prepare(self, engine, task_index: Dict[str, int], clock: int) -> None:
+        """Ensure the pool exists, recover from pool re-allocations, assign
+        queued requests to free rows, and stage this iteration's row->slot
+        routing vectors."""
+        c = self.config
+        engine.ensure_decode_pool(c.decode_slots, c.decode_max_len,
+                                  c.max_new_cap)
+        pool_key = (id(engine), engine.decode_pool_gen)
+        if pool_key != self._pool_gen:
+            # pool re-allocated (first use, or prefix-region growth): every
+            # in-flight binding was lost — re-queue those requests up front
+            for r, rid in enumerate(self.rows):
+                if rid is not None:
+                    req = self.requests[rid]
+                    req.state, req.row = PENDING, -1
+                    self.queue.appendleft(rid)
+            self.rows = [None] * c.decode_slots
+            self._prev_n_out[:] = 0
+            self._pool_gen = pool_key
+        # bind queued requests onto free rows (dispatch via interleave hook)
+        self._pending_binds = []
+        for r in range(c.decode_slots):
+            if self.rows[r] is not None:
+                continue
+            # first queued request whose tenant is resident (a non-resident
+            # head must not block ready traffic behind it)
+            rid = next((q for q in self.queue
+                        if self.requests[q].task_id in task_index), None)
+            if rid is None:
+                break
+            self.queue.remove(rid)
+            req = self.requests[rid]
+            self.rows[r] = rid
+            req.state, req.row, req.bind_clock = DECODING, r, clock
+            self._pending_binds.append((r, req))
+        self.last_bind_count = len(self._pending_binds)
+        row_task = [
+            task_index.get(self.requests[rid].task_id, -1) if rid else -1
+            for rid in self.rows
+        ]
+        self._row_ctx = engine.decode_row_ctx(row_task)
+
+    def interleave_fn(self, engine):
+        """Callable for ``PEFTEngine.run_iteration(interleave=...)``: each
+        invocation dispatches one pending BIND (single-row prefill) so its
+        device work rides the training iteration's dispatch queue."""
+        def cb() -> None:
+            if self._pending_binds:
+                self._dispatch_bind(engine, *self._pending_binds.pop(0))
+        return cb
+
+    def flush_binds(self, engine) -> None:
+        while self._pending_binds:
+            self._dispatch_bind(engine, *self._pending_binds.pop(0))
+
+    def _dispatch_bind(self, engine, row: int, req: InferenceRequest) -> None:
+        c = self.config
+        Lp = len(req.prompt)
+        # round up to the compile bucket, but never past the cache length —
+        # submit() guarantees Lp <= decode_max_len, so the clamp always fits
+        bucket = min(-(-Lp // c.prompt_bucket) * c.prompt_bucket,
+                     c.decode_max_len)
+        tokens = np.zeros((1, bucket), np.int32)
+        tokens[0, :Lp] = req.prompt
+        row_slots, scales = self._row_ctx
+        s1 = {k: v[row:row + 1] for k, v in row_slots.items()}
+        engine.dispatch_decode_bind(row, tokens, Lp, s1, scales,
+                                    req.max_new_tokens)
+        self._prev_n_out[row] = 0
+
+    # ------------------------------------------------------------------
+    # SLO token packing
+
+    def measured_step_seconds(self) -> Optional[float]:
+        if not self.step_seconds:
+            return None
+        return float(np.median(self.step_seconds))
+
+    def token_budget(self, cost_model, mean_ctx: float,
+                     predicted_train_seconds: float) -> int:
+        """Fused decode MICRO-STEPS to pack into this iteration: fill the
+        SLO headroom left by the (calibrated) training-iteration prediction.
+        Both estimator paths are per micro-step — the measured median and
+        the cost model's ``decode_token_latency`` (the wall of one fused
+        step over all pool rows) — so the budget unit matches what
+        ``run_tokens`` dispatches."""
+        c = self.config
+        if not (any(self.rows) or self._pending_binds):
+            return 0
+        step = self.measured_step_seconds()
+        if step is None:
+            step = cost_model.decode_token_latency(c.decode_slots,
+                                                   int(max(mean_ctx, 1)))
+        headroom = max(c.slo_seconds - predicted_train_seconds, 0.0)
+        k = int(headroom / max(step, 1e-9))
+        return max(min(k, c.max_tokens_per_iter), c.min_tokens)
+
+    # ------------------------------------------------------------------
+    # decode segment + retirement
+
+    def run_tokens(self, engine, k: int, clock: int) -> tuple:
+        """Dispatch ``k`` fused decode micro-steps, sync the pool's small
+        accounting counters ONCE, record per-token latency samples and
+        retire finished requests.  Returns ``(tokens_decoded, wall_seconds,
+        per_task_tokens)`` — the last bills each tenant for the decode
+        tokens its requests consumed this iteration."""
+        if self._row_ctx is None:
+            return 0, 0.0, {}
+        row_slots, scales = self._row_ctx
+        warm = engine.decode_micro_ready()  # cold first call = jit compile
+        t0 = time.perf_counter()
+        for _ in range(max(k, 0)):
+            engine.dispatch_decode_micro(row_slots, scales)
+        acct = engine.decode_accounting()  # the decode segment's one sync
+        wall = time.perf_counter() - t0
+        n_out = np.asarray(acct["n_out"], np.int64)
+        delta = np.maximum(n_out - self._prev_n_out, 0)
+        self._prev_n_out = n_out.copy()
+        decoded = 0
+        per_task: Dict[str, int] = {}
+        for r, rid in enumerate(self.rows):
+            if rid is None:
+                continue
+            tid = self.requests[rid].task_id
+            decoded += int(delta[r])
+            per_task[tid] = per_task.get(tid, 0) + int(delta[r])
+        if decoded > 0:
+            self.total_tokens += decoded
+            per_tok = wall / decoded
+            if warm:
+                self.token_seconds.extend([per_tok] * min(decoded, 64))
+                if k > 0:
+                    self.step_seconds.append(wall / k)
+            else:
+                # cold-start segments time the micro-step's jit compile, not
+                # decode — keep them out of the SLO p50/p99 window and the
+                # budget estimator (reported only until warm samples exist)
+                self._cold_token_seconds.append(per_tok)
+        for r, rid in enumerate(self.rows):
+            if rid is None:
+                continue
+            req = self.requests[rid]
+            if acct["active"][r] == 0 and req.state == DECODING:
+                req.tokens_out = engine.decode_outputs(r)[: int(n_out[r])]
+                req.state, req.finish_clock = DONE, clock
+                self.rows[r] = None
+        return decoded, wall, per_task
+
+    # ------------------------------------------------------------------
+    # metrics
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        samples = self.token_seconds or self._cold_token_seconds
+        if not samples:
+            return {"decode_p50_s": 0.0, "decode_p99_s": 0.0}
+        arr = np.asarray(samples, np.float64)
+        return {
+            "decode_p50_s": float(np.percentile(arr, 50)),
+            "decode_p99_s": float(np.percentile(arr, 99)),
+        }
+
+    def accounting(self) -> Dict[str, Any]:
+        reqs = [r.accounting() for r in self.requests.values()]
+        done = [r for r in self.requests.values() if r.state == DONE]
+        out = {
+            "requests": reqs,
+            "completed_requests": len(done),
+            "decode_tokens": self.total_tokens,
+            "queued_requests": len(self.queue),
+        }
+        out.update(self.latency_percentiles())
+        return out

@@ -51,6 +51,11 @@ from repro.serve.admission import (
     AdmissionController,
     WaitQueue,
 )
+from repro.serve.inference import (
+    CoServeConfig,
+    DecodeScheduler,
+    InferenceRequest,
+)
 
 QUEUED = "queued"
 RUNNING = "running"
@@ -73,6 +78,7 @@ class TenantRecord:
     steps_trained: int = 0
     tokens: int = 0               # padded tokens billed to this tenant
     effective_tokens: int = 0     # non-padding tokens actually trained
+    decode_tokens: int = 0        # co-served inference tokens (all effective)
     losses: List[float] = field(default_factory=list)
     checkpoint_path: Optional[str] = None
 
@@ -104,6 +110,7 @@ class TenantRecord:
             "steps_trained": self.steps_trained,
             "tokens": self.tokens,
             "effective_tokens": self.effective_tokens,
+            "decode_tokens": self.decode_tokens,
             "effective_token_ratio": round(self.effective_token_ratio, 4),
             "makespan": self.makespan,
             "final_loss": self.losses[-1] if self.losses else None,
@@ -125,6 +132,10 @@ class MuxTuneService:
         seed: int = 0,
         reserve_slots: int = 0,
         compact_threshold: float = 0.5,
+        coserve: Optional[CoServeConfig] = None,
+        auto_recalibrate: bool = True,
+        drift_threshold: float = 1.0,
+        drift_window: int = 8,
     ):
         self.cfg = cfg
         self.parallelism = parallelism or ParallelismSpec()
@@ -161,6 +172,19 @@ class MuxTuneService:
         # admission saturation gate from StepMetrics wall times)
         self.calibration_trace: List[CalibrationSample] = []
         self._calibration_window = 256
+        # token-level co-serving: inference decode traffic interleaved with
+        # the training iterations under a latency SLO (FlexLLM-style)
+        self.coserve = DecodeScheduler(coserve)
+        # auto-recalibration on drift (ROADMAP): when the predicted-vs-
+        # measured iteration-time ratio drifts beyond ``drift_threshold``
+        # (median log-ratio error over ``drift_window`` iterations), refit
+        # the hardware profile from the rolling StepMetrics window
+        self.auto_recalibrate = auto_recalibrate
+        self.drift_threshold = drift_threshold
+        self.drift_window = drift_window
+        self.recalibrations = 0
+        self._drift: List[float] = []  # recent measured/predicted ratios
+        self._cm_cache = (None, None, None)  # (plan, hw, CostModel)
 
     # ------------------------------------------------------------------
     # introspection
@@ -193,6 +217,8 @@ class MuxTuneService:
                 self.engine.cache_misses if self.engine else 0),
             "peak_stage_memory": max(self.memory_trace, default=0.0),
             "memory_budget": self.admission_config.memory_budget,
+            "recalibrations": self.recalibrations,
+            "coserve": self.coserve.accounting(),
         }
 
     # ------------------------------------------------------------------
@@ -217,6 +243,30 @@ class MuxTuneService:
                 rec.state = REJECTED
                 rec.reason = f"queue_full({decision.reason})"
         return rec
+
+    def submit_request(self, task_id: str, prompt, max_new_tokens: int = 8,
+                       request_id: Optional[str] = None) -> InferenceRequest:
+        """Submit an inference request against a tenant's adapter stack.
+
+        The request queues for a decode-pool row and is served token-level
+        interleaved with the training iterations (SLO-packed decode
+        micro-batches).  The tenant must be (or become) resident; requests
+        of a departing tenant are cancelled with ``tenant_departed``."""
+        rid = request_id or f"req{len(self.coserve.requests)}-{task_id}"
+        req = InferenceRequest(rid, task_id,
+                               np.asarray(prompt, np.int32).reshape(-1),
+                               max_new_tokens, submit_clock=self.clock)
+        if self.cfg.family not in ("dense", "vlm", "moe"):
+            # the bind step's prefill-into-cache needs a full-depth KV stack;
+            # reject up front instead of crashing the training iteration the
+            # bind would have interleaved into (ROADMAP: hybrid/ssm serve is
+            # token-by-token decode only)
+            return self.coserve.reject(req, "family_unsupported")
+        return self.coserve.submit(req)
+
+    def cancel_request(self, request_id: str) -> InferenceRequest:
+        self.coserve.cancel(request_id, self.clock, reason="user_cancel")
+        return self.coserve.requests[request_id]
 
     def cancel(self, task_id: str) -> TenantRecord:
         rec = self.tenants[task_id]
@@ -296,6 +346,7 @@ class MuxTuneService:
         ids = [r.task_id for r in recs]
         for tid in ids:
             self._streams.pop(tid, None)
+            self.coserve.drop_task(tid, self.clock)
         remaining = [t for t in self.resident if t.task_id not in ids]
         if not remaining:
             # last tenant out: drop the engine (a fresh one boots on the next
@@ -370,15 +421,49 @@ class MuxTuneService:
     # data plane
 
     def step(self) -> Optional[StepMetrics]:
-        """One engine iteration for the current resident set; completes
-        tenants that reached their target and re-drains the wait queue."""
+        """One engine iteration for the current resident set, with any
+        waiting inference traffic token-level interleaved under the SLO;
+        completes tenants that reached their target and re-drains the wait
+        queue."""
         if self.engine is None or not self.resident:
             self.clock += 1
             if len(self.queue):
                 self._drain_queue()
             return None
-        metrics = self.engine.run_iteration(self._loaders, n_micro=self.n_micro)
-        self._record_calibration_sample(metrics)
+        interleave = None
+        task_index = {t.task_id: i for i, t in enumerate(self.plan.tasks)}
+        coserving = self.coserve.has_actionable(task_index)
+        if coserving:
+            self.coserve.prepare(self.engine, task_index, self.clock)
+            # request binds (single-row prefills) dispatch through the
+            # engine's interleave hook: their device work overlaps the
+            # training micro-step queue instead of stalling before it
+            interleave = self.coserve.interleave_fn(self.engine)
+        metrics = self.engine.run_iteration(self._loaders, n_micro=self.n_micro,
+                                            interleave=interleave)
+        if coserving:
+            self.coserve.flush_binds(self.engine)
+            mean_ctx = self.coserve.config.decode_max_len / 2
+            k = self.coserve.token_budget(self._cost_model(), mean_ctx,
+                                          self.predicted_iteration_seconds())
+            dtok, dwall, per_task = self.coserve.run_tokens(
+                self.engine, k, self.clock)
+            metrics.decode_tokens = dtok
+            metrics.decode_seconds = dwall
+            pct = self.coserve.latency_percentiles()
+            metrics.decode_p50_s = pct["decode_p50_s"]
+            metrics.decode_p99_s = pct["decode_p99_s"]
+            for tid, n in per_task.items():
+                rec = self.tenants.get(tid)
+                if rec is not None:
+                    rec.decode_tokens += n
+        if not (coserving and self.coserve.last_bind_count):
+            # bind iterations interleave a single-row prefill (and possibly
+            # its jit compile) into the training dispatch queue: their wall
+            # is not pure training time and would bias the calibration fit
+            # and the drift detector
+            self._record_calibration_sample(metrics)
+            self._maybe_recalibrate(metrics)
         self.clock += 1
         completed: List[TenantRecord] = []
         for gi, task in enumerate(self.plan.tasks):
@@ -424,6 +509,32 @@ class MuxTuneService:
         if len(self.calibration_trace) > self._calibration_window:
             del self.calibration_trace[:-self._calibration_window]
 
+    def _maybe_recalibrate(self, metrics: StepMetrics) -> None:
+        """Auto-recalibration on drift (ROADMAP): refit the hardware profile
+        from the rolling StepMetrics window when the measured/predicted
+        iteration-time ratio's window median drifts beyond the threshold —
+        e.g. after a backend change, noisy-neighbor contention, or the
+        first iterations of a cold service whose analytic profile is wrong
+        for the hardware it actually landed on."""
+        if not self.auto_recalibrate:
+            return
+        pred = self.predicted_iteration_seconds()
+        if pred <= 0.0 or metrics.wall_seconds <= 0.0:
+            return
+        self._drift.append(metrics.wall_seconds / pred)
+        if len(self._drift) > self.drift_window:
+            del self._drift[:-self.drift_window]
+        if len(self._drift) < self.drift_window:
+            return
+        err = abs(float(np.log(np.median(self._drift))))
+        if err > float(np.log1p(self.drift_threshold)):
+            # refit on the DRIFTED window only: the long trace still holds
+            # pre-drift (or compile-transient) walls that would drag the
+            # least-squares scale back toward the regime we just left
+            self.calibrate(window=self.drift_window)
+            self.recalibrations += 1
+            self._drift.clear()
+
     def calibrate(self, window: Optional[int] = None) -> HardwareProfile:
         """Fit the cost model's saturation knee + analytic->wall scale to the
         measured ``StepMetrics`` of recent iterations and install the fitted
@@ -437,10 +548,19 @@ class MuxTuneService:
         self.admission.hw = hw
         return hw
 
+    def _cost_model(self):
+        """Cost model of the CURRENT plan under the CURRENT profile, cached
+        — the serving hot loop consults it several times per iteration and
+        it only changes on re-plan or recalibration."""
+        plan, hw, cm = self._cm_cache
+        if plan is not self.plan or hw is not self.planner.hw:
+            cm = self.planner.cost_model(self.plan.tasks)
+            self._cm_cache = (self.plan, self.planner.hw, cm)
+        return cm
+
     def predicted_iteration_seconds(self) -> float:
         """Current plan's predicted wall time per iteration under the (poss.
         calibrated) profile — compare against StepMetrics.wall_seconds."""
         if self.plan is None or self.engine is None:
             return 0.0
-        cm = self.planner.cost_model(self.plan.tasks)
-        return cm.schedule_latency(self._htask_counts())
+        return self._cost_model().schedule_latency(self._htask_counts())
