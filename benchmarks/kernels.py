@@ -4,11 +4,17 @@ grouped-kernel claim), forward AND backward, across execution impls.
 Rows:
   kernels/grouped_lora/{fwd,fwd_bwd}/<impl>/T_<n>
   kernels/packed_attention/{fwd,fwd_bwd}/<impl>/S_<n>
+  kernels/mamba_scan/{fwd,fwd_bwd}/<impl>/S_<n>
 
 ``xla`` always runs.  ``pallas`` runs only on a real TPU backend.
 ``pallas_interpret`` is a correctness tier, not a perf tier — it runs one
 small shape so the artifact tracks that the differentiable kernel path
 stays alive, without minutes of interpreter time.
+
+These rows are the BLOCKING slice of the cross-PR ``--compare`` regression
+gate (see ``benchmarks/run.py --blocking kernels``): a kernel-microbench
+regression beyond threshold fails CI, while serve/co-serve rows stay
+advisory.
 """
 from __future__ import annotations
 
@@ -123,6 +129,46 @@ def _bench_packed_attention(rows: list[str]) -> None:
             ))
 
 
+def _bench_mamba_scan(rows: list[str]) -> None:
+    key = jax.random.PRNGKey(3)
+    B, H, dk, dv, chunk = 2, 4, 64, 64, 256
+    for S in (512, 1024):
+        ks = jax.random.split(key, 6)
+        q = jax.random.normal(ks[0], (B, S, H, dk), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, H, dk), jnp.float32) * 0.3
+        v = jax.random.normal(ks[2], (B, S, H, dv), jnp.float32)
+        la = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+        li = jnp.log(jax.nn.softplus(jax.random.normal(ks[4], (B, S, H))) + 1e-3)
+        g = jax.random.normal(ks[5], (B, S, H, dv), jnp.float32)
+
+        for impl in _impls():
+            kops.set_impl(impl)
+            try:
+                fwd = jax.jit(lambda q, k, v, la, li: kops.mamba_scan(
+                    q, k, v, la, li, chunk=chunk)[0])
+
+                def loss(q, k, v, la, li):
+                    y, _ = kops.mamba_scan(q, k, v, la, li, chunk=chunk)
+                    return (y * g).sum()
+
+                bwd = jax.jit(jax.grad(loss, argnums=(0, 1, 2, 3, 4)))
+                fwd(q, k, v, la, li).block_until_ready()
+                jax.block_until_ready(bwd(q, k, v, la, li))
+                tf = timeit(lambda: fwd(q, k, v, la, li).block_until_ready(),
+                            iters=5)
+                tb = timeit(lambda: jax.block_until_ready(bwd(q, k, v, la, li)),
+                            iters=5)
+            finally:
+                kops.set_impl("xla")
+            rows.append(csv_row(
+                f"kernels/mamba_scan/fwd/{impl}/S_{S}", tf * 1e6, "",
+            ))
+            rows.append(csv_row(
+                f"kernels/mamba_scan/fwd_bwd/{impl}/S_{S}", tb * 1e6,
+                f"fwd_us={tf*1e6:.1f};bwd_over_fwd=x{tb/tf:.2f}",
+            ))
+
+
 def _bench_interpret_smoke(rows: list[str]) -> None:
     """One tiny fwd+bwd through the interpret tier: tracks that the
     differentiable Pallas path stays alive (timing is interpreter-bound)."""
@@ -142,10 +188,31 @@ def _bench_interpret_smoke(rows: list[str]) -> None:
         bwd = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))
         jax.block_until_ready(bwd(x, a, b))
         tb = timeit(lambda: jax.block_until_ready(bwd(x, a, b)), iters=2)
+
+        # mamba_scan: one tiny fwd+bwd through both backward kernels
+        ks = jax.random.split(key, 5)
+        B, S, H, dk, dv = 1, 128, 2, 16, 16
+        q = jax.random.normal(ks[0], (B, S, H, dk), jnp.float32)
+        kk = jax.random.normal(ks[1], (B, S, H, dk), jnp.float32) * 0.3
+        v = jax.random.normal(ks[2], (B, S, H, dv), jnp.float32)
+        la = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+        li = jnp.zeros((B, S, H), jnp.float32)
+
+        def mloss(q, kk, v, la):
+            y, _ = kops.mamba_scan(q, kk, v, la, li, chunk=64)
+            return (y ** 2).sum()
+
+        mbwd = jax.jit(jax.grad(mloss, argnums=(0, 1, 2, 3)))
+        jax.block_until_ready(mbwd(q, kk, v, la))
+        tm = timeit(lambda: jax.block_until_ready(mbwd(q, kk, v, la)), iters=2)
     finally:
         kops.set_impl("xla")
     rows.append(csv_row(
         "kernels/grouped_lora/fwd_bwd/pallas_interpret/smoke", tb * 1e6,
+        "correctness_tier=1",
+    ))
+    rows.append(csv_row(
+        "kernels/mamba_scan/fwd_bwd/pallas_interpret/smoke", tm * 1e6,
         "correctness_tier=1",
     ))
 
@@ -154,5 +221,6 @@ def run() -> list[str]:
     rows: list[str] = []
     _bench_grouped_lora(rows)
     _bench_packed_attention(rows)
+    _bench_mamba_scan(rows)
     _bench_interpret_smoke(rows)
     return rows

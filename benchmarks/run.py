@@ -13,15 +13,26 @@ across PRs by diffing artifacts instead of scraping stdout.
 ``--compare <dir>`` diffs the BENCH_*.json artifacts in the current
 directory against baselines of the same name under <dir> (e.g. artifacts
 downloaded from the previous main run), printing per-metric deltas.  Exit
-code is 1 when any metric regressed beyond ``--threshold`` (default +25%,
-metrics are lower-is-better) — wire it as a NON-blocking CI step.
+code is 1 when a metric regressed beyond ``--threshold`` (default +25%,
+metrics are lower-is-better) in a BLOCKING module: ``--blocking
+kernels,throughput`` restricts the gate to those modules — other modules'
+regressions print ``REGRESSED(advisory)`` and never fail the build.  With
+no ``--blocking``, every module gates (the pre-CI local behavior).  CI
+wires the kernel microbenches as the blocking slice and keeps serve /
+co-serve rows advisory.
+
+``--baseline-tag <name>`` overrides the comparison baseline: metrics are
+read from the newest PINNED history run recorded with ``--tag <name>``
+instead of the top-level artifacts — so a deliberate perf shift can be
+judged against a blessed baseline rather than whatever ran last.
 
 Every ``--compare`` run also APPENDS the current artifacts to
 ``<dir>/history/run-<n>[-<tag>]/`` and regenerates ``<dir>/DASHBOARD.md``
-— a markdown table of each metric's trajectory across the retained runs.
-Retention policy: the newest ``--retain`` (default 8) untagged runs are
-kept; runs recorded with ``--tag <name>`` are pinned baselines and never
-pruned.
+— a markdown table of each metric's trajectory across the retained runs,
+with a unicode sparkline per metric (CI posts this file as a sticky PR
+comment).  Retention policy: the newest ``--retain`` (default 8) untagged
+runs are kept; runs recorded with ``--tag <name>`` are pinned baselines
+and never pruned.
 """
 from __future__ import annotations
 
@@ -85,9 +96,31 @@ def record_history(baseline_dir: str, retain: int = 8,
     return dst
 
 
+_SPARK = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(vals) -> str:
+    """Unicode trajectory of a metric series (None -> gap).  Scaled per
+    metric min..max so the shape, not the magnitude, reads at a glance."""
+    xs = [v for v in vals if v is not None]
+    if not xs:
+        return ""
+    lo, hi = min(xs), max(xs)
+    out = []
+    for v in vals:
+        if v is None:
+            out.append(" ")
+        elif hi == lo:
+            out.append(_SPARK[0])
+        else:
+            out.append(_SPARK[round((v - lo) / (hi - lo) * (len(_SPARK) - 1))])
+    return "".join(out)
+
+
 def write_dashboard(baseline_dir: str, max_cols: int = 10) -> str:
     """Regenerate <dir>/DASHBOARD.md: per-module metric history across the
-    retained runs (oldest -> newest; tagged runs marked with their tag)."""
+    retained runs (oldest -> newest; tagged runs marked with their tag),
+    one unicode sparkline per metric."""
     runs = _history_runs(baseline_dir)[-max_cols:]
     lines = ["# Benchmark history", "",
              "Per-PR metric trajectory (us/call, lower is better) over the "
@@ -108,14 +141,14 @@ def write_dashboard(baseline_dir: str, max_cols: int = 10) -> str:
         lines.append("")
         head = " | ".join(f"run-{s}" + (f" ({t})" if t else "")
                           for s, t in cols)
-        lines.append(f"| metric | {head} |")
-        lines.append("|" + "---|" * (len(cols) + 1))
+        lines.append(f"| metric | trend | {head} |")
+        lines.append("|" + "---|" * (len(cols) + 2))
         for metric in sorted(modules[mod]):
             vals = modules[mod][metric]
+            series = [vals.get(s) for s, _t in cols]
             cells = []
             prev = None
-            for s, _t in cols:
-                v = vals.get(s)
+            for v in series:
                 if v is None:
                     cells.append("")
                 elif prev not in (None, 0.0) and abs(v / prev - 1) > 0.25:
@@ -123,7 +156,8 @@ def write_dashboard(baseline_dir: str, max_cols: int = 10) -> str:
                 else:
                     cells.append(f"{v:.1f}")
                 prev = v if v is not None else prev
-            lines.append(f"| {metric} | " + " | ".join(cells) + " |")
+            lines.append(f"| {metric} | `{sparkline(series)}` | "
+                         + " | ".join(cells) + " |")
         lines.append("")
     out = os.path.join(baseline_dir, "DASHBOARD.md")
     with open(out, "w") as f:
@@ -132,8 +166,15 @@ def write_dashboard(baseline_dir: str, max_cols: int = 10) -> str:
 
 
 def compare(baseline_dir: str, threshold: float, bootstrap: bool = True,
-            retain: int = 8, tag: str | None = None) -> int:
+            retain: int = 8, tag: str | None = None,
+            blocking: set[str] | None = None,
+            baseline_tag: str | None = None) -> int:
     """Cross-PR bench diff: current ./BENCH_*.json vs baseline_dir's.
+
+    ``blocking`` restricts the failing exit code to regressions in those
+    modules (others are printed as advisory); ``None`` gates every module.
+    ``baseline_tag`` reads the baseline metrics from the newest history run
+    pinned with that ``--tag`` instead of the top-level artifacts.
 
     First-run bootstrap: when the baseline directory is missing or holds no
     artifacts (a fresh repo, expired artifact retention, or a renamed CI
@@ -146,7 +187,17 @@ def compare(baseline_dir: str, threshold: float, bootstrap: bool = True,
     if not current:
         print(f"# no BENCH_*.json in {os.getcwd()} to compare", file=sys.stderr)
         return 2
-    baseline_files = sorted(glob.glob(os.path.join(baseline_dir, "BENCH_*.json")))
+    base_src = baseline_dir
+    if baseline_tag is not None:
+        pinned = [r for r in _history_runs(baseline_dir)
+                  if r[1] == baseline_tag]
+        if not pinned:
+            print(f"# no pinned history run tagged '{baseline_tag}' under "
+                  f"{baseline_dir}", file=sys.stderr)
+            return 2
+        base_src = pinned[-1][2]
+        print(f"# baseline override: pinned {os.path.basename(base_src)}")
+    baseline_files = sorted(glob.glob(os.path.join(base_src, "BENCH_*.json")))
     if not baseline_files:
         if not bootstrap:
             print(f"# no baseline artifacts under {baseline_dir}", file=sys.stderr)
@@ -160,12 +211,14 @@ def compare(baseline_dir: str, threshold: float, bootstrap: bool = True,
               f"{len(current)} artifact(s) as the new baseline")
         return 0
     regressions = 0
+    advisory = 0
     compared = 0
     print("module,metric,baseline_us,current_us,delta_pct,flag")
     for path in current:
         name = os.path.basename(path)
-        base_path = os.path.join(baseline_dir, name)
+        base_path = os.path.join(base_src, name)
         mod = name[len("BENCH_"):-len(".json")]
+        gates = blocking is None or mod in blocking
         if not os.path.exists(base_path):
             print(f"{mod},<module>,,,,NEW")
             continue
@@ -184,14 +237,18 @@ def compare(baseline_dir: str, threshold: float, bootstrap: bool = True,
             delta = (c - b) / b if b else 0.0
             flag = "ok"
             if delta > threshold:
-                flag = "REGRESSED"
-                regressions += 1
+                if gates:
+                    flag = "REGRESSED"
+                    regressions += 1
+                else:
+                    flag = "REGRESSED(advisory)"
+                    advisory += 1
             elif delta < -threshold:
                 flag = "improved"
             compared += 1
             print(f"{mod},{metric},{b:.1f},{c:.1f},{delta * 100:+.1f},{flag}")
-    print(f"# compared {compared} metrics, {regressions} regression(s) "
-          f"beyond +{threshold * 100:.0f}%")
+    print(f"# compared {compared} metrics, {regressions} blocking + "
+          f"{advisory} advisory regression(s) beyond +{threshold * 100:.0f}%")
     dst = record_history(baseline_dir, retain=retain, tag=tag)
     dash = write_dashboard(baseline_dir)
     print(f"# history: recorded {os.path.basename(dst)}, dashboard {dash}")
@@ -205,11 +262,14 @@ def main() -> None:
     threshold = 0.25
     retain = 8
     tag = None
+    blocking = None
+    baseline_tag = None
     only = []
     i = 0
     while i < len(args):
         a = args[i]
-        if a in ("--compare", "--threshold", "--retain", "--tag"):
+        if a in ("--compare", "--threshold", "--retain", "--tag",
+                 "--blocking", "--baseline-tag"):
             i += 1
             if i >= len(args):
                 # usage error: distinct from the rc=1 "regression" signal
@@ -221,13 +281,18 @@ def main() -> None:
                 threshold = float(args[i])
             elif a == "--retain":
                 retain = int(args[i])
+            elif a == "--blocking":
+                blocking = {m.strip() for m in args[i].split(",") if m.strip()}
+            elif a == "--baseline-tag":
+                baseline_tag = args[i]
             else:
                 tag = args[i]
         elif not a.startswith("--"):
             only.append(a)
         i += 1
     if compare_dir is not None:
-        sys.exit(compare(compare_dir, threshold, retain=retain, tag=tag))
+        sys.exit(compare(compare_dir, threshold, retain=retain, tag=tag,
+                         blocking=blocking, baseline_tag=baseline_tag))
 
     print("name,us_per_call,derived")
     for name in MODULES:

@@ -225,7 +225,13 @@ class PEFTEngine:
 
         Two hTasks (possibly from different plans / different tenant
         censuses) with equal signatures lower to the identical jitted
-        computation, so the compiled step is shared."""
+        computation, so the compiled step is shared.  The active kernel
+        impl is part of the identity: jitted steps bake in whichever tier
+        (``xla`` / ``pallas`` / ``pallas_interpret``) was live at trace
+        time, so flipping ``kops.set_impl`` must miss the cache rather
+        than silently reuse a step compiled for the other tier."""
+        from repro.kernels import ops as kops
+
         h = self.plan.htasks[htask_idx]
         seg = self.plan.segments_for(htask_idx)
         mta = self.reg.mta
@@ -236,7 +242,8 @@ class PEFTEngine:
              mta.task_cfgs[t].rank, float(mta.task_cfgs[t].scale),
              float(mta.task_cfgs[t].lr), tuple(sorted(mta.task_cfgs[t].targets)))
             for t in h.task_ids)
-        return (h.rows, h.row_len, row_sig, mem_sig, self._adapter_sig)
+        return (kops.get_impl(), h.rows, h.row_len, row_sig, mem_sig,
+                self._adapter_sig)
 
     def _make_step(self, htask_idx: int) -> Callable:
         h = self.plan.htasks[htask_idx]
@@ -389,9 +396,16 @@ class PEFTEngine:
         """True once the fused decode micro-step is compiled — latency
         samples taken before this are trace/compile transients and must not
         enter the SLO p50/p99 window."""
-        return "micro" in self._decode_fns
+        from repro.kernels import ops as kops
+
+        return (kops.get_impl(), "micro") in self._decode_fns
 
     def _decode_fn(self, key, builder) -> Callable:
+        # decode fns bake in the trace-time kernel impl too (see
+        # step_signature) — key them by tier so impl flips retrace
+        from repro.kernels import ops as kops
+
+        key = (kops.get_impl(), key)
         fn = self._decode_fns.get(key)
         if fn is None:
             fn = self._decode_fns[key] = builder()

@@ -11,11 +11,41 @@ state + MXU tiles.
 Grid: (B*H, n_chunks); chunk dim innermost so the [dk, dv] f32 state scratch
 persists across chunks of one (batch, head) program.
 
-NOTE: this kernel is FORWARD-ONLY (no ``jax.custom_vjp``) — differentiating
-it raises; training the zamba2/xlstm cells must use the ``xla`` impl
-(``models.ssm.chunked_gla``), which autodiffs.  The chunk-parallel backward
-(reverse decay-cumsum + transposed block products) is an open ROADMAP item;
-see the support matrix in ``kernels/ops.py``.
+The op is differentiable via ``jax.custom_vjp``.  The forward under autodiff
+additionally spills the per-chunk ENTRY states H_in ([B*H, n, dk, dv] f32 —
+one [dk, dv] tile per chunk, tiny next to q/k/v), so the backward never
+replays the forward recurrence.  The backward is two kernels:
+
+  1. Reverse decay-cumsum kernel: the inter-chunk adjoint-state recurrence
+     run chunks-backward with a VMEM-carried cotangent state
+        G_exit(c-1) = exp(total_c) G_exit(c) + sum_i exp(cum_i) q_i (x) dy_i
+     seeded with the final-state cotangent; emits G_exit per chunk (and the
+     initial-state cotangent dh0 on the last reverse step).
+  2. Transposed block-product kernel (chunk-parallel, no carried state):
+     per chunk, with H_in and G_exit resident,
+        dq = (dY V^T . dec) K + e^{cum} dY H_in^T
+        dk = (dY V^T . dec)^T Q + w (V G_exit^T)
+        dv = (Q K^T . dec)^T dY + w (K G_exit)
+     plus the per-position decay-cotangent rows
+        dcum_t = q_t . dq_t - k_t . dk_t  and  dli_t = k_t . dk_t
+     (``dec``/``w`` are the forward's decay mask and chunk-exit weights).
+
+The log-decay gradient follows from the telescoping identity
+  dL/dcum_t = q_t . dq_t - k_t . dk_t  (+ <dH_f, H_f> at the last position),
+so ``dla`` is one reverse cumsum over the full sequence outside the kernel.
+
+Segment ``reset`` rows (the §3.5 state-carry boundary — the scan analogue
+of ``row_task = -1`` gating) use EXACT masks, never a -1e9 log-decay
+sentinel (a sentinel summed into the f32 in-chunk cumsum absorbs every
+later decay — ulp at 1e9 is ~64 — so all post-reset pairs would decay by
+exp(0) = 1).  The reset position's decay is excluded from the cumsum (its
+gradient is zeroed by a ``where`` outside the vjp) and every state path is
+gated on the within-chunk reset count: intra-chunk pairs must share it,
+the inter-chunk/carry terms survive only when it is zero, and the
+chunk-exit weights only for the final sub-segment.  In the backward the
+same gates make pre-reset dq/dk/dv EXACTLY zero under a post-reset loss,
+and ``dla`` becomes a segment-bounded reverse cumsum (reverse cumsum minus
+its value at the next segment start).
 """
 from __future__ import annotations
 
@@ -29,46 +59,71 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def _gates(r_ref, chunk: int, masked: bool):
+    """Within-chunk reset-count gates: (pair [Q,Q], entry [Q], exit [Q],
+    carry scalar) — all 1.0 when the op runs without resets."""
+    if not masked:
+        one = jnp.ones((chunk,), jnp.float32)
+        return jnp.ones((chunk, chunk), jnp.float32), one, one, 1.0
+    seg = jnp.cumsum(r_ref[0, :])  # [Q] inclusive reset count
+    pair = (seg[:, None] == seg[None, :]).astype(jnp.float32)
+    entry = (seg == 0).astype(jnp.float32)        # H_in reaches these rows
+    exit_ = (seg == seg[-1]).astype(jnp.float32)  # these rows feed H_out
+    carry = (seg[-1] == 0).astype(jnp.float32)    # H_in survives the chunk
+    return pair, entry, exit_, carry
+
+
 def _kernel(
     q_ref,   # [1, Q, 1, dk]
     k_ref,   # [1, Q, 1, dk]
     v_ref,   # [1, Q, 1, dv]
     la_ref,  # [1, Q, 1]
     li_ref,  # [1, Q, 1]
+    r_ref,   # [1, Q] int32 reset rows
+    h0_ref,  # [1, 1, dk, dv] initial state
     y_ref,   # [1, Q, 1, dv]
     hout_ref,  # [1, 1, dk, dv] final state out
-    h_ref,   # scratch [dk, dv] f32
-    *,
+    *rest,   # (hin_ref? [1, 1, dk, dv], h_ref scratch [dk, dv] f32)
     n_chunks: int,
     chunk: int,
+    save_states: bool,
+    masked: bool,
 ):
+    h_ref = rest[-1]
     j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
-        h_ref[...] = jnp.zeros_like(h_ref)
+        h_ref[...] = h0_ref[0, 0]
+
+    if save_states:
+        # entry state of THIS chunk — the backward's inter-chunk residual
+        rest[0][0, 0] = h_ref[...]
 
     q = q_ref[0, :, 0, :].astype(jnp.float32)  # [Q, dk]
     k = k_ref[0, :, 0, :].astype(jnp.float32)
     v = v_ref[0, :, 0, :].astype(jnp.float32)  # [Q, dv]
     la = la_ref[0, :, 0]
     li = li_ref[0, :, 0]
+    pair, entry, exit_, carry = _gates(r_ref, chunk, masked)
 
     cum = jnp.cumsum(la)  # [Q]
     gain = jnp.exp(li)
     tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
     dec = jnp.exp((cum[:, None] - cum[None, :]) * tri) * tri * gain[None, :]
+    if masked:
+        dec = dec * pair
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
     y_intra = jax.lax.dot_general(s * dec, v, (((1,), (0,)), ((), ())),
                                   preferred_element_type=jnp.float32)
-    qd = q * jnp.exp(cum)[:, None]
+    qd = q * (jnp.exp(cum) * entry)[:, None]
     y_inter = jax.lax.dot_general(qd, h_ref[...], (((1,), (0,)), ((), ())),
                                   preferred_element_type=jnp.float32)
     total = cum[-1]
-    w = jnp.exp(total - cum) * gain  # [Q]
+    w = jnp.exp(total - cum) * gain * exit_  # [Q]
     kd = k * w[:, None]
-    h_ref[...] = jnp.exp(total) * h_ref[...] + jax.lax.dot_general(
+    h_ref[...] = (jnp.exp(total) * carry) * h_ref[...] + jax.lax.dot_general(
         kd, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )
     y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
@@ -76,6 +131,295 @@ def _kernel(
     @pl.when(j == n_chunks - 1)
     def _emit():
         hout_ref[0, 0] = h_ref[...]
+
+
+def _bwd_state_kernel(
+    q_ref,     # [1, Q, 1, dk]  (chunk n-1-j: reversed index maps)
+    dy_ref,    # [1, Q, 1, dv]
+    la_ref,    # [1, Q, 1]
+    r_ref,     # [1, Q] int32
+    dhf_ref,   # [1, 1, dk, dv] final-state cotangent
+    gexit_ref,  # [1, 1, dk, dv] chunk-exit adjoint out
+    dh0_ref,   # [1, 1, dk, dv] initial-state cotangent out
+    g_ref,     # scratch [dk, dv] f32
+    *,
+    n_chunks: int,
+    chunk: int,
+    masked: bool,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        g_ref[...] = dhf_ref[0, 0]
+
+    # adjoint at THIS chunk's exit — consumed by the block-product kernel
+    gexit_ref[0, 0] = g_ref[...]
+
+    la = la_ref[0, :, 0]
+    _, entry, _, carry = _gates(r_ref, chunk, masked)
+    cum = jnp.cumsum(la)  # [Q]
+    qd = q_ref[0, :, 0, :].astype(jnp.float32) * (jnp.exp(cum) * entry)[:, None]
+    dy = dy_ref[0, :, 0, :].astype(jnp.float32)
+    # G_exit(c-1) = e^{total} G_exit(c) + Qd^T dY  (reverse decay-cumsum);
+    # a reset inside the chunk cuts both paths back to the entry state
+    g_ref[...] = (jnp.exp(cum[-1]) * carry) * g_ref[...] + jax.lax.dot_general(
+        qd, dy, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(j == n_chunks - 1)
+    def _emit():
+        dh0_ref[0, 0] = g_ref[...]
+
+
+def _bwd_chunk_kernel(
+    q_ref,     # [1, Q, 1, dk]
+    k_ref,     # [1, Q, 1, dk]
+    v_ref,     # [1, Q, 1, dv]
+    la_ref,    # [1, Q, 1]
+    li_ref,    # [1, Q, 1]
+    r_ref,     # [1, Q] int32
+    dy_ref,    # [1, Q, 1, dv]
+    hin_ref,   # [1, 1, dk, dv] chunk ENTRY state (saved by the forward)
+    gexit_ref,  # [1, 1, dk, dv] chunk EXIT adjoint (reverse-scan kernel)
+    dq_ref,    # [1, Q, 1, dk]
+    dk_ref,    # [1, Q, 1, dk]
+    dv_ref,    # [1, Q, 1, dv]
+    dcum_ref,  # [1, Q, 1]  q.dq - k.dk rows (decay cotangent, pre-cumsum)
+    dli_ref,   # [1, Q, 1]  k.dk rows (input-gate cotangent)
+    *,
+    chunk: int,
+    masked: bool,
+):
+    q = q_ref[0, :, 0, :].astype(jnp.float32)   # [Q, dk]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)   # [Q, dv]
+    dy = dy_ref[0, :, 0, :].astype(jnp.float32)
+    la = la_ref[0, :, 0]
+    li = li_ref[0, :, 0]
+    pair, entry, exit_, _ = _gates(r_ref, chunk, masked)
+
+    cum = jnp.cumsum(la)
+    gain = jnp.exp(li)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+    dec = jnp.exp((cum[:, None] - cum[None, :]) * tri) * tri * gain[None, :]
+    if masked:
+        dec = dec * pair
+    w = jnp.exp(cum[-1] - cum) * gain * exit_  # [Q]
+    hin = hin_ref[0, 0]    # [dk, dv]
+    gex = gexit_ref[0, 0]  # [dk, dv]
+
+    sdv = jax.lax.dot_general(dy, v, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # dy_i.v_j
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # q_i.k_j
+    p = sdv * dec
+
+    # dq_i = sum_{j<=i} dec[i,j] (dy_i.v_j) k_j + e^{cum_i} H_in dy_i
+    dq = jax.lax.dot_general(p, k, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    dq += (jnp.exp(cum) * entry)[:, None] * jax.lax.dot_general(
+        dy, hin, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    # dk_t = sum_{i>=t} dec[i,t] (dy_i.v_t) q_i + w_t G_exit v_t
+    dk = jax.lax.dot_general(p, q, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    dk += w[:, None] * jax.lax.dot_general(
+        v, gex, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    # dv_t = sum_{i>=t} dec[i,t] (q_i.k_t) dy_i + w_t G_exit^T k_t
+    dv = jax.lax.dot_general(s * dec, dy, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    dv += w[:, None] * jax.lax.dot_general(
+        k, gex, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    dq_ref[0, :, 0, :] = dq.astype(dq_ref.dtype)
+    dk_ref[0, :, 0, :] = dk.astype(dk_ref.dtype)
+    dv_ref[0, :, 0, :] = dv.astype(dv_ref.dtype)
+    kdk = (k * dk).sum(axis=1)
+    dcum_ref[0, :, 0] = (q * dq).sum(axis=1) - kdk
+    dli_ref[0, :, 0] = kdk
+
+
+def _maps(H: int, n: int):
+    def xmap(bh, j):
+        return (bh // H, j, bh % H, 0)
+
+    def gmap(bh, j):
+        return (bh // H, j, bh % H)
+
+    def rmap(bh, j):  # per-batch reset rows [B, S]
+        return (bh // H, j)
+
+    def smap(bh, j):
+        return (bh // H, bh % H, 0, 0)
+
+    def cmap(bh, j):  # per-chunk [dk, dv] tiles, [B*H, n, dk, dv] layout
+        return (bh, j, 0, 0)
+
+    return xmap, gmap, rmap, smap, cmap
+
+
+def _fwd_call(q, k, v, la, li, r, h0, chunk, interpret, masked, save_states):
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    Q = chunk
+    n = S // Q
+    grid = (B * H, n)
+    xmap, gmap, rmap, smap, cmap = _maps(H, n)
+
+    out_specs = [
+        pl.BlockSpec((1, Q, 1, dv), xmap),
+        pl.BlockSpec((1, 1, dk, dv), smap),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct(v.shape, q.dtype),
+        jax.ShapeDtypeStruct((B, H, dk, dv), jnp.float32),
+    ]
+    if save_states:
+        out_specs.append(pl.BlockSpec((1, 1, dk, dv), cmap))
+        out_shape.append(jax.ShapeDtypeStruct((B * H, n, dk, dv), jnp.float32))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_chunks=n, chunk=Q,
+                          save_states=save_states, masked=masked),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, dk), xmap),
+            pl.BlockSpec((1, Q, 1, dk), xmap),
+            pl.BlockSpec((1, Q, 1, dv), xmap),
+            pl.BlockSpec((1, Q, 1), gmap),
+            pl.BlockSpec((1, Q, 1), gmap),
+            pl.BlockSpec((1, Q), rmap),
+            pl.BlockSpec((1, 1, dk, dv), smap),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, la, li, r, h0)
+
+
+def _seg_rev_cumsum(dcum, r, masked):
+    """dla_t = sum_{i>=t, same segment} dC_i: the plain reverse cumsum minus
+    its value at the NEXT segment's start (gathered via the global segment
+    index) — exactly bounded, no sentinel arithmetic."""
+    rev = jnp.flip(jnp.cumsum(jnp.flip(dcum, axis=1), axis=1), axis=1)
+    if not masked:
+        return rev
+    B, S, H = dcum.shape
+    seg = jnp.cumsum(r, axis=1)  # [B, S] global segment index
+    bidx = jnp.arange(B)[:, None]
+    # rev at each segment's first (reset) position, scattered by segment id
+    starts = jnp.zeros((B, S + 2, H), dcum.dtype).at[
+        bidx, jnp.where(r > 0, seg, S + 1)
+    ].add(rev * (r > 0)[..., None].astype(dcum.dtype))
+    return rev - starts[bidx, jnp.minimum(seg + 1, S + 1)]
+
+
+def _bwd_call(q, k, v, la, li, r, hin, hfin, dy, dhf, chunk, interpret,
+              masked):
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    Q = chunk
+    n = S // Q
+    grid = (B * H, n)
+    xmap, gmap, rmap, smap, cmap = _maps(H, n)
+
+    def rxmap(bh, j):  # chunks visited last-to-first
+        return (bh // H, n - 1 - j, bh % H, 0)
+
+    def rgmap(bh, j):
+        return (bh // H, n - 1 - j, bh % H)
+
+    def rrmap(bh, j):
+        return (bh // H, n - 1 - j)
+
+    def rcmap(bh, j):
+        return (bh, n - 1 - j, 0, 0)
+
+    gexit, dh0 = pl.pallas_call(
+        functools.partial(_bwd_state_kernel, n_chunks=n, chunk=Q,
+                          masked=masked),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, dk), rxmap),
+            pl.BlockSpec((1, Q, 1, dv), rxmap),
+            pl.BlockSpec((1, Q, 1), rgmap),
+            pl.BlockSpec((1, Q), rrmap),
+            pl.BlockSpec((1, 1, dk, dv), smap),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, dk, dv), rcmap),
+            pl.BlockSpec((1, 1, dk, dv), smap),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, n, dk, dv), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(q, dy, la, r, dhf)
+
+    dq, dkk, dvv, dcum, dli = pl.pallas_call(
+        functools.partial(_bwd_chunk_kernel, chunk=Q, masked=masked),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, dk), xmap),
+            pl.BlockSpec((1, Q, 1, dk), xmap),
+            pl.BlockSpec((1, Q, 1, dv), xmap),
+            pl.BlockSpec((1, Q, 1), gmap),
+            pl.BlockSpec((1, Q, 1), gmap),
+            pl.BlockSpec((1, Q), rmap),
+            pl.BlockSpec((1, Q, 1, dv), xmap),
+            pl.BlockSpec((1, 1, dk, dv), cmap),
+            pl.BlockSpec((1, 1, dk, dv), cmap),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, dk), xmap),
+            pl.BlockSpec((1, Q, 1, dk), xmap),
+            pl.BlockSpec((1, Q, 1, dv), xmap),
+            pl.BlockSpec((1, Q, 1), gmap),
+            pl.BlockSpec((1, Q, 1), gmap),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct(k.shape, k.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+            jax.ShapeDtypeStruct((B, S, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, S, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, la, li, r, dy, hin, gexit)
+
+    # dla_t = sum_{i>=t, same segment} (q_i.dq_i - k_i.dk_i); the final-state
+    # term <dH_f, H_f> enters at the LAST position (so only the final
+    # segment's positions see it) before the segment-bounded reverse cumsum.
+    dcum = dcum.at[:, -1, :].add(jnp.einsum("bhkv,bhkv->bh", dhf, hfin))
+    dla = _seg_rev_cumsum(dcum, r, masked)
+    d_r = np.zeros(r.shape, jax.dtypes.float0)
+    return dq, dkk, dvv, dla, dli, d_r, dh0
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9))
+def _mamba_scan(q, k, v, la, li, r, h0, chunk, interpret, masked):
+    y, h = _fwd_call(q, k, v, la, li, r, h0, chunk, interpret, masked,
+                     save_states=False)
+    return y, h
+
+
+def _mamba_scan_fwd(q, k, v, la, li, r, h0, chunk, interpret, masked):
+    y, h, hin = _fwd_call(q, k, v, la, li, r, h0, chunk, interpret, masked,
+                          save_states=True)
+    return (y, h), (q, k, v, la, li, r, hin, h)
+
+
+def _mamba_scan_bwd(chunk, interpret, masked, res, cts):
+    q, k, v, la, li, r, hin, hfin = res
+    dy, dhf = cts
+    return _bwd_call(q, k, v, la, li, r, hin, hfin, dy.astype(q.dtype),
+                     dhf.astype(jnp.float32), chunk, interpret, masked)
+
+
+_mamba_scan.defvjp(_mamba_scan_fwd, _mamba_scan_bwd)
 
 
 def mamba_scan_pallas(
@@ -86,45 +430,25 @@ def mamba_scan_pallas(
     log_input: jax.Array,
     *,
     chunk: int = 256,
-    h0: Optional[jax.Array] = None,
+    h0: Optional[jax.Array] = None,  # [B, H, dk, dv]
+    reset: Optional[jax.Array] = None,  # [B, S] 1.0 = new segment starts
     interpret: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
-    assert h0 is None, "initial state not supported in the kernel path"
     B, S, H, dk = q.shape
     dv = v.shape[-1]
     Q = min(chunk, S)
     assert S % Q == 0
-    n = S // Q
-    grid = (B * H, n)
-
-    def xmap(bh, j):
-        return (bh // H, j, bh % H, 0)
-
-    def gmap(bh, j):
-        return (bh // H, j, bh % H)
-
-    def smap(bh, j):
-        return (bh // H, bh % H, 0, 0)
-
-    y, h = pl.pallas_call(
-        functools.partial(_kernel, n_chunks=n, chunk=Q),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, Q, 1, dk), xmap),
-            pl.BlockSpec((1, Q, 1, dk), xmap),
-            pl.BlockSpec((1, Q, 1, dv), xmap),
-            pl.BlockSpec((1, Q, 1), gmap),
-            pl.BlockSpec((1, Q, 1), gmap),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, Q, 1, dv), xmap),
-            pl.BlockSpec((1, 1, dk, dv), smap),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct(v.shape, q.dtype),
-            jax.ShapeDtypeStruct((B, H, dk, dv), jnp.float32),
-        ],
-        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
-        interpret=interpret,
-    )(q, k, v, log_decay.astype(jnp.float32), log_input.astype(jnp.float32))
-    return y, h
+    if h0 is None:
+        h0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+    la = log_decay.astype(jnp.float32)
+    if reset is None:
+        r = jnp.zeros((B, S), jnp.int32)
+    else:
+        # the reset position's own decay is excluded from the in-kernel
+        # cumsum; this where also zeroes its log_decay gradient
+        la = jnp.where(reset[:, :, None] > 0, 0.0, la)
+        r = (reset > 0).astype(jnp.int32)
+    return _mamba_scan(
+        q, k, v, la, log_input.astype(jnp.float32), r, h0.astype(jnp.float32),
+        Q, interpret, reset is not None,
+    )

@@ -16,20 +16,25 @@ Training support matrix (forward / backward under ``jax.grad``):
   -----------------  ---------  ---------------  ----------------
   grouped_lora       fwd+bwd    fwd+bwd (vjp)    fwd+bwd (vjp)
   packed_attention   fwd+bwd    fwd+bwd (vjp)    fwd+bwd (vjp)
-  mamba_scan         fwd+bwd    fwd only         fwd only
+  mamba_scan         fwd+bwd    fwd+bwd (vjp)    fwd+bwd (vjp)
 
 ``xla`` paths differentiate by ordinary autodiff of the jnp formulation.
-The Pallas grouped_lora / packed_attention paths carry ``jax.custom_vjp``
-backward kernels (see the kernel modules), so ``set_impl("pallas")`` /
-``set_impl("pallas_interpret")`` work under ``jax.value_and_grad`` — the
-training hot loop exercises the §3.4.3 grouped kernels end-to-end.
+Every Pallas path carries a ``jax.custom_vjp`` backward kernel (see the
+kernel modules), so ``set_impl("pallas")`` / ``set_impl("pallas_interpret")``
+train the WHOLE hot loop — grouped adapter GEMMs, packed flash attention,
+and the chunked SSD/GLA scan — end-to-end under ``jax.value_and_grad``;
+there is no xla-only family left.
 ``packed_attention`` additionally accepts learned PREFIX k/v rows
 (soft-prompt PEFT): extra leading segment rows with wildcard segment ids on
 the Pallas tiers, an online-softmax carry init on the XLA tier — both
 differentiable, with per-row gating.
-``mamba_scan``'s Pallas tier is still forward-only (serving/prefill): a
-chunk-parallel backward kernel is an open ROADMAP item; train zamba2/xlstm
-cells on the ``xla`` path meanwhile.
+``mamba_scan``'s Pallas backward is two kernels (reverse decay-cumsum
+adjoint-state scan + chunk-parallel transposed block products; per-chunk
+entry states saved by the forward) — see ``kernels/mamba_scan.py``.
+Segment ``reset`` rows (the §3.5 state-carry boundary, the scan analogue of
+``row_task = -1`` gating) are implemented with exact segment masks on every
+tier, so reset values match the segment-sliced oracle and resets block
+gradient flow across segment boundaries.
 
 The impl flag is thread-local and read at *trace* time: jitted steps bake in
 whichever impl was active when they were first traced, so flip the impl
@@ -198,23 +203,33 @@ def packed_attention(
 
 
 def mamba_scan(
-    q: jax.Array,
-    k: jax.Array,
-    v: jax.Array,
-    log_decay: jax.Array,
-    log_input: jax.Array,
+    q: jax.Array,          # [B, S, H, dk]
+    k: jax.Array,          # [B, S, H, dk]
+    v: jax.Array,          # [B, S, H, dv]
+    log_decay: jax.Array,  # [B, S, H]
+    log_input: jax.Array,  # [B, S, H]
     *,
     chunk: int = 256,
-    h0: Optional[jax.Array] = None,
+    h0: Optional[jax.Array] = None,     # [B, H, dk, dv]
+    reset: Optional[jax.Array] = None,  # [B, S] 1.0 = new segment starts here
 ):
+    """Chunked SSD/GLA scan -> (y, final_state); fwd+bwd on every tier.
+
+    ``reset`` erases the carried state exactly at packed-segment boundaries
+    (§3.5 state-carry dependency).  Both impls implement it with exact
+    segment masks (matching within-chunk reset counts) — never a -1e9
+    log-decay sentinel, which the f32 cumsum would absorb — so values match
+    the segment-sliced oracle and gradients cannot leak across boundaries
+    under autodiff of either path."""
     impl = _IMPL.name
     if impl == "xla":
         from repro.models.ssm import chunked_gla
 
-        return chunked_gla(q, k, v, log_decay, log_input, chunk, h0=h0)
+        return chunked_gla(q, k, v, log_decay, log_input, chunk, h0=h0,
+                           reset=reset)
     from repro.kernels.mamba_scan import mamba_scan_pallas
 
     return mamba_scan_pallas(
-        q, k, v, log_decay, log_input, chunk=chunk, h0=h0,
+        q, k, v, log_decay, log_input, chunk=chunk, h0=h0, reset=reset,
         interpret=(impl == "pallas_interpret"),
     )

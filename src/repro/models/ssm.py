@@ -42,9 +42,12 @@ def chunked_gla(
 ) -> Tuple[jax.Array, jax.Array]:
     """Returns (y [B,S,H,dv], final_state [B,H,dk,dv]).
 
-    ``reset`` implements the §3.5 chunk-alignment *state-carry dependency*
-    for packed sequences: a reset position zeroes the decay from everything
-    before it (the SSM analogue of the KV-reuse boundary).
+    This is the ``xla`` tier of ``kernels.ops.mamba_scan`` (the model cells
+    route through that dispatcher; ``set_impl("pallas")`` swaps in the
+    Pallas kernel with its custom_vjp backward).  ``reset`` implements the
+    §3.5 chunk-alignment *state-carry dependency* for packed sequences: a
+    reset position zeroes the decay from everything before it (the SSM
+    analogue of the KV-reuse boundary).
     """
     B, S, H, dk = q.shape
     dv = v.shape[-1]
@@ -53,22 +56,28 @@ def chunked_gla(
     n = S // Q
 
     if reset is not None:
-        # A reset at position t makes log_decay[t] = -inf-ish so the state
-        # from previous tokens is erased exactly at segment boundaries.
-        log_decay = jnp.where(reset[:, :, None] > 0, -1e9, log_decay)
+        # State erasure uses EXACT segment masks, not a -1e9 log-decay
+        # sentinel: a sentinel summed into the f32 in-chunk cumsum absorbs
+        # every later decay in that chunk (ulp at 1e9 is ~64), so all
+        # post-reset pairs would decay by exp(0) = 1.  The reset position's
+        # decay is excluded from the cumsum instead (its gradient is zeroed
+        # by this where) and cross-segment interaction is cut by comparing
+        # within-chunk reset counts below.
+        log_decay = jnp.where(reset[:, :, None] > 0, 0.0, log_decay)
 
     def to_chunks(x):
         return jnp.moveaxis(x.reshape((B, n, Q) + x.shape[2:]), 1, 0)
 
     qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
     lac, lic = to_chunks(log_decay.astype(jnp.float32)), to_chunks(log_input.astype(jnp.float32))
+    rc = to_chunks((reset > 0).astype(jnp.int32)) if reset is not None else None
 
     if h0 is None:
         h0 = jnp.zeros((B, H, dk, dv), jnp.float32)
 
     causal = np.tril(np.ones((Q, Q), np.float32))
 
-    def step(hprev, xs):
+    def step(hprev, xs, ri=None):
         qi, ki, vi, la, li = xs  # [B, Q, H, *]
         cum = jnp.cumsum(la, axis=1)  # [B, Q, H] inclusive; non-increasing
         gain = jnp.exp(li)  # [B, Q, H] input gate magnitude (may exceed 1)
@@ -76,27 +85,44 @@ def chunked_gla(
         dec = cum[:, :, None, :] - cum[:, None, :, :]  # <= 0 for j <= i
         cmask = causal[None, :, :, None]
         dec = jnp.exp(dec * cmask) * cmask * gain[:, None, :, :]
+        qd = qi.astype(jnp.float32) * jnp.exp(cum)[..., None]
+        total = cum[:, -1:, :]  # [B,1,H]
+        w = jnp.exp(total - cum) * gain  # total - cum <= 0
+        hscale = jnp.exp(total[:, 0, :])  # [B,H]
+        if ri is not None:
+            # positions interact iff their within-chunk reset counts match;
+            # H_prev reaches rows before the first reset; only the final
+            # sub-segment feeds the carried state
+            seg = jnp.cumsum(ri, axis=1)  # [B, Q]
+            dec = dec * (seg[:, :, None] == seg[:, None, :]
+                         ).astype(jnp.float32)[..., None]
+            qd = qd * (seg == 0).astype(jnp.float32)[:, :, None, None]
+            w = w * (seg == seg[:, -1:]).astype(jnp.float32)[..., None]
+            hscale = hscale * (seg[:, -1] == 0).astype(jnp.float32)[:, None]
         s = jnp.einsum("bihd,bjhd->bijh", qi, ki, preferred_element_type=jnp.float32)
         y_intra = jnp.einsum("bijh,bjhv->bihv", s * dec, vi.astype(jnp.float32))
         # inter-chunk: y_i += exp(cum_i) * q_i . H_prev
-        qd = qi.astype(jnp.float32) * jnp.exp(cum)[..., None]
         y_inter = jnp.einsum("bihd,bhdv->bihv", qd, hprev)
         # state update: H_new = exp(cum_Q) H_prev + sum_j exp(cum_Q - cum_j) gain_j k_j v_j
-        total = cum[:, -1:, :]  # [B,1,H]
-        w = jnp.exp(total - cum) * gain  # total - cum <= 0
         kd = ki.astype(jnp.float32) * w[..., None]
         h_new = (
-            jnp.exp(total[:, 0, :])[:, :, None, None] * hprev
+            hscale[:, :, None, None] * hprev
             + jnp.einsum("bjhd,bjhv->bhdv", kd, vi.astype(jnp.float32))
         )
         return h_new, (y_intra + y_inter).astype(q.dtype)
 
     from repro.models.flags import cost_unroll
 
+    if rc is None:
+        scan_step, xs = step, (qc, kc, vc, lac, lic)
+    else:
+        def scan_step(hprev, xs_r):
+            return step(hprev, xs_r[:-1], ri=xs_r[-1])
+        xs = (qc, kc, vc, lac, lic, rc)
     # Cost-measurement unrolling is capped: beyond 32 chunks the HLO blowup
     # makes CPU compiles intractable; the roofline builder adds the analytic
     # (n_chunks - 1) x per-chunk GLA correction for those cells instead.
-    h_final, yc = jax.lax.scan(step, h0, (qc, kc, vc, lac, lic),
+    h_final, yc = jax.lax.scan(scan_step, h0, xs,
                                unroll=cost_unroll() and n <= 32)
     y = jnp.moveaxis(yc, 0, 1).reshape(B, S, H, dv)
     return y, h_final
@@ -194,7 +220,14 @@ def mamba2_apply(
     v = shard(v, "batch", None, "ssm_heads", None)
 
     if state is None:
-        y, _ = chunked_gla(q, k, v, log_decay, log_input, cfg.ssm_chunk, reset=reset)
+        # Routed through kernels.ops so ``set_impl("pallas")`` runs the
+        # chunked-scan Pallas kernel — forward AND backward via its
+        # custom_vjp — in the training hot loop; the default "xla" impl
+        # dispatches right back to chunked_gla below.
+        from repro.kernels import ops as kops
+
+        y, _ = kops.mamba_scan(q, k, v, log_decay, log_input,
+                               chunk=cfg.ssm_chunk, reset=reset)
         new_state = None
     else:
         y, h_new = gla_decode_step(q, k, v, log_decay, log_input, state["h"])
@@ -265,7 +298,10 @@ def mlstm_apply(
     v_aug = jnp.concatenate([v, jnp.ones((B, S, nh, 1), v.dtype)], axis=-1)
 
     if state is None:
-        y_aug, _ = chunked_gla(q, k, v_aug, log_decay, log_input, cfg.ssm_chunk, reset=reset)
+        from repro.kernels import ops as kops
+
+        y_aug, _ = kops.mamba_scan(q, k, v_aug, log_decay, log_input,
+                                   chunk=cfg.ssm_chunk, reset=reset)
         new_state = None
     else:
         y_aug, h_new = gla_decode_step(q, k, v_aug, log_decay, log_input, state["h"])

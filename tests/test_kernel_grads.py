@@ -1,10 +1,24 @@
-"""Gradient parity: Pallas custom_vjp kernels (interpret mode) vs ref.py.
+"""Gradient parity: Pallas custom_vjp kernels vs ref.py, on a selectable tier.
 
 The §3.4.3 grouped kernels must be *trainable*: ``jax.grad`` through the
 Pallas tier has to match autodiff of the pure-jnp oracles, including the
 awkward cases — rows with ``row_task == -1`` (no adapter), multi-segment
-packed attention rows, GQA head grouping, and the per-task ``scale`` grad.
+packed attention rows, GQA head grouping, the per-task ``scale`` grad, and
+the chunked SSD/GLA scan's state carry across chunk boundaries (entry-state
+residuals + reverse adjoint recurrence).
+
+CI runs this file as a matrix over ``REPRO_KERNEL_IMPL``:
+
+  xla               — the jnp formulations' autodiff vs the oracles
+  pallas_interpret  — the Pallas kernel bodies (interpret mode; default)
+  pallas            — the compiled TPU kernels (dispatchable TPU leg)
+
+The env var picks the ops-level tier under test AND whether the direct
+kernel calls run interpreted, so the same file proves every cell of the
+``kernels/ops.py`` support matrix on the hardware it has.
 """
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,12 +26,49 @@ import pytest
 
 from repro.kernels import ops as kops
 from repro.kernels.grouped_lora import grouped_lora_pallas
+from repro.kernels.mamba_scan import mamba_scan_pallas
 from repro.kernels.packed_attention import packed_attention_pallas
-from repro.kernels.ref import grouped_lora_ref, packed_attention_ref
+from repro.kernels.ref import (grouped_lora_ref, mamba_scan_ref,
+                               packed_attention_ref)
+
+# Tier under test (see module docstring): ops-level parity tests compare
+# ``xla`` against KERNEL_TIER; direct kernel calls interpret unless the
+# compiled-TPU leg is requested.
+KERNEL_TIER = os.environ.get("REPRO_KERNEL_IMPL", "pallas_interpret")
+assert KERNEL_TIER in ("xla", "pallas", "pallas_interpret"), KERNEL_TIER
+INTERPRET = KERNEL_TIER != "pallas"
+
+# Direct kernel-body-vs-oracle tests exercise the Pallas kernels whatever
+# the env says — running them again on the xla leg would only repeat the
+# pallas_interpret leg's work, so that leg keeps the ops-level/e2e tests.
+skip_on_xla = pytest.mark.skipif(
+    KERNEL_TIER == "xla",
+    reason="pallas kernel-body contract; identical on the pallas legs")
+
+# Tier-vs-xla parity degenerates to x == x when the tier IS xla; the xla
+# leg keeps the oracle-grounded tests (prefix rows, reset semantics,
+# segmented-oracle, engine signature) instead.
+skip_parity_on_xla = pytest.mark.skipif(
+    KERNEL_TIER == "xla",
+    reason="tier-vs-xla parity is tautological on the xla leg")
 
 
 def _max_err(a, b):
     return float(np.max(np.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32))))
+
+
+class _impl:
+    """Scoped kops impl flip (restores the previous tier on exit)."""
+
+    def __init__(self, name):
+        self.name = name
+
+    def __enter__(self):
+        self.prev = kops.get_impl()
+        kops.set_impl(self.name)
+
+    def __exit__(self, *exc):
+        kops.set_impl(self.prev)
 
 
 # ---------------------------------------------------------------------------
@@ -34,6 +85,7 @@ def _max_err(a, b):
         (64, 128, 128, 1, 32, 64, 128),   # one task
     ],
 )
+@skip_on_xla
 def test_grouped_lora_grads_match_ref(dtype, M, d_in, d_out, T, r, bm, bk, key):
     ks = jax.random.split(key, 4)
     x = jax.random.normal(ks[0], (M, d_in), dtype)
@@ -48,7 +100,7 @@ def test_grouped_lora_grads_match_ref(dtype, M, d_in, d_out, T, r, bm, bk, key):
 
     def loss_pal(x, a, b, scale):
         y = grouped_lora_pallas(x, a, b, rt, scale, block_m=bm, block_k=bk,
-                                interpret=True)
+                                interpret=INTERPRET)
         return (y.astype(jnp.float32) * g.astype(jnp.float32)).sum()
 
     def loss_ref(x, a, b, scale):
@@ -66,6 +118,7 @@ def test_grouped_lora_grads_match_ref(dtype, M, d_in, d_out, T, r, bm, bk, key):
         )
 
 
+@skip_on_xla
 def test_grouped_lora_no_adapter_rows_get_zero_grad(key):
     """Rows with row_task == -1 must contribute exactly zero to dx/da/db."""
     M, d_in, d_out, T, r, bm = 128, 128, 64, 2, 4, 64
@@ -77,7 +130,8 @@ def test_grouped_lora_no_adapter_rows_get_zero_grad(key):
     scale = jnp.ones((T,))
 
     def loss(x, a, b):
-        y = grouped_lora_pallas(x, a, b, rt, scale, block_m=bm, interpret=True)
+        y = grouped_lora_pallas(x, a, b, rt, scale, block_m=bm,
+                                interpret=INTERPRET)
         return (y ** 2).sum()
 
     dx, da, db = jax.grad(loss, argnums=(0, 1, 2))(x, a, b)
@@ -87,8 +141,9 @@ def test_grouped_lora_no_adapter_rows_get_zero_grad(key):
     assert float(jnp.abs(da[1]).max()) > 0 and float(jnp.abs(db[1]).max()) > 0
 
 
+@skip_parity_on_xla
 def test_grouped_lora_ops_impl_parity_under_grad(key):
-    """kops.grouped_lora: grads under set_impl("pallas_interpret") == xla."""
+    """kops.grouped_lora: grads under set_impl(KERNEL_TIER) == xla."""
     B, S, d, dout, T, r = 6, 32, 48, 40, 3, 4
     ks = jax.random.split(key, 4)
     x = jax.random.normal(ks[0], (B, S, d))
@@ -101,14 +156,10 @@ def test_grouped_lora_ops_impl_parity_under_grad(key):
     def loss(x, a, b):
         return (kops.grouped_lora(x, a, b, rt, scale) * g).sum()
 
-    prev = kops.get_impl()
-    try:
-        kops.set_impl("xla")
+    with _impl("xla"):
         vx, gx = jax.value_and_grad(loss, argnums=(0, 1, 2))(x, a, b)
-        kops.set_impl("pallas_interpret")
+    with _impl(KERNEL_TIER):
         vp, gp = jax.value_and_grad(loss, argnums=(0, 1, 2))(x, a, b)
-    finally:
-        kops.set_impl(prev)
     assert _max_err(vp, vx) < 1e-3
     for name, p, q in zip(("dx", "da", "db"), gp, gx):
         assert _max_err(p, q) < 1e-3, (name, _max_err(p, q))
@@ -129,6 +180,7 @@ def test_grouped_lora_ops_impl_parity_under_grad(key):
         (2, 128, 2, 1, 32, 128, 32, True, True),    # packed, asymmetric blocks
     ],
 )
+@skip_on_xla
 def test_packed_attention_grads_match_ref(dtype, B, S, H, Hkv, dh, bq, bk,
                                           causal, packed, key):
     ks = jax.random.split(key, 4)
@@ -150,7 +202,7 @@ def test_packed_attention_grads_match_ref(dtype, B, S, H, Hkv, dh, bq, bk,
 
     def loss_pal(q, k, v):
         o = packed_attention_pallas(q, k, v, seg, pos, causal, block_q=bq,
-                                    block_k=bk, interpret=True)
+                                    block_k=bk, interpret=INTERPRET)
         return (o.astype(jnp.float32) * g.astype(jnp.float32)).sum()
 
     def loss_ref(q, k, v):
@@ -168,6 +220,7 @@ def test_packed_attention_grads_match_ref(dtype, B, S, H, Hkv, dh, bq, bk,
         )
 
 
+@skip_on_xla
 def test_packed_attention_multisegment_grads(key):
     """4 ragged segments per row + padding tail (fully-masked final rows)."""
     B, S, H, dh = 1, 128, 2, 16
@@ -184,7 +237,7 @@ def test_packed_attention_multisegment_grads(key):
 
     def loss_pal(q, k, v):
         o = packed_attention_pallas(q, k, v, seg, pos, True, block_q=32,
-                                    block_k=32, interpret=True)
+                                    block_k=32, interpret=INTERPRET)
         return (o * g).sum()
 
     def loss_ref(q, k, v):
@@ -236,10 +289,8 @@ def test_packed_attention_prefix_rows_grads(key):
         return (dense_ref(q, k, v, pk, pv) * g).sum()
 
     gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3, 4))(q, k, v, pk, pv)
-    prev = kops.get_impl()
-    try:
-        for impl in ("xla", "pallas_interpret"):
-            kops.set_impl(impl)
+    for impl in ("xla", KERNEL_TIER):
+        with _impl(impl):
 
             def loss(q, k, v, pk, pv):
                 o = kops.packed_attention(q, k, v, segment_ids=seg,
@@ -249,12 +300,223 @@ def test_packed_attention_prefix_rows_grads(key):
                 return (o * g).sum()
 
             gp = jax.grad(loss, argnums=(0, 1, 2, 3, 4))(q, k, v, pk, pv)
-            for name, a, b in zip(("dq", "dk", "dv", "dpk", "dpv"), gp, gr):
-                assert _max_err(a, b) < 1e-3, (impl, name, _max_err(a, b))
-            np.testing.assert_array_equal(np.asarray(gp[3][1]), 0.0)
-            np.testing.assert_array_equal(np.asarray(gp[4][1]), 0.0)
-    finally:
-        kops.set_impl(prev)
+        for name, a, b in zip(("dq", "dk", "dv", "dpk", "dpv"), gp, gr):
+            assert _max_err(a, b) < 1e-3, (impl, name, _max_err(a, b))
+        np.testing.assert_array_equal(np.asarray(gp[3][1]), 0.0)
+        np.testing.assert_array_equal(np.asarray(gp[4][1]), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# mamba_scan (chunked SSD/GLA): reverse decay-cumsum + transposed products
+# ---------------------------------------------------------------------------
+
+
+def _gla_inputs(key, B, S, H, dk, dv, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    q = jax.random.normal(ks[0], (B, S, H, dk), dtype)
+    k = jax.random.normal(ks[1], (B, S, H, dk), dtype) * 0.3
+    v = jax.random.normal(ks[2], (B, S, H, dv), dtype)
+    la = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+    li = jnp.log(jax.nn.softplus(jax.random.normal(ks[4], (B, S, H))) + 1e-3)
+    g = jax.random.normal(ks[5], (B, S, H, dv)).astype(jnp.float32)
+    gh = jax.random.normal(ks[6], (B, H, dk, dv)) * 0.3
+    return q, k, v, la, li, g, gh
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,H,dk,dv,Q",
+    [
+        (2, 128, 2, 16, 32, 32),  # 4 chunks: state straddles 3 boundaries
+        (1, 256, 4, 64, 64, 64),  # wider heads, 4 chunks
+        (2, 64, 1, 8, 8, 64),     # single chunk (Q == S): no carry at all
+    ],
+)
+@skip_on_xla
+def test_mamba_scan_grads_match_ref(dtype, B, S, H, dk, dv, Q, key):
+    """Both outputs get cotangents: y AND the final state (the dla identity's
+    <dH_f, H_f> term and the reverse-scan seed are exercised)."""
+    q, k, v, la, li, g, gh = _gla_inputs(key, B, S, H, dk, dv, dtype)
+
+    def loss_pal(q, k, v, la, li):
+        y, h = mamba_scan_pallas(q, k, v, la, li, chunk=Q, interpret=INTERPRET)
+        return (y.astype(jnp.float32) * g).sum() + (h * gh).sum()
+
+    def loss_ref(q, k, v, la, li):
+        y, h = mamba_scan_ref(q, k, v, la, li)
+        return (y.astype(jnp.float32) * g).sum() + (h * gh).sum()
+
+    vp, gp = jax.value_and_grad(loss_pal, argnums=(0, 1, 2, 3, 4))(q, k, v, la, li)
+    vr, gr = jax.value_and_grad(loss_ref, argnums=(0, 1, 2, 3, 4))(q, k, v, la, li)
+    rtol, atol = (8e-2, 5e-1) if dtype == jnp.bfloat16 else (1e-4, 1e-3)
+    np.testing.assert_allclose(float(vp), float(vr), rtol=rtol, atol=atol)
+    for name, p, r in zip(("dq", "dk", "dv", "dla", "dli"), gp, gr):
+        np.testing.assert_allclose(
+            np.asarray(p, np.float32), np.asarray(r, np.float32),
+            rtol=rtol, atol=atol, err_msg=name,
+        )
+
+
+@skip_on_xla
+def test_mamba_scan_h0_grads_match_ref(key):
+    """Initial-state input: dh0 comes off the reverse scan's last step."""
+    B, S, H, dk, dv, Q = 1, 96, 3, 8, 8, 32
+    q, k, v, la, li, g, gh = _gla_inputs(key, B, S, H, dk, dv)
+    h0 = jax.random.normal(jax.random.PRNGKey(9), (B, H, dk, dv)) * 0.5
+
+    def loss_pal(q, k, v, la, li, h0):
+        y, h = mamba_scan_pallas(q, k, v, la, li, chunk=Q, h0=h0,
+                                 interpret=INTERPRET)
+        return (y.astype(jnp.float32) * g).sum() + (h * gh).sum()
+
+    def loss_ref(q, k, v, la, li, h0):
+        y, h = mamba_scan_ref(q, k, v, la, li, h0=h0)
+        return (y.astype(jnp.float32) * g).sum() + (h * gh).sum()
+
+    gp = jax.grad(loss_pal, argnums=tuple(range(6)))(q, k, v, la, li, h0)
+    gr = jax.grad(loss_ref, argnums=tuple(range(6)))(q, k, v, la, li, h0)
+    for name, p, r in zip(("dq", "dk", "dv", "dla", "dli", "dh0"), gp, gr):
+        np.testing.assert_allclose(
+            np.asarray(p, np.float32), np.asarray(r, np.float32),
+            rtol=1e-4, atol=1e-3, err_msg=name,
+        )
+
+
+@skip_parity_on_xla
+def test_mamba_scan_ops_impl_parity_under_grad(key):
+    """kops.mamba_scan: grads under set_impl(KERNEL_TIER) == xla, including
+    a chunk-straddling segment reset (position 24 inside a 16-chunk)."""
+    B, S, H, dk, dv, Q = 2, 64, 2, 8, 8, 16
+    q, k, v, la, li, g, gh = _gla_inputs(key, B, S, H, dk, dv)
+    reset = jnp.zeros((B, S)).at[:, 24].set(1.0)
+
+    def loss(q, k, v, la, li):
+        y, h = kops.mamba_scan(q, k, v, la, li, chunk=Q, reset=reset)
+        return (y.astype(jnp.float32) * g).sum() + (h * gh).sum()
+
+    with _impl("xla"):
+        vx, gx = jax.value_and_grad(loss, argnums=(0, 1, 2, 3, 4))(q, k, v, la, li)
+    with _impl(KERNEL_TIER):
+        vp, gp = jax.value_and_grad(loss, argnums=(0, 1, 2, 3, 4))(q, k, v, la, li)
+    assert _max_err(vp, vx) < 1e-3
+    for name, p, x_ in zip(("dq", "dk", "dv", "dla", "dli"), gp, gx):
+        assert _max_err(p, x_) < 1e-3, (name, _max_err(p, x_))
+
+
+def test_mamba_scan_reset_blocks_cross_segment_grads(key):
+    """A reset boundary is the scan's row gate (the ``row_task = -1``
+    analogue): loss on the post-reset segment must put EXACTLY zero gradient
+    on every pre-reset input — no state-carry leak through the backward.
+    The exactness matters: the segment masks gate each term to 0.0 rather
+    than summing a -1e9 sentinel the f32 cumsum would absorb."""
+    B, S, H, dk, dv, Q = 1, 64, 2, 8, 8, 16
+    q, k, v, la, li, g, _ = _gla_inputs(key, B, S, H, dk, dv)
+    r = 24  # straddles a chunk: the boundary masks run inside chunk 1
+    reset = jnp.zeros((B, S)).at[:, r].set(1.0)
+
+    def loss(q, k, v, la, li):
+        y, _ = kops.mamba_scan(q, k, v, la, li, chunk=Q, reset=reset)
+        return (y.astype(jnp.float32)[:, r:] * g[:, r:]).sum()
+
+    with _impl(KERNEL_TIER):
+        grads = jax.grad(loss, argnums=(0, 1, 2, 3, 4))(q, k, v, la, li)
+    for name, t in zip(("dq", "dk", "dv", "dli"), (*grads[:3], grads[4])):
+        np.testing.assert_array_equal(np.asarray(t[:, :r]), 0.0, err_msg=name)
+    dla = np.asarray(grads[3][:, :r])
+    if KERNEL_TIER == "xla":
+        # chunked_gla's autodiffed cumsum transpose leaves +-cancellation
+        # dust on the decay cotangent; the custom_vjp identity is exact
+        assert float(np.abs(dla).max()) < 1e-5
+    else:
+        np.testing.assert_array_equal(dla, 0.0, err_msg="dla")
+    assert float(jnp.abs(grads[1][:, r:]).max()) > 0  # post-reset grads flow
+
+
+def test_mamba_scan_reset_matches_segmented_oracle(key):
+    """Reset semantics are grounded in the sequential oracle, not in
+    tier-vs-tier parity (which a shared bug would satisfy): a packed row
+    with resets must equal the oracle run per segment with fresh state —
+    values, final state, and every gradient."""
+    B, S, H, dk, dv, Q = 1, 64, 2, 8, 8, 16
+    q, k, v, la, li, g, gh = _gla_inputs(key, B, S, H, dk, dv)
+    cuts = [5, 24, 40]  # mid-chunk, straddling, plus a short first segment
+    reset = jnp.zeros((B, S)).at[:, jnp.asarray(cuts)].set(1.0)
+    bounds = [0] + cuts + [S]
+
+    def loss_oracle(q, k, v, la, li):
+        tot = 0.0
+        for a, b in zip(bounds[:-1], bounds[1:]):
+            # fresh state per segment; the reset position's decay is unused
+            # (zero state) so the slice needs no masking of its own
+            y, h = mamba_scan_ref(q[:, a:b], k[:, a:b], v[:, a:b],
+                                  la[:, a:b], li[:, a:b])
+            tot += (y.astype(jnp.float32) * g[:, a:b]).sum()
+            if b == S:
+                tot += (h * gh).sum()
+        return tot
+
+    def loss(q, k, v, la, li):
+        y, h = kops.mamba_scan(q, k, v, la, li, chunk=Q, reset=reset)
+        return (y.astype(jnp.float32) * g).sum() + (h * gh).sum()
+
+    vr, gr = jax.value_and_grad(loss_oracle, argnums=(0, 1, 2, 3, 4))(
+        q, k, v, la, li)
+    with _impl(KERNEL_TIER):
+        vp, gp = jax.value_and_grad(loss, argnums=(0, 1, 2, 3, 4))(
+            q, k, v, la, li)
+    np.testing.assert_allclose(float(vp), float(vr), rtol=1e-4, atol=1e-4)
+    for name, p, r_ in zip(("dq", "dk", "dv", "dla", "dli"), gp, gr):
+        np.testing.assert_allclose(
+            np.asarray(p, np.float32), np.asarray(r_, np.float32),
+            rtol=1e-4, atol=1e-4, err_msg=name,
+        )
+
+
+# ---------------------------------------------------------------------------
+# ssm / hybrid cells: the scan backward inside the real model blocks
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cell", ["mamba2", "mlstm"])
+@skip_parity_on_xla
+def test_ssm_cell_grads_tier_vs_xla(cell, key):
+    """A full zamba2/xlstm cell (conv, gates, norms, base-op projections
+    around the scan) trains on the Pallas tier: value_and_grad parity with
+    the xla path at f32 tightness (acceptance: rtol <= 1e-4)."""
+    from repro.configs import smoke_config
+    from repro.models import ssm
+    from repro.models.layers import materialize
+
+    if cell == "mamba2":
+        cfg = smoke_config("zamba2-2.7b")
+        spec, apply = ssm.mamba2_spec(cfg), ssm.mamba2_apply
+    else:
+        cfg = smoke_config("xlstm-1.3b")
+        spec, apply = ssm.mlstm_spec(cfg), ssm.mlstm_apply
+    params = jax.tree.map(lambda a: a.astype(jnp.float32),
+                          materialize(spec, key))
+    B, S = 2, 32  # ssm_chunk=16 -> two chunks: inter-chunk carry exercised
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    x = jax.random.normal(ks[0], (B, S, cfg.d_model), jnp.float32)
+    g = jax.random.normal(ks[1], (B, S, cfg.d_model), jnp.float32)
+
+    def loss(params, x):
+        y, _ = apply(params, x, cfg)
+        return (y.astype(jnp.float32) * g).sum()
+
+    with _impl("xla"):
+        vx, gx = jax.value_and_grad(loss, argnums=(0, 1))(params, x)
+    with _impl(KERNEL_TIER):
+        vp, gp = jax.value_and_grad(loss, argnums=(0, 1))(params, x)
+    np.testing.assert_allclose(float(vp), float(vx), rtol=1e-4, atol=1e-4)
+    flat_x, _ = jax.tree_util.tree_flatten_with_path(gx)
+    flat_p = jax.tree.leaves(gp)
+    assert len(flat_x) == len(flat_p) > 0
+    for (path, tx), tp in zip(flat_x, flat_p):
+        np.testing.assert_allclose(
+            np.asarray(tp, np.float32), np.asarray(tx, np.float32),
+            rtol=1e-4, atol=1e-4, err_msg=jax.tree_util.keystr(path),
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -262,24 +524,21 @@ def test_packed_attention_prefix_rows_grads(key):
 # ---------------------------------------------------------------------------
 
 
-def test_train_step_grads_pallas_interpret_vs_xla(key):
-    """A full multi-task train-step backward on the Pallas tier (interpret)
-    must match the XLA tier: grouped-LoRA + packed-attention grads flow
-    end-to-end through the model (§3.4.3 kernels actually train)."""
+def _train_step_grads(cfg_name, targets, key, seq_len=32):
     from repro.configs import smoke_config
     from repro.models.transformer import build_model
     from repro.peft.adapters import LORA, AdapterConfig
     from repro.peft.multitask import MultiTaskAdapters, TaskSegments
 
-    cfg = smoke_config("llama3.2-3b")
+    cfg = smoke_config(cfg_name)
     m = build_model(cfg)
     params = m.init(key)
-    mta = MultiTaskAdapters(cfg, [AdapterConfig(LORA, rank=4),
-                                  AdapterConfig(LORA, rank=4)])
+    mta = MultiTaskAdapters(cfg, [AdapterConfig(LORA, rank=4, targets=targets),
+                                  AdapterConfig(LORA, rank=4, targets=targets)])
     seg = TaskSegments.contiguous([2, 2])
     ad = mta.init(jax.random.PRNGKey(1))
     ctxf = mta.ctx_factory(seg)
-    B, S = 4, 32
+    B, S = 4, seq_len
     batch = {
         "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
         "labels": jax.random.randint(jax.random.PRNGKey(7), (B, S), 0,
@@ -291,15 +550,33 @@ def test_train_step_grads_pallas_interpret_vs_xla(key):
         out = m.forward(params, batch, adapters=ad, ctx_factory=ctxf)
         return seg.per_task_loss(out["per_token_loss"], batch["loss_mask"]).sum()
 
-    prev = kops.get_impl()
-    try:
-        kops.set_impl("xla")
+    with _impl("xla"):
         lx, gx = jax.value_and_grad(loss_fn, allow_int=True)(ad)
-        kops.set_impl("pallas_interpret")
+    with _impl(KERNEL_TIER):
         lp, gp = jax.value_and_grad(loss_fn, allow_int=True)(ad)
-    finally:
-        kops.set_impl(prev)
+    return lx, gx, lp, gp
 
+
+@pytest.mark.parametrize(
+    "cfg_name,targets",
+    [
+        ("llama3.2-3b", ("attn_q", "attn_k", "attn_v", "attn_o")),
+        # adapters on the ssm projections: adapter grads flow THROUGH the
+        # scan backward (grouped-LoRA vjp composed with mamba_scan vjp)
+        ("zamba2-2.7b", ("ssm_in", "ssm_out", "attn_q", "attn_v")),
+        # xlstm: ssm_out is declared at the mLSTM inner width, which the
+        # sLSTM block (w_out at d_model) can't consume — use the sites every
+        # xlstm cell agrees on
+        ("xlstm-1.3b", ("ssm_in", "attn_q", "attn_v")),
+    ],
+)
+@skip_parity_on_xla
+def test_train_step_grads_tier_vs_xla(cfg_name, targets, key):
+    """A full multi-task train-step backward on the Pallas tier must match
+    the XLA tier for every backbone family the kernels serve — dense
+    (grouped-LoRA + packed-attention) and hybrid/ssm (mamba_scan): the
+    §3.4.3 kernels actually train, with no xla-only family left."""
+    lx, gx, lp, gp = _train_step_grads(cfg_name, targets, key)
     assert np.isfinite(float(lp))
     np.testing.assert_allclose(float(lp), float(lx), rtol=2e-3, atol=2e-3)
     flat_x = jax.tree.leaves(gx)
@@ -309,3 +586,30 @@ def test_train_step_grads_pallas_interpret_vs_xla(key):
         np.testing.assert_allclose(np.asarray(tp, np.float32),
                                    np.asarray(tx, np.float32),
                                    rtol=5e-2, atol=5e-3)
+
+
+def test_engine_step_signature_is_impl_sensitive():
+    """Compiled hTask steps bake in the trace-time kernel impl, so the
+    engine's step cache must key on it — flipping set_impl between plans
+    has to miss, not reuse a step compiled for the other tier."""
+    from repro.configs import smoke_config
+    from repro.core import (ExecutionPlanner, ModelGenerator, ParallelismSpec,
+                            PEFTEngine)
+    from repro.data import make_task
+    from repro.peft.adapters import LORA, AdapterConfig
+
+    cfg = smoke_config("llama3.2-3b")
+    tasks = [make_task("t0", "sst2", 2, AdapterConfig(LORA, rank=4), seed=0)]
+    planner = ExecutionPlanner(cfg, ParallelismSpec(num_stages=2,
+                                                    chips_per_stage=1))
+    plan = planner.plan(tasks, n_micro=1)
+    gen = ModelGenerator(cfg)
+    gen.register_tasks(tasks)
+    eng = PEFTEngine(gen, plan, lr=1e-3)
+    with _impl("xla"):
+        sig_x = eng.step_signature(0)
+    with _impl("pallas_interpret"):
+        sig_p = eng.step_signature(0)
+    assert sig_x != sig_p
+    with _impl("xla"):
+        assert eng.step_signature(0) == sig_x  # stable within a tier

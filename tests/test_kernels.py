@@ -124,6 +124,23 @@ def test_mamba_scan_kernel(B, S, H, dk, dv, Q, key):
     np.testing.assert_allclose(np.asarray(y2), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
 
 
+def test_mamba_scan_kernel_h0(key):
+    """Initial state enters the kernel's chunk-0 scratch init (was an
+    assert before the backward landed)."""
+    B, S, H, dk, dv, Q = 2, 64, 2, 8, 16, 32
+    ks = jax.random.split(key, 6)
+    q = jax.random.normal(ks[0], (B, S, H, dk), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, dk), jnp.float32) * 0.3
+    v = jax.random.normal(ks[2], (B, S, H, dv), jnp.float32)
+    la = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+    li = jnp.log(jax.nn.softplus(jax.random.normal(ks[4], (B, S, H))) + 1e-3)
+    h0 = jax.random.normal(ks[5], (B, H, dk, dv)) * 0.5
+    y_ref, h_ref = mamba_scan_ref(q, k, v, la, li, h0=h0)
+    y, h = mamba_scan_pallas(q, k, v, la, li, chunk=Q, h0=h0, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), rtol=2e-4, atol=2e-4)
+
+
 def test_gla_reset_isolates_segments(key):
     """reset=1 at a position must erase all prior state (packed SSM rows)."""
     B, S, H, dk, dv = 1, 64, 2, 8, 8
