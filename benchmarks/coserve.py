@@ -40,6 +40,7 @@ def _run(with_traffic: bool, steps: int = 6):
     svc.step()  # compile the training path outside the measured region
     rng = np.random.RandomState(0)
     walls, n_req = [], 0
+    dec_tokens = dec_seconds = 0.0
     for i in range(steps):
         if with_traffic:
             # keep both pool rows busy: top the queue up every iteration
@@ -50,14 +51,17 @@ def _run(with_traffic: bool, steps: int = 6):
                     rng.randint(1, cfg.vocab_size, size=6), max_new_tokens=6)
                 n_req += 1
         t0 = time.perf_counter()
-        svc.step()
+        m = svc.step()
         walls.append(time.perf_counter() - t0)
-    return svc, walls
+        if i > 0:  # skip the first measured step's decode compile transient
+            dec_tokens += m.decode_tokens
+            dec_seconds += m.decode_seconds
+    return svc, walls, dec_tokens / max(dec_seconds, 1e-9)
 
 
 def run() -> list[str]:
-    svc_ref, walls_ref = _run(with_traffic=False)
-    svc, walls = _run(with_traffic=True)
+    svc_ref, walls_ref, _ = _run(with_traffic=False)
+    svc, walls, tok_per_s = _run(with_traffic=True)
     acc = svc.accounting()["coserve"]
     # drop each run's first measured step (bind/decode compile transients)
     train_ref = float(np.median(walls_ref[1:]))
@@ -68,6 +72,11 @@ def run() -> list[str]:
                 f"p99_us={p99 * 1e6:.0f};tokens={acc['decode_tokens']}"),
         csv_row("coserve/decode_token_p99", p99 * 1e6,
                 f"completed_requests={acc['completed_requests']}"),
+        # decode throughput over the warm timed segments — reported as
+        # us/token so the lower-is-better compare gate reads it correctly
+        csv_row("coserve/decode_us_per_token", 1e6 / max(tok_per_s, 1e-9),
+                f"tokens_per_s={tok_per_s:.1f};"
+                f"mid_iteration_binds={acc['mid_iteration_binds']}"),
         csv_row("coserve/step_wall_coserve", train_co * 1e6,
                 f"train_only_us={train_ref * 1e6:.0f};"
                 f"overhead={train_co / max(train_ref, 1e-9):.2f}x"),

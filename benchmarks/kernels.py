@@ -5,6 +5,7 @@ Rows:
   kernels/grouped_lora/{fwd,fwd_bwd}/<impl>/T_<n>
   kernels/packed_attention/{fwd,fwd_bwd}/<impl>/S_<n>
   kernels/mamba_scan/{fwd,fwd_bwd}/<impl>/S_<n>
+  kernels/decode_attention/fwd/<impl>/S_<n>   (fwd-only: serving path)
 
 ``xla`` always runs.  ``pallas`` runs only on a real TPU backend.
 ``pallas_interpret`` is a correctness tier, not a perf tier — it runs one
@@ -169,6 +170,34 @@ def _bench_mamba_scan(rows: list[str]) -> None:
             ))
 
 
+def _bench_decode_attention(rows: list[str]) -> None:
+    """Split-KV decode attention: one-token query against a short and a long
+    KV-cache context (the co-serving decode hot loop is memory-bound in the
+    cache sweep, so the long-context row is the one that matters)."""
+    key = jax.random.PRNGKey(4)
+    B, H, Hkv, dh = 8, 8, 4, 64
+    for S in (256, 2048):
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, 1, H, dh), jnp.float32)
+        kc = jax.random.normal(ks[1], (B, S, Hkv, dh), jnp.float32)
+        vc = jax.random.normal(ks[2], (B, S, Hkv, dh), jnp.float32)
+        cache_len = jnp.full((B,), S - 1, jnp.int32)
+        for impl in _impls():
+            kops.set_impl(impl)
+            try:
+                fwd = jax.jit(lambda q, kc, vc: kops.decode_attention(
+                    q, kc, vc, cache_len))
+                fwd(q, kc, vc).block_until_ready()
+                tf = timeit(lambda: fwd(q, kc, vc).block_until_ready(),
+                            iters=10)
+            finally:
+                kops.set_impl("xla")
+            rows.append(csv_row(
+                f"kernels/decode_attention/fwd/{impl}/S_{S}", tf * 1e6,
+                f"B={B};ctx={S - 1}",
+            ))
+
+
 def _bench_interpret_smoke(rows: list[str]) -> None:
     """One tiny fwd+bwd through the interpret tier: tracks that the
     differentiable Pallas path stays alive (timing is interpreter-bound)."""
@@ -205,6 +234,16 @@ def _bench_interpret_smoke(rows: list[str]) -> None:
         mbwd = jax.jit(jax.grad(mloss, argnums=(0, 1, 2, 3)))
         jax.block_until_ready(mbwd(q, kk, v, la))
         tm = timeit(lambda: jax.block_until_ready(mbwd(q, kk, v, la)), iters=2)
+
+        # decode_attention: fwd-only (serving path, never differentiated)
+        ks = jax.random.split(key, 3)
+        dq = jax.random.normal(ks[0], (2, 1, 4, 16), jnp.float32)
+        dk = jax.random.normal(ks[1], (2, 64, 2, 16), jnp.float32)
+        dv = jax.random.normal(ks[2], (2, 64, 2, 16), jnp.float32)
+        dlen = jnp.asarray([40, 17], jnp.int32)
+        dfwd = jax.jit(lambda q, k, v: kops.decode_attention(q, k, v, dlen))
+        dfwd(dq, dk, dv).block_until_ready()
+        td = timeit(lambda: dfwd(dq, dk, dv).block_until_ready(), iters=2)
     finally:
         kops.set_impl("xla")
     rows.append(csv_row(
@@ -215,6 +254,10 @@ def _bench_interpret_smoke(rows: list[str]) -> None:
         "kernels/mamba_scan/fwd_bwd/pallas_interpret/smoke", tm * 1e6,
         "correctness_tier=1",
     ))
+    rows.append(csv_row(
+        "kernels/decode_attention/fwd/pallas_interpret/smoke", td * 1e6,
+        "correctness_tier=1",
+    ))
 
 
 def run() -> list[str]:
@@ -222,5 +265,6 @@ def run() -> list[str]:
     _bench_grouped_lora(rows)
     _bench_packed_attention(rows)
     _bench_mamba_scan(rows)
+    _bench_decode_attention(rows)
     _bench_interpret_smoke(rows)
     return rows

@@ -65,6 +65,15 @@ class HardwareProfile:
     def wall_scale(self) -> float:
         return self.calibration.get("__wall__", 1.0)
 
+    def decode_scale(self) -> float:
+        """Decode-side analytic->wall scale (``"__decode__"``), fitted from
+        measured per-micro-step decode seconds.  Falls back to the training
+        wall scale until a decode trace has been observed — the decode hot
+        loop (one token, memory-bound, sampling feedback) has a different
+        overhead profile than a training step, so the two are calibrated
+        independently."""
+        return self.calibration.get("__decode__", self.wall_scale())
+
 
 def backbone_ops(cfg: ArchConfig, dtype_bytes: int = 2) -> List[OpCost]:
     """Per-layer BaseOp inventory with analytic FLOPs/bytes per token."""
@@ -252,7 +261,7 @@ class CostModel:
         lat += self.hw.op_latency(
             2.0 * rows * self.cfg.d_model * self.cfg.vocab_size,
             self.cfg.d_model * self.cfg.vocab_size * self.dtype_bytes)
-        return lat * self.hw.wall_scale()
+        return lat * self.hw.decode_scale()
 
     def schedule_latency(self, htask_counts: Sequence[Tuple[HTask, int]]) -> float:
         """Predicted wall time of one engine iteration: the scheduled
@@ -270,6 +279,11 @@ class CostModel:
 #: StepMetrics.wall_seconds
 CalibrationSample = Tuple[Sequence[PEFTTask], Sequence[Tuple[HTask, int]], float]
 
+#: one decode-side observation: (pool rows decoding, mean context length,
+#: measured seconds per fused decode micro-step) — from the co-serving
+#: scheduler's warm timed segment (StepMetrics.decode_seconds / micro-steps)
+DecodeSample = Tuple[int, float, float]
+
 
 def calibrate_profile(
     cfg: ArchConfig,
@@ -277,6 +291,7 @@ def calibrate_profile(
     samples: Sequence[CalibrationSample],
     base_hw: Optional[HardwareProfile] = None,
     x_half_grid: Optional[Sequence[float]] = None,
+    decode_samples: Optional[Sequence[DecodeSample]] = None,
 ) -> HardwareProfile:
     """Fit the analytic profile to measured ``StepMetrics`` wall times.
 
@@ -293,10 +308,35 @@ def calibrate_profile(
 
     The fitted profile keeps ONLY the ``__wall__`` calibration entry (per-op
     factors fitted against a different knee would be inconsistent).
+
+    ``decode_samples`` additionally fits an independent decode-side scale
+    (``"__decode__"``, least squares through the origin against the raw
+    analytic ``decode_token_latency``), so ``DecodeScheduler.token_budget``
+    predictions stop leaning on the training-step wall scale alone.
     """
+    def fit_decode(out: HardwareProfile) -> HardwareProfile:
+        if not decode_samples:
+            return out
+        # raw analytic predictions: a bare profile with the fitted knee but
+        # NO calibration entries (decode_scale would otherwise fall back to
+        # the freshly-fitted __wall__ and fold it into the fit)
+        bare = HardwareProfile(out.peak_flops, out.hbm_bw, out.ici_bw,
+                               out.util_x_half, {})
+        cm = CostModel(cfg, [], parallelism, bare)
+        p = np.asarray([cm.decode_token_latency(int(r), int(max(ctx, 1)))
+                        for r, ctx, _s in decode_samples], np.float64)
+        meas = np.asarray([s for _r, _ctx, s in decode_samples], np.float64)
+        denom = float(p @ p)
+        if denom > 0.0:
+            out.calibrate("__decode__", float(p @ meas) / denom)
+        return out
+
     base = base_hw or HardwareProfile()
     if not samples:
-        return base
+        if not decode_samples:
+            return base  # nothing to fit: identity, not a copy
+        return fit_decode(dataclasses.replace(
+            base, calibration=dict(base.calibration)))
     if x_half_grid is None:
         x_half_grid = [base.util_x_half * f for f in np.logspace(-3.0, 3.0, 13)]
     best: Optional[Tuple[float, float, float]] = None  # (loss, x_half, scale)
@@ -317,8 +357,11 @@ def calibrate_profile(
         if best is None or loss < best[0]:
             best = (loss, float(xh), scale)
     if best is None:
-        return base
+        if not decode_samples:
+            return base
+        return fit_decode(dataclasses.replace(
+            base, calibration=dict(base.calibration)))
     _, xh, scale = best
     out = HardwareProfile(base.peak_flops, base.hbm_bw, base.ici_bw, xh, {})
     out.calibrate("__wall__", scale)
-    return out
+    return fit_decode(out)

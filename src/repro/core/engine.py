@@ -57,10 +57,16 @@ class StepMetrics:
     decode_seconds: float = 0.0
     decode_p50_s: float = 0.0   # windowed per-token latency percentiles
     decode_p99_s: float = 0.0
+    decode_micro_steps: int = 0  # fused micro-steps in the timed segment
 
     @property
     def decode_token_seconds(self) -> float:
-        """Mean wall seconds per decode token of this iteration's batch."""
+        """Mean wall seconds per decode token of this iteration's batch.
+
+        This is the measured decode-side channel the calibration loop fits
+        (``cost_model.calibrate_profile(decode_samples=...)``) so
+        ``CostModel.decode_token_latency`` predictions stop leaning on the
+        training-step wall scale alone."""
         return self.decode_seconds / max(self.decode_tokens, 1)
 
 
@@ -423,22 +429,45 @@ class PEFTEngine:
                                self._decode_pool, row_slots, scales)
 
     def dispatch_decode_bind(self, row: int, tokens: np.ndarray, length: int,
-                             row_slots, scales, max_new: int) -> None:
+                             row_slots, scales, max_new: int,
+                             sampling=None) -> None:
         """Bind a request to pool row ``row``: single-row prefill + prefix
         KV fold + scatter (async).  ``tokens`` is [1, Lp] (a fixed prompt
-        bucket: one compiled bind per Lp)."""
-        from repro.launch.steps import build_decode_bind_step
+        bucket: one compiled bind per Lp).  ``sampling`` carries the
+        request's {temp, top_k, top_p, rng} [1]-vectors (greedy default)."""
+        self.dispatch_decode_bind_batched(
+            np.asarray([row], np.int32), np.asarray(tokens, np.int32),
+            np.asarray([length], np.int32), row_slots, scales,
+            np.asarray([max_new], np.int32), sampling)
 
+    def dispatch_decode_bind_batched(self, rows, tokens, lengths, row_slots,
+                                     scales, max_new, sampling=None) -> None:
+        """Bind ``R`` requests in ONE batched-prefill launch (async).
+        ``tokens`` is [R, Lp] (all requests of one prompt bucket); one
+        compiled bind serves every (R, Lp) pair.  ``sampling`` carries the
+        per-request {temp, top_k, top_p [R], rng [R, 2]} sampling state."""
+        from repro.launch.steps import build_decode_batched_bind_step, greedy_sampling
+
+        R, Lp = int(tokens.shape[0]), int(tokens.shape[1])
         fn = self._decode_fn(
-            ("bind", int(tokens.shape[1])),
-            lambda: build_decode_bind_step(
+            ("bind", R, Lp),
+            lambda: build_decode_batched_bind_step(
                 self.model, self.reg.mta, self._decode_geom[1],
                 self._decode_geom[3]))
+        if sampling is None:
+            sampling = greedy_sampling(R)
+        else:
+            sampling = {
+                "temp": jnp.asarray(sampling["temp"], jnp.float32),
+                "top_k": jnp.asarray(sampling["top_k"], jnp.int32),
+                "top_p": jnp.asarray(sampling["top_p"], jnp.float32),
+                "rng": jnp.asarray(sampling["rng"], jnp.uint32),
+            }
         self._decode_pool = fn(
             self.backbone, self.reg.adapter_params, self._decode_pool,
-            jnp.asarray(row, jnp.int32), jnp.asarray(tokens, jnp.int32),
-            jnp.asarray(length, jnp.int32), row_slots, scales,
-            jnp.asarray(max_new, jnp.int32))
+            jnp.asarray(rows, jnp.int32), jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(lengths, jnp.int32), row_slots, scales,
+            jnp.asarray(max_new, jnp.int32), sampling)
 
     def decode_accounting(self) -> Dict[str, np.ndarray]:
         """The per-iteration host sync of the decode pool: small counters

@@ -1,0 +1,136 @@
+"""Flash-decode-style split-KV decode attention (forward only).
+
+One query token per row attends over a padded per-row KV cache window
+``[cache_start, cache_len)``.  The dense path scores the whole ``Smax``
+cache per token; here stage 1 partitions the cache into ``n_splits``
+contiguous splits and computes a *partial* softmax per split — partial
+output, running max and partial denominator — in parallel across a
+``[B*Hkv, n_splits]`` grid.  Stage 2 reduces the partials with the
+online-softmax combine in plain XLA (the reduction is tiny:
+``[B, Hkv, n_splits, G]``).
+
+Every KV element is read exactly once per decoded token, and splits that
+fall entirely outside a row's window contribute ``(m=-1e30, l=0)`` which
+vanish in the combine, so masked prefix padding costs bandwidth but never
+flops downstream.  The reserved prefix region (soft-prompt rows below
+``cache_start``) is handled by the same window mask.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fit_split(smax: int, want: int) -> int:
+    """Largest divisor of smax that is <= want (want >= 1)."""
+    want = max(1, min(want, smax))
+    for cand in range(want, 0, -1):
+        if smax % cand == 0:
+            return cand
+    return smax
+
+
+def _stage1_kernel(
+    q_ref,       # [1, 1, G, dh]
+    k_ref,       # [1, split, 1, dh]
+    v_ref,       # [1, split, 1, dh]
+    len_ref,     # [1, 1] int32
+    start_ref,   # [1, 1] int32
+    o_ref,       # [1, 1, 1, G, dh] f32 partial out
+    m_ref,       # [1, 1, 1, G]     f32 running max
+    l_ref,       # [1, 1, 1, G]     f32 partial denominator
+    *,
+    split: int,
+    g: int,
+    scale: float,
+):
+    s_idx = pl.program_id(1)
+    q = q_ref[0, 0, :, :].astype(jnp.float32)      # [G, dh]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)      # [split, dh]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                      # [G, split]
+    lo = start_ref[0, 0]
+    hi = len_ref[0, 0]
+    pos = s_idx * split + jax.lax.broadcasted_iota(jnp.int32, (g, split), 1)
+    mask = (pos >= lo) & (pos < hi)
+    s = jnp.where(mask, s, NEG_INF)
+    m = s.max(axis=-1)                             # [G]
+    # re-mask after exp: a fully-masked split has m == NEG_INF and would
+    # otherwise produce exp(0) == 1 on every masked column
+    p = jnp.where(mask, jnp.exp(s - m[:, None]), 0.0)
+    l = p.sum(axis=-1)                             # [G]
+    acc = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                              # [G, dh]
+    o_ref[0, 0, 0, :, :] = acc
+    m_ref[0, 0, 0, :] = m
+    l_ref[0, 0, 0, :] = l
+
+
+def decode_attention_pallas(
+    q: jax.Array,            # [B, 1, H, dh]
+    k_cache: jax.Array,      # [B, Smax, Hkv, dh]
+    v_cache: jax.Array,      # [B, Smax, Hkv, dh]
+    cache_len: jax.Array,    # [] or [B] int32
+    cache_start: Optional[jax.Array] = None,  # [] or [B] int32
+    *,
+    split_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    B, _, H, dh = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = 1.0 / np.sqrt(dh)
+
+    split = _fit_split(Smax, split_k)
+    n_splits = Smax // split
+
+    q5 = q.reshape(B, Hkv, G, dh)
+    len_b = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32).reshape(-1), (B,))
+    if cache_start is None:
+        start_b = jnp.zeros((B,), jnp.int32)
+    else:
+        start_b = jnp.broadcast_to(jnp.asarray(cache_start, jnp.int32).reshape(-1), (B,))
+    len2 = len_b[:, None]      # [B, 1]
+    start2 = start_b[:, None]
+
+    kernel = functools.partial(_stage1_kernel, split=split, g=G, scale=scale)
+    o_part, m_part, l_part = pl.pallas_call(
+        kernel,
+        grid=(B * Hkv, n_splits),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, dh), lambda bh, s: (bh // Hkv, bh % Hkv, 0, 0)),
+            pl.BlockSpec((1, split, 1, dh), lambda bh, s: (bh // Hkv, s, bh % Hkv, 0)),
+            pl.BlockSpec((1, split, 1, dh), lambda bh, s: (bh // Hkv, s, bh % Hkv, 0)),
+            pl.BlockSpec((1, 1), lambda bh, s: (bh // Hkv, 0)),
+            pl.BlockSpec((1, 1), lambda bh, s: (bh // Hkv, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, G, dh), lambda bh, s: (bh // Hkv, bh % Hkv, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, G), lambda bh, s: (bh // Hkv, bh % Hkv, s, 0)),
+            pl.BlockSpec((1, 1, 1, G), lambda bh, s: (bh // Hkv, bh % Hkv, s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, n_splits, G, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, n_splits, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, n_splits, G), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q5, k_cache, v_cache, len2, start2)
+
+    # stage 2: online-softmax combine across splits (tiny reduction)
+    m_star = m_part.max(axis=2)                          # [B, Hkv, G]
+    alpha = jnp.exp(m_part - m_star[:, :, None, :])      # [B, Hkv, n_splits, G]
+    l_star = (l_part * alpha).sum(axis=2)                # [B, Hkv, G]
+    out = (o_part * alpha[..., None]).sum(axis=2)        # [B, Hkv, G, dh]
+    out = out / jnp.maximum(l_star, 1e-20)[..., None]
+    return out.reshape(B, 1, H, dh).astype(q.dtype)

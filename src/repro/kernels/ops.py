@@ -17,6 +17,14 @@ Training support matrix (forward / backward under ``jax.grad``):
   grouped_lora       fwd+bwd    fwd+bwd (vjp)    fwd+bwd (vjp)
   packed_attention   fwd+bwd    fwd+bwd (vjp)    fwd+bwd (vjp)
   mamba_scan         fwd+bwd    fwd+bwd (vjp)    fwd+bwd (vjp)
+  decode_attention   fwd        fwd              fwd
+
+``decode_attention`` is the serving hot loop (one query token against a
+padded per-row KV cache window); it is never differentiated, so all three
+tiers are forward-only.  The Pallas tiers run the flash-decode split-KV
+kernel (``kernels/decode_attention.py``): stage 1 computes partial
+softmax per contiguous KV split on a ``[B*Hkv, n_splits]`` grid, stage 2
+combines with the online-softmax reduction.
 
 ``xla`` paths differentiate by ordinary autodiff of the jnp formulation.
 Every Pallas path carries a ``jax.custom_vjp`` backward kernel (see the
@@ -194,6 +202,38 @@ def packed_attention(
         q, k_full, v_full, segment_ids=segment_ids, positions=positions,
         causal=causal, k_segment_ids=k_segment_ids, k_positions=k_positions,
         block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# split-KV decode attention — co-serving decode hot loop (forward only)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: jax.Array,            # [B, 1, H, dh]
+    k_cache: jax.Array,      # [B, Smax, Hkv, dh]
+    v_cache: jax.Array,      # [B, Smax, Hkv, dh]
+    cache_len: jax.Array,    # [] or [B] int32 — exclusive window end per row
+    cache_start: Optional[jax.Array] = None,  # [] or [B] int32 — window start
+    *,
+    split_k: int = 256,
+) -> jax.Array:
+    """One-token decode attention over a padded per-row KV cache window
+    ``[cache_start, cache_len)``.  The reserved soft-prompt prefix region
+    sits at the bottom of the cache: rows that own folded prefix k/v have
+    their ``cache_start`` lowered into it, all other rows start above it —
+    the same window mask covers both.  Empty windows yield zeros (the
+    denominator is clamped, never divided through).  The Pallas tiers read
+    each KV element once via the split-KV kernel."""
+    impl = _IMPL.name
+    if impl == "xla":
+        return _ref.decode_attention_ref(q, k_cache, v_cache, cache_len, cache_start)
+    from repro.kernels.decode_attention import decode_attention_pallas
+
+    return decode_attention_pallas(
+        q, k_cache, v_cache, cache_len, cache_start,
+        split_k=split_k, interpret=(impl == "pallas_interpret"),
     )
 
 

@@ -57,6 +57,37 @@ def packed_attention_ref(
     return o.reshape(B, S, H, dh).astype(q.dtype)
 
 
+def decode_attention_ref(
+    q: jax.Array,            # [B, 1, H, dh] — one new token per row
+    k_cache: jax.Array,      # [B, Smax, Hkv, dh]
+    v_cache: jax.Array,      # [B, Smax, Hkv, dh]
+    cache_len: jax.Array,    # [] or [B] int32 — exclusive end of the valid window
+    cache_start: Optional[jax.Array] = None,  # [] or [B] int32 — window start
+) -> jax.Array:
+    """Dense decode attention over a padded KV cache with per-row windows.
+
+    Each row attends to cache positions ``[cache_start, cache_len)``; an
+    empty window yields zeros (denominator clamped like the flash path).
+    """
+    B, _, H, dh = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = 1.0 / np.sqrt(dh)
+    q5 = q.reshape(B, Hkv, G, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", q5, k_cache, preferred_element_type=jnp.float32)
+    s = s * scale
+    pos = jnp.arange(Smax, dtype=jnp.int32)
+    valid = pos[None, :] < jnp.reshape(cache_len, (-1, 1))
+    if cache_start is not None:
+        valid &= pos[None, :] >= jnp.reshape(cache_start, (-1, 1))
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.where(valid[:, None, None, :], jnp.exp(s - m), 0.0)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    out = out / jnp.maximum(p.sum(axis=-1), 1e-20)[..., None]
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
 def mamba_scan_ref(
     q: jax.Array,         # [B, S, H, dk]  (C in mamba terms)
     k: jax.Array,         # [B, S, H, dk]  (B in mamba terms)

@@ -318,8 +318,10 @@ def build_serve_step(model: Model):
 # unbinding requests — and tenant churn that renumbers tasks — never
 # retraces; only adapter-stack shape changes do (the same invalidation rule
 # as the training step cache).  The whole generation loop stays on device:
-# greedy sampling feeds back internally, tokens accumulate in the ``out``
-# buffer, and the host syncs accounting once per iteration.
+# sampling (temperature / top-k / top-p, per-row PRNG keys — all traced
+# pool state, so per-request params never retrace) feeds back internally,
+# tokens accumulate in the ``out`` buffer, and the host syncs accounting
+# once per iteration.  ``temp <= 0`` rows reduce EXACTLY to greedy argmax.
 
 
 def decode_prefix_reserve(mta: MultiTaskAdapters) -> int:
@@ -334,7 +336,7 @@ def decode_prefix_reserve(mta: MultiTaskAdapters) -> int:
 
 def init_decode_pool(model: Model, rows: int, max_len: int, max_new_cap: int,
                      prefix_reserve: int = 0, cache_dtype=jnp.bfloat16):
-    """Allocate the fused decode pool (all rows idle)."""
+    """Allocate the fused decode pool (all rows idle, greedy sampling)."""
     state = model.init_decode_state(None, rows, max_len,
                                     cache_dtype=cache_dtype,
                                     prefix_reserve=prefix_reserve,
@@ -349,18 +351,67 @@ def init_decode_pool(model: Model, rows: int, max_len: int, max_new_cap: int,
         "n_out": z(),                               # generated count per row
         "active": z(),                              # 1 while generating
         "max_new": z(),                             # per-row generation target
+        # per-row sampling state (traced: params change without retracing)
+        "temp": jnp.zeros((rows,), jnp.float32),    # 0 => greedy
+        "top_k": jnp.zeros((rows,), jnp.int32),     # 0 => off
+        "top_p": jnp.ones((rows,), jnp.float32),    # 1 => off
+        "rng": jnp.zeros((rows, 2), jnp.uint32),    # per-row PRNG key
     }
+
+
+def greedy_sampling(rows: int) -> Dict[str, jax.Array]:
+    """Per-row sampling params that reduce exactly to argmax."""
+    return {
+        "temp": jnp.zeros((rows,), jnp.float32),
+        "top_k": jnp.zeros((rows,), jnp.int32),
+        "top_p": jnp.ones((rows,), jnp.float32),
+        "rng": jnp.zeros((rows, 2), jnp.uint32),
+    }
+
+
+def sample_tokens(logits: jax.Array, temp: jax.Array, top_k: jax.Array,
+                  top_p: jax.Array, rng: jax.Array):
+    """On-device per-row sampling over ``[B, V]`` logits.
+
+    ``temp[b] <= 0`` makes row ``b`` EXACTLY greedy (argmax — no RNG draw
+    enters the token).  ``top_k <= 0`` and ``top_p >= 1`` disable those
+    filters.  ``rng`` is ``[B, 2]`` uint32 per-row PRNG key data; returns
+    ``(tokens [B] int32, advanced rng [B, 2])`` so the caller threads the
+    key through the pool state.
+    """
+    B, V = logits.shape
+    lg = logits.astype(jnp.float32)
+    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    scaled = lg / jnp.maximum(temp, 1e-6)[:, None]
+    # top-k: keep logits >= the k-th largest of the row
+    srt = jnp.sort(scaled, axis=-1)[:, ::-1]
+    kth = jnp.take_along_axis(srt, jnp.clip(top_k - 1, 0, V - 1)[:, None], axis=-1)
+    keep = (top_k[:, None] <= 0) | (scaled >= kth)
+    # top-p (nucleus): smallest prefix of descending probs reaching top_p;
+    # ties at the cutoff probability are all kept
+    probs = jax.nn.softmax(jnp.where(keep, scaled, -1e30), axis=-1)
+    ps = jnp.sort(probs, axis=-1)[:, ::-1]
+    cum = jnp.cumsum(ps, axis=-1)
+    in_nucleus = (cum - ps) < top_p[:, None]
+    cutoff = jnp.min(jnp.where(in_nucleus, ps, jnp.inf), axis=-1)
+    keep &= (top_p[:, None] >= 1.0) | (probs >= cutoff[:, None])
+    filtered = jnp.where(keep, scaled, -1e30)
+    splits = jax.vmap(lambda kk: jax.random.split(kk, 2))(rng)  # [B, 2, 2]
+    sampled = jax.vmap(jax.random.categorical)(splits[:, 1], filtered)
+    nxt = jnp.where(temp > 0, sampled.astype(jnp.int32), greedy)
+    return nxt, splits[:, 0]
 
 
 def build_decode_micro_step(model: Model, mta: MultiTaskAdapters,
                             prefix_reserve: int = 0):
     """One fused generation token for every active pool row (jitted).
 
-    Greedy decode: feeds each row's ``cur`` token, records the argmax
-    continuation, advances only active rows.  Inactive rows still compute
-    (static shapes) but their decode state is frozen — the cache rows they
-    touch stay outside the valid window, so a later rebind sees a clean
-    slate.
+    Feeds each row's ``cur`` token, samples the continuation with the row's
+    traced sampling params (``temp``/``top_k``/``top_p``/``rng`` — greedy
+    when ``temp <= 0``), advances only active rows.  Inactive rows still
+    compute (static shapes) but their decode state is frozen — the cache
+    rows they touch stay outside the valid window, so a later rebind sees a
+    clean slate.
     """
 
     def decode_micro(backbone, adapters, pool, row_slots, scales):
@@ -370,7 +421,8 @@ def build_decode_micro_step(model: Model, mta: MultiTaskAdapters,
         logits, new_st = model.decode_step(
             backbone, st, pool["cur"][:, None], adapters=adapters,
             ctx_factory=ctxf, prefix_reserve=prefix_reserve)
-        nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+        nxt, rng2 = sample_tokens(logits[:, 0, :], pool["temp"],
+                                  pool["top_k"], pool["top_p"], pool["rng"])
         B = pool["cur"].shape[0]
         rows = jnp.arange(B)
         widx = jnp.minimum(pool["n_out"], pool["out"].shape[1] - 1)
@@ -388,19 +440,27 @@ def build_decode_micro_step(model: Model, mta: MultiTaskAdapters,
             "n_out": n_out,
             "active": (active & (n_out < pool["max_new"])).astype(jnp.int32),
             "max_new": pool["max_new"],
+            "temp": pool["temp"],
+            "top_k": pool["top_k"],
+            "top_p": pool["top_p"],
+            # freeze inactive rows' keys too: replaying a bound request is
+            # deterministic regardless of how long it sat in the pool
+            "rng": jnp.where(active[:, None], rng2, pool["rng"]),
         }
 
     return jax.jit(decode_micro, donate_argnums=(2,))
 
 
-def build_decode_bind_step(model: Model, mta: MultiTaskAdapters,
-                           max_len: int, prefix_reserve: int = 0):
-    """Bind one request to a pool row (jitted): single-row chunked PREFILL
-    into a fresh row cache, soft-prompt k/v rows folded into the reserved
-    prefix region (right-aligned, per-row window ``lo``), then the whole
-    row scattered into the pool.  ``row``/slot routing are traced, so one
-    compiled bind serves every (row, tenant) pair of a prompt-length
-    bucket.
+def build_decode_batched_bind_step(model: Model, mta: MultiTaskAdapters,
+                                   max_len: int, prefix_reserve: int = 0):
+    """Bind ``R`` requests to pool rows in ONE launch (jitted): batched
+    multi-row chunked PREFILL (``tokens [R, Lp]`` padded, per-row true
+    ``lengths``) into a fresh ``R``-row cache, soft-prompt k/v rows folded
+    into each row's reserved prefix region (right-aligned, per-row window
+    ``lo``), first tokens sampled with each request's params, then all
+    rows scattered into the pool.  ``rows``/slot routing/sampling are
+    traced, so one compiled bind serves every (rows, tenants) combination
+    of a ``(R, prompt-bucket)`` pair.
     """
     cfg = model.cfg
     from repro.peft.methods import get_method
@@ -409,12 +469,14 @@ def build_decode_bind_step(model: Model, mta: MultiTaskAdapters,
                          if get_method(k).uses_attention_prefix)
     hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim()
 
-    def bind(backbone, adapters, pool, row, tokens, length, row_slots,
-             scales, max_new):
-        # tokens [1, Lp] (padded), length [] true prompt len, row [] int32,
-        # row_slots {kind: [1]}, max_new [] int32
+    def bind_n(backbone, adapters, pool, rows, tokens, lengths, row_slots,
+               scales, max_new, sampling):
+        # tokens [R, Lp] (padded), lengths [R] true prompt lens, rows [R],
+        # row_slots {kind: [R]}, max_new [R], sampling {temp/top_k/top_p
+        # [R], rng [R, 2]}
+        R = tokens.shape[0]
         ctxf = mta.ctx_factory_from_slots(row_slots, scales)
-        st1 = model.init_decode_state(None, 1, max_len,
+        st1 = model.init_decode_state(None, R, max_len,
                                       cache_dtype=pool["state"]["kv"]["k"].dtype,
                                       prefix_reserve=prefix_reserve,
                                       per_row=True)
@@ -422,52 +484,82 @@ def build_decode_bind_step(model: Model, mta: MultiTaskAdapters,
         if cfg.mrope:
             S = tokens.shape[1]
             batch["mrope_positions"] = jnp.broadcast_to(
-                jnp.arange(S, dtype=jnp.int32), (3, 1, S))
+                jnp.arange(S, dtype=jnp.int32), (3, R, S))
         logits, st1 = model.prefill(backbone, batch, st1, adapters=adapters,
                                     ctx_factory=ctxf,
                                     prefix_reserve=prefix_reserve,
-                                    lengths=jnp.reshape(length, (1,)))
+                                    lengths=lengths)
         # fold soft-prompt rows into the reserved prefix region + window
         k1, v1 = st1["kv"]["k"], st1["kv"]["v"]
-        lo_val = jnp.asarray(prefix_reserve, jnp.int32)
+        lo_val = jnp.full((R,), prefix_reserve, jnp.int32)
         for kind in prefix_kinds if prefix_reserve else ():
             kspec = adapters.get(kind, {}).get("attn_prefix")
             if kspec is None:
                 continue
-            slot = row_slots[kind][0]
+            slot = row_slots[kind]                     # [R]
             has = slot >= 0
-            pk = kspec["pk"][:, jnp.maximum(slot, 0)]  # [L, P, kv_dim]
+            pk = kspec["pk"][:, jnp.maximum(slot, 0)]  # [L, R, P, kv_dim]
             pv = kspec["pv"][:, jnp.maximum(slot, 0)]
-            P = pk.shape[1]
-            pk = pk.reshape(pk.shape[0], P, hkv, dh).astype(k1.dtype)
-            pv = pv.reshape(pv.shape[0], P, hkv, dh).astype(v1.dtype)
+            P = pk.shape[2]
+            pk = pk.reshape(pk.shape[0], R, P, hkv, dh).astype(k1.dtype)
+            pv = pv.reshape(pv.shape[0], R, P, hkv, dh).astype(v1.dtype)
             sl = slice(prefix_reserve - P, prefix_reserve)
-            k1 = k1.at[:, 0, sl].set(jnp.where(has, pk, k1[:, 0, sl]))
-            v1 = v1.at[:, 0, sl].set(jnp.where(has, pv, v1[:, 0, sl]))
+            gate = has[None, :, None, None, None]
+            k1 = k1.at[:, :, sl].set(jnp.where(gate, pk, k1[:, :, sl]))
+            v1 = v1.at[:, :, sl].set(jnp.where(gate, pv, v1[:, :, sl]))
             lo_val = jnp.where(has, lo_val - P, lo_val)
-        # first generated token: argmax at the last TRUE prompt position
+        # first generated token: sampled at the last TRUE prompt position
         last = jnp.take_along_axis(
             logits.astype(jnp.float32),
-            jnp.reshape(jnp.maximum(length - 1, 0), (1, 1, 1)), axis=1)
-        first = jnp.argmax(last[0, 0], axis=-1).astype(jnp.int32)
-        # scatter the bound row into the pool
+            jnp.reshape(jnp.maximum(lengths - 1, 0), (R, 1, 1)), axis=1)
+        first, rng1 = sample_tokens(last[:, 0], sampling["temp"],
+                                    sampling["top_k"], sampling["top_p"],
+                                    sampling["rng"])
+        # scatter the bound rows into the pool
         ps = pool["state"]
         new_kv = {
-            "k": ps["kv"]["k"].at[:, row].set(k1[:, 0]),
-            "v": ps["kv"]["v"].at[:, row].set(v1[:, 0]),
+            "k": ps["kv"]["k"].at[:, rows].set(k1),
+            "v": ps["kv"]["v"].at[:, rows].set(v1),
         }
         new_state = dict(ps)
         new_state["kv"] = new_kv
-        new_state["pos"] = ps["pos"].at[row].set(st1["pos"][0])
-        new_state["lo"] = ps["lo"].at[row].set(lo_val)
+        new_state["pos"] = ps["pos"].at[rows].set(st1["pos"])
+        new_state["lo"] = ps["lo"].at[rows].set(lo_val)
         return {
             "state": new_state,
-            "cur": pool["cur"].at[row].set(first),
-            "out": pool["out"].at[row].set(0).at[row, 0].set(first),
-            "n_out": pool["n_out"].at[row].set(1),
-            "active": pool["active"].at[row].set(
+            "cur": pool["cur"].at[rows].set(first),
+            "out": pool["out"].at[rows].set(0).at[rows, 0].set(first),
+            "n_out": pool["n_out"].at[rows].set(1),
+            "active": pool["active"].at[rows].set(
                 (max_new > 1).astype(jnp.int32)),
-            "max_new": pool["max_new"].at[row].set(max_new),
+            "max_new": pool["max_new"].at[rows].set(max_new),
+            "temp": pool["temp"].at[rows].set(sampling["temp"]),
+            "top_k": pool["top_k"].at[rows].set(sampling["top_k"]),
+            "top_p": pool["top_p"].at[rows].set(sampling["top_p"]),
+            "rng": pool["rng"].at[rows].set(rng1),
         }
 
-    return jax.jit(bind, donate_argnums=(2,))
+    return jax.jit(bind_n, donate_argnums=(2,))
+
+
+def build_decode_bind_step(model: Model, mta: MultiTaskAdapters,
+                           max_len: int, prefix_reserve: int = 0):
+    """Single-request bind: the ``R == 1`` case of
+    :func:`build_decode_batched_bind_step` with the legacy scalar
+    signature (``row []``, ``tokens [1, Lp]``, ``length []``).  Sampling
+    params default to greedy when not given.
+    """
+    bind_n = build_decode_batched_bind_step(model, mta, max_len, prefix_reserve)
+
+    def bind(backbone, adapters, pool, row, tokens, length, row_slots,
+             scales, max_new, sampling=None):
+        if sampling is None:
+            sampling = greedy_sampling(1)
+        return bind_n(
+            backbone, adapters, pool,
+            jnp.reshape(jnp.asarray(row, jnp.int32), (1,)), tokens,
+            jnp.reshape(jnp.asarray(length, jnp.int32), (1,)), row_slots,
+            scales, jnp.reshape(jnp.asarray(max_new, jnp.int32), (1,)),
+            sampling)
+
+    return bind

@@ -272,24 +272,16 @@ def decode_attention(
     Per-row bounds support the fused multi-task decode pool: each batch row
     is an independent request at its own context length, and rows whose task
     has no folded prefix mask the cache's reserved prefix region out via
-    ``cache_start`` (see :func:`init_kv_cache`)."""
-    B, _, H, dh = q.shape
-    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
-    G = H // Hkv
-    scale = 1.0 / np.sqrt(dh)
-    q5 = q.reshape(B, Hkv, G, dh)
-    s = jnp.einsum("bkgd,bskd->bkgs", q5, k_cache, preferred_element_type=jnp.float32)
-    s = s * scale  # [B, Hkv, G, Smax]
-    pos = jnp.arange(Smax, dtype=jnp.int32)
-    valid = pos[None, :] < jnp.reshape(cache_len, (-1, 1))  # [B or 1, Smax]
-    if cache_start is not None:
-        valid &= pos[None, :] >= jnp.reshape(cache_start, (-1, 1))
-    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
-    m = s.max(axis=-1, keepdims=True)
-    p = jnp.exp(s - m)
-    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
-    out = out / p.sum(axis=-1)[..., None]
-    return out.reshape(B, 1, H, dh).astype(q.dtype)
+    ``cache_start`` (see :func:`init_kv_cache`).  Empty windows
+    (``cache_len == cache_start``) yield zeros, not NaN: the softmax
+    denominator is clamped like the flash paths.
+
+    Dispatches through :mod:`repro.kernels.ops` like every other hot op —
+    the xla tier is the dense reference, the Pallas tiers run the
+    flash-decode split-KV kernel that reads each KV element once."""
+    from repro.kernels import ops as kops
+
+    return kops.decode_attention(q, k_cache, v_cache, cache_len, cache_start)
 
 
 # ---------------------------------------------------------------------------

@@ -16,12 +16,22 @@ learned k/v rows are folded into the row's KV cache at bind/prefill time).
 Row->task routing enters the compiled steps as traced slot vectors, so
 binding, unbinding and tenant churn never retrace.
 
-Dispatch discipline: request BINDS (single-row chunked prefill) are
+Dispatch discipline: request BINDS (batched multi-row chunked prefill) are
 dispatched through the engine's ``interleave`` hook — their device work
 overlaps the training iteration's micro-step queue — and the iteration's
 decode micro-batch runs as one timed segment against the iteration's single
 sync point, which is what makes the recorded p50/p99 honest on a
 single-stream backend.
+
+Continuous batching: the interleave hook does more than drain the binds
+staged at iteration start — between training micro-steps it also binds
+NEWLY queued requests onto free pool rows (highest-priority SLO class
+first) and keeps bound rows generating with resumable decode micro-steps,
+so a request submitted mid-iteration begins decoding before the
+iteration's final micro-step instead of waiting for the next ``prepare``.
+Tokens generated mid-iteration are separated from the timed end-of-
+iteration segment by one extra small accounting sync, keeping the recorded
+per-token latency honest.
 """
 from __future__ import annotations
 
@@ -64,6 +74,15 @@ class InferenceRequest:
     finish_clock: int = -1
     row: int = -1
     tokens_out: Optional[np.ndarray] = None
+    # per-request sampling params (0-temperature = greedy; 0/1.0 = filters
+    # off) — traced pool state on device, so they never retrace
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    # SLO class: lower = higher priority; pool rows are granted to the
+    # lowest class first (FIFO by submit order within a class)
+    slo_class: int = 0
 
     @property
     def queue_wait(self) -> int:
@@ -80,6 +99,17 @@ class InferenceRequest:
             "generated": 0 if self.tokens_out is None else int(len(self.tokens_out)),
             "makespan": (self.finish_clock - self.submit_clock
                          if self.finish_clock >= 0 else -1),
+            "slo_class": self.slo_class,
+        }
+
+    def sampling_arrays(self) -> Dict[str, np.ndarray]:
+        """[1]-row sampling state for the bind launch (rng is the legacy
+        PRNGKey layout of ``seed``, so fixed seeds replay exactly)."""
+        return {
+            "temp": np.asarray([self.temperature], np.float32),
+            "top_k": np.asarray([self.top_k], np.int32),
+            "top_p": np.asarray([self.top_p], np.float32),
+            "rng": np.asarray([[0, self.seed]], np.uint32),
         }
 
 
@@ -99,6 +129,8 @@ class DecodeScheduler:
         #: service excludes such iterations from the calibration trace
         self.last_bind_count = 0
         self._row_ctx = None          # (row_slots, scales) for this iteration
+        self._task_index: Optional[Dict[str, int]] = None  # staged by prepare
+        self._clock = 0
         self.token_seconds: deque = deque(maxlen=self.config.latency_window)
         # per fused MICRO-STEP wall samples — the budget unit (one micro-step
         # yields one token on EVERY active row, so per-token and per-step
@@ -106,6 +138,16 @@ class DecodeScheduler:
         self.step_seconds: deque = deque(maxlen=self.config.latency_window)
         self._cold_token_seconds: deque = deque(maxlen=8)  # compile-polluted
         self.total_tokens = 0
+        # continuous batching: binds dispatched mid-iteration (cumulative)
+        # and resumable decode micro-steps interleaved into the current /
+        # last iteration's training dispatch queue
+        self.mid_iteration_binds = 0
+        self._mid_micros = 0
+        self.last_mid_micros = 0
+        # decode calibration channel: the last warm timed segment's
+        # per-micro-step seconds and decoding-row count (DecodeSample feed)
+        self.last_step_seconds: Optional[float] = None
+        self.last_step_rows = 0
 
     # ------------------------------------------------------------------
     # request lifecycle
@@ -178,55 +220,142 @@ class DecodeScheduler:
             self._prev_n_out[:] = 0
             self._pool_gen = pool_key
         # bind queued requests onto free rows (dispatch via interleave hook)
+        self._task_index = dict(task_index)
+        self._clock = clock
+        self._mid_micros = 0
         self._pending_binds = []
         for r in range(c.decode_slots):
             if self.rows[r] is not None:
                 continue
-            # first queued request whose tenant is resident (a non-resident
-            # head must not block ready traffic behind it)
-            rid = next((q for q in self.queue
-                        if self.requests[q].task_id in task_index), None)
+            rid = self._next_candidate()
             if rid is None:
                 break
-            self.queue.remove(rid)
-            req = self.requests[rid]
-            self.rows[r] = rid
-            req.state, req.row, req.bind_clock = DECODING, r, clock
-            self._pending_binds.append((r, req))
+            self._claim(rid, r)
+            self._pending_binds.append((r, self.requests[rid]))
         self.last_bind_count = len(self._pending_binds)
+        self._refresh_row_ctx(engine)
+
+    def _next_candidate(self) -> Optional[str]:
+        """Highest-priority queued request whose tenant is resident: lowest
+        SLO class first, FIFO by submit order within a class.  Non-resident
+        (or lower-priority) heads never block ready traffic behind them."""
+        best = None
+        for i, q in enumerate(self.queue):
+            req = self.requests[q]
+            if req.task_id not in (self._task_index or {}):
+                continue
+            key = (req.slo_class, req.submit_clock, i)
+            if best is None or key < best[0]:
+                best = (key, q)
+        return None if best is None else best[1]
+
+    def _claim(self, rid: str, row: int) -> None:
+        self.queue.remove(rid)
+        req = self.requests[rid]
+        self.rows[row] = rid
+        req.state, req.row, req.bind_clock = DECODING, row, self._clock
+
+    def _refresh_row_ctx(self, engine) -> None:
         row_task = [
-            task_index.get(self.requests[rid].task_id, -1) if rid else -1
+            (self._task_index or {}).get(self.requests[rid].task_id, -1)
+            if rid else -1
             for rid in self.rows
         ]
         self._row_ctx = engine.decode_row_ctx(row_task)
 
     def interleave_fn(self, engine):
         """Callable for ``PEFTEngine.run_iteration(interleave=...)``: each
-        invocation dispatches one pending BIND (single-row prefill) so its
-        device work rides the training iteration's dispatch queue."""
+        invocation dispatches one unit of decode work into the training
+        iteration's queue — a pending BIND (prefill), a CONTINUOUS-BATCHING
+        bind of a request queued after ``prepare`` onto a free row, or one
+        resumable decode micro-step for the bound rows."""
         def cb() -> None:
             if self._pending_binds:
-                self._dispatch_bind(engine, *self._pending_binds.pop(0))
+                row, req = self._pending_binds.pop(0)
+                self._dispatch_bind_group(
+                    engine, self._bucket(len(req.prompt)), [(row, req)])
+                return
+            if self._bind_free_rows(engine):
+                return
+            if (any(r is not None for r in self.rows)
+                    and engine.decode_micro_ready()
+                    and self._mid_micros < self.config.max_tokens_per_iter):
+                row_slots, scales = self._row_ctx
+                engine.dispatch_decode_micro(row_slots, scales)
+                self._mid_micros += 1
         return cb
 
-    def flush_binds(self, engine) -> None:
-        while self._pending_binds:
-            self._dispatch_bind(engine, *self._pending_binds.pop(0))
+    def _bind_free_rows(self, engine) -> bool:
+        """Continuous batching: bind the highest-priority queued resident
+        request onto a free pool row MID-iteration (between training
+        micro-steps) instead of waiting for the next ``prepare``.  Returns
+        True when a bind was dispatched."""
+        if self._task_index is None or self._row_ctx is None:
+            return False
+        free = next((r for r, rid in enumerate(self.rows) if rid is None),
+                    None)
+        if free is None:
+            return False
+        rid = self._next_candidate()
+        if rid is None:
+            return False
+        self._claim(rid, free)
+        req = self.requests[rid]
+        # routing must reflect the new binding before its bind / any
+        # subsequent micro-step is dispatched
+        self._refresh_row_ctx(engine)
+        self._dispatch_bind_group(
+            engine, self._bucket(len(req.prompt)), [(free, req)])
+        self.mid_iteration_binds += 1
+        # bind compiles/prefill ride the training queue: exclude this
+        # iteration from the training-side calibration trace too
+        self.last_bind_count += 1
+        return True
 
-    def _dispatch_bind(self, engine, row: int, req: InferenceRequest) -> None:
-        c = self.config
-        Lp = len(req.prompt)
+    def flush_binds(self, engine) -> None:
+        # batched-bind plumbing: remaining same-bucket binds go out in ONE
+        # multi-row prefill launch each
+        groups: Dict[int, List[tuple]] = {}
+        for row, req in self._pending_binds:
+            groups.setdefault(self._bucket(len(req.prompt)), []).append(
+                (row, req))
+        self._pending_binds = []
+        for bucket in sorted(groups):
+            self._dispatch_bind_group(engine, bucket, groups[bucket])
+
+    def _bucket(self, Lp: int) -> int:
         # round up to the compile bucket, but never past the cache length —
         # submit() guarantees Lp <= decode_max_len, so the clamp always fits
-        bucket = min(-(-Lp // c.prompt_bucket) * c.prompt_bucket,
-                     c.decode_max_len)
-        tokens = np.zeros((1, bucket), np.int32)
-        tokens[0, :Lp] = req.prompt
+        c = self.config
+        return min(-(-Lp // c.prompt_bucket) * c.prompt_bucket,
+                   c.decode_max_len)
+
+    def _dispatch_bind_group(self, engine, bucket: int, items: List[tuple]) -> None:
+        """Dispatch ``len(items)`` same-bucket binds as one batched
+        multi-row prefill launch with per-request sampling params."""
+        R = len(items)
+        tokens = np.zeros((R, bucket), np.int32)
+        rows = np.zeros((R,), np.int32)
+        lengths = np.zeros((R,), np.int32)
+        max_new = np.zeros((R,), np.int32)
+        sampling = {
+            "temp": np.zeros((R,), np.float32),
+            "top_k": np.zeros((R,), np.int32),
+            "top_p": np.ones((R,), np.float32),
+            "rng": np.zeros((R, 2), np.uint32),
+        }
+        for i, (row, req) in enumerate(items):
+            Lp = len(req.prompt)
+            tokens[i, :Lp] = req.prompt
+            rows[i], lengths[i], max_new[i] = row, Lp, req.max_new_tokens
+            s1 = req.sampling_arrays()
+            for k in sampling:
+                sampling[k][i] = s1[k][0]
         row_slots, scales = self._row_ctx
-        s1 = {k: v[row:row + 1] for k, v in row_slots.items()}
-        engine.dispatch_decode_bind(row, tokens, Lp, s1, scales,
-                                    req.max_new_tokens)
-        self._prev_n_out[row] = 0
+        s = {k: v[rows] for k, v in row_slots.items()}
+        engine.dispatch_decode_bind_batched(rows, tokens, lengths, s, scales,
+                                            max_new, sampling)
+        self._prev_n_out[rows] = 0
 
     # ------------------------------------------------------------------
     # SLO token packing
@@ -263,9 +392,37 @@ class DecodeScheduler:
         accounting counters ONCE, record per-token latency samples and
         retire finished requests.  Returns ``(tokens_decoded, wall_seconds,
         per_task_tokens)`` — the last bills each tenant for the decode
-        tokens its requests consumed this iteration."""
+        tokens its requests consumed this iteration.
+
+        Tokens generated by MID-iteration micro-steps (continuous batching)
+        are split off by one extra small sync before the timed segment:
+        they are counted and billed, but their wall time is hidden inside
+        the training dispatch queue, so they must not enter the per-token
+        latency window."""
         if self._row_ctx is None:
             return 0, 0.0, {}
+
+        per_task: Dict[str, int] = {}
+
+        def attribute(delta: np.ndarray) -> int:
+            n = 0
+            for r, rid in enumerate(self.rows):
+                if rid is None:
+                    continue
+                tid = self.requests[rid].task_id
+                n += int(delta[r])
+                per_task[tid] = per_task.get(tid, 0) + int(delta[r])
+            return n
+
+        mid_decoded = 0
+        self.last_mid_micros = self._mid_micros
+        if self._mid_micros > 0:
+            pre = engine.decode_accounting()
+            n_pre = np.asarray(pre["n_out"], np.int64)
+            mid_decoded = attribute(np.maximum(n_pre - self._prev_n_out, 0))
+            self._prev_n_out = n_pre.copy()
+            self._mid_micros = 0
+        seg_rows = sum(1 for rid in self.rows if rid is not None)
         row_slots, scales = self._row_ctx
         warm = engine.decode_micro_ready()  # cold first call = jit compile
         t0 = time.perf_counter()
@@ -276,26 +433,25 @@ class DecodeScheduler:
         n_out = np.asarray(acct["n_out"], np.int64)
         delta = np.maximum(n_out - self._prev_n_out, 0)
         self._prev_n_out = n_out.copy()
-        decoded = 0
-        per_task: Dict[str, int] = {}
-        for r, rid in enumerate(self.rows):
-            if rid is None:
-                continue
-            tid = self.requests[rid].task_id
-            decoded += int(delta[r])
-            per_task[tid] = per_task.get(tid, 0) + int(delta[r])
+        decoded = attribute(delta)
+        self.last_step_seconds = None
+        self.last_step_rows = 0
         if decoded > 0:
-            self.total_tokens += decoded
             per_tok = wall / decoded
             if warm:
                 self.token_seconds.extend([per_tok] * min(decoded, 64))
                 if k > 0:
                     self.step_seconds.append(wall / k)
+                    # decode calibration channel: one DecodeSample per warm
+                    # timed segment
+                    self.last_step_seconds = wall / k
+                    self.last_step_rows = seg_rows
             else:
                 # cold-start segments time the micro-step's jit compile, not
                 # decode — keep them out of the SLO p50/p99 window and the
                 # budget estimator (reported only until warm samples exist)
                 self._cold_token_seconds.append(per_tok)
+        self.total_tokens += decoded + mid_decoded
         for r, rid in enumerate(self.rows):
             if rid is None:
                 continue
@@ -304,7 +460,7 @@ class DecodeScheduler:
                 req.tokens_out = engine.decode_outputs(r)[: int(n_out[r])]
                 req.state, req.finish_clock = DONE, clock
                 self.rows[r] = None
-        return decoded, wall, per_task
+        return decoded + mid_decoded, wall, per_task
 
     # ------------------------------------------------------------------
     # metrics
@@ -327,6 +483,7 @@ class DecodeScheduler:
             "completed_requests": len(done),
             "decode_tokens": self.total_tokens,
             "queued_requests": len(self.queue),
+            "mid_iteration_binds": self.mid_iteration_binds,
         }
         out.update(self.latency_percentiles())
         return out

@@ -36,6 +36,7 @@ import numpy as np
 from repro.configs import ArchConfig
 from repro.core.cost_model import (
     CalibrationSample,
+    DecodeSample,
     HardwareProfile,
     calibrate_profile,
 )
@@ -172,6 +173,11 @@ class MuxTuneService:
         # admission saturation gate from StepMetrics wall times)
         self.calibration_trace: List[CalibrationSample] = []
         self._calibration_window = 256
+        # decode-side channel: (rows, mean_ctx, per-micro-step seconds) from
+        # each warm timed decode segment — fits the "__decode__" scale so
+        # token_budget's estimator is calibrated independently of the
+        # training-step wall scale
+        self.decode_trace: List[DecodeSample] = []
         # token-level co-serving: inference decode traffic interleaved with
         # the training iterations under a latency SLO (FlexLLM-style)
         self.coserve = DecodeScheduler(coserve)
@@ -245,17 +251,28 @@ class MuxTuneService:
         return rec
 
     def submit_request(self, task_id: str, prompt, max_new_tokens: int = 8,
-                       request_id: Optional[str] = None) -> InferenceRequest:
+                       request_id: Optional[str] = None,
+                       temperature: float = 0.0, top_k: int = 0,
+                       top_p: float = 1.0, seed: int = 0,
+                       slo_class: int = 0) -> InferenceRequest:
         """Submit an inference request against a tenant's adapter stack.
 
         The request queues for a decode-pool row and is served token-level
         interleaved with the training iterations (SLO-packed decode
-        micro-batches).  The tenant must be (or become) resident; requests
-        of a departing tenant are cancelled with ``tenant_departed``."""
+        micro-batches) — or bound mid-iteration when a row is free
+        (continuous batching).  Sampling: ``temperature`` 0 is exact greedy;
+        ``top_k``/``top_p`` filter the proposal; ``seed`` makes sampled
+        generations replayable.  ``slo_class``: lower = higher priority for
+        pool rows (FIFO within a class).  The tenant must be (or become)
+        resident; requests of a departing tenant are cancelled with
+        ``tenant_departed``."""
         rid = request_id or f"req{len(self.coserve.requests)}-{task_id}"
         req = InferenceRequest(rid, task_id,
                                np.asarray(prompt, np.int32).reshape(-1),
-                               max_new_tokens, submit_clock=self.clock)
+                               max_new_tokens, submit_clock=self.clock,
+                               temperature=float(temperature),
+                               top_k=int(top_k), top_p=float(top_p),
+                               seed=int(seed), slo_class=int(slo_class))
         if self.cfg.family not in ("dense", "vlm", "moe"):
             # the bind step's prefill-into-cache needs a full-depth KV stack;
             # reject up front instead of crashing the training iteration the
@@ -450,6 +467,7 @@ class MuxTuneService:
                 self.engine, k, self.clock)
             metrics.decode_tokens = dtok
             metrics.decode_seconds = dwall
+            metrics.decode_micro_steps = k
             pct = self.coserve.latency_percentiles()
             metrics.decode_p50_s = pct["decode_p50_s"]
             metrics.decode_p99_s = pct["decode_p99_s"]
@@ -457,9 +475,19 @@ class MuxTuneService:
                 rec = self.tenants.get(tid)
                 if rec is not None:
                     rec.decode_tokens += n
-        if not (coserving and self.coserve.last_bind_count):
-            # bind iterations interleave a single-row prefill (and possibly
-            # its jit compile) into the training dispatch queue: their wall
+            if self.coserve.last_step_seconds is not None:
+                # measured per-micro-step decode seconds from the warm timed
+                # segment: the raw material for the "__decode__" scale fit
+                self.decode_trace.append((self.coserve.last_step_rows,
+                                          mean_ctx,
+                                          self.coserve.last_step_seconds))
+                if len(self.decode_trace) > self._calibration_window:
+                    del self.decode_trace[:-self._calibration_window]
+        if not (coserving and (self.coserve.last_bind_count
+                               or self.coserve.last_mid_micros)):
+            # bind iterations interleave a prefill (and possibly its jit
+            # compile) into the training dispatch queue, and continuous-
+            # batching iterations interleave decode micro-steps: their wall
             # is not pure training time and would bias the calibration fit
             # and the drift detector
             self._record_calibration_sample(metrics)
@@ -542,8 +570,10 @@ class MuxTuneService:
         saturation gate then tracks the hardware this service actually runs
         on (Fig. 9b on real timings) instead of the analytic TPU roofline."""
         samples = self.calibration_trace[-(window or self._calibration_window):]
+        dsamples = self.decode_trace[-(window or self._calibration_window):]
         hw = calibrate_profile(self.cfg, self.parallelism, samples,
-                               base_hw=self.planner.hw)
+                               base_hw=self.planner.hw,
+                               decode_samples=dsamples)
         self.planner.hw = hw
         self.admission.hw = hw
         return hw

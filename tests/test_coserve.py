@@ -355,3 +355,202 @@ def test_auto_recalibration_on_drift():
     pred = svc.predicted_iteration_seconds()
     meas = np.median([w for _, _, w in svc.calibration_trace[-3:]])
     assert 0.1 < pred / meas < 10.0
+
+
+def test_sample_tokens_determinism_and_filters(key):
+    """On-device sampling: fixed keys replay exactly; temperature 0 is exact
+    argmax; top-k=1 and a tiny top-p nucleus both collapse to greedy."""
+    from repro.launch.steps import sample_tokens
+
+    B, V = 4, 64
+    logits = jax.random.normal(key, (B, V), jnp.float32) * 3.0
+    temp = jnp.asarray([0.0, 0.8, 1.2, 0.5], jnp.float32)
+    top_k = jnp.asarray([0, 5, 0, 3], jnp.int32)
+    top_p = jnp.asarray([1.0, 1.0, 0.9, 0.7], jnp.float32)
+    rng = jnp.asarray([[0, i] for i in range(B)], jnp.uint32)
+    t1, r1 = sample_tokens(logits, temp, top_k, top_p, rng)
+    t2, r2 = sample_tokens(logits, temp, top_k, top_p, rng)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+    greedy = np.asarray(jnp.argmax(logits, axis=-1))
+    assert int(t1[0]) == greedy[0]                  # temp 0 row: exact argmax
+    assert np.any(np.asarray(r1) != np.asarray(rng))  # keys advanced
+    hot = jnp.full((B,), 5.0, jnp.float32)
+    tk, _ = sample_tokens(logits, hot, jnp.ones((B,), jnp.int32),
+                          jnp.ones((B,), jnp.float32), rng)
+    np.testing.assert_array_equal(np.asarray(tk), greedy)
+    tp, _ = sample_tokens(logits, hot, jnp.zeros((B,), jnp.int32),
+                          jnp.full((B,), 1e-6, jnp.float32), rng)
+    np.testing.assert_array_equal(np.asarray(tp), greedy)
+
+
+def test_batched_bind_matches_single_binds(key):
+    """Tentpole: ONE batched multi-row chunked-prefill launch (padded
+    prompts, per-row true lengths) produces the exact pool state and greedy
+    trajectories of two legacy single-row binds."""
+    from repro.launch.steps import (build_decode_batched_bind_step,
+                                    build_decode_bind_step,
+                                    build_decode_micro_step,
+                                    decode_prefix_reserve, greedy_sampling,
+                                    init_decode_pool)
+
+    cfg = CFG
+    model = build_model(cfg)
+    backbone = model.init(key)
+    mta = MultiTaskAdapters(cfg, [AdapterConfig("lora", rank=4),
+                                  AdapterConfig("prefix", rank=4)])
+    params = mta.init(jax.random.PRNGKey(2))
+    pres = decode_prefix_reserve(mta)
+    rows, max_len, cap = 2, 16, 4
+    slots = {k: jnp.asarray(v)
+             for k, v in mta.decode_row_slots([0, 1]).items()}
+    scales = {k: jnp.asarray(mta.scales(k)) for k in mta.kind_tasks}
+    # mixed true lengths inside one prompt bucket (row 0 is padded)
+    prompts = np.asarray([[4, 9, 2, 0], [7, 1, 3, 5]], np.int32)
+    lengths = np.asarray([3, 4], np.int32)
+    bind_n = build_decode_batched_bind_step(model, mta, max_len, pres)
+    pool_b = init_decode_pool(model, rows, max_len, cap, prefix_reserve=pres)
+    pool_b = bind_n(backbone, params, pool_b, jnp.asarray([0, 1]),
+                    jnp.asarray(prompts), jnp.asarray(lengths), slots, scales,
+                    jnp.asarray([cap, cap]), greedy_sampling(2))
+    bind1 = build_decode_bind_step(model, mta, max_len, pres)
+    pool_s = init_decode_pool(model, rows, max_len, cap, prefix_reserve=pres)
+    for r in (0, 1):
+        s1 = {k: v[r:r + 1] for k, v in slots.items()}
+        lp = int(lengths[r])
+        pool_s = bind1(backbone, params, pool_s, jnp.asarray(r),
+                       jnp.asarray(prompts[r:r + 1, :lp]), jnp.asarray(lp),
+                       s1, scales, jnp.asarray(cap))
+    micro = build_decode_micro_step(model, mta, pres)
+    for _ in range(cap - 1):
+        pool_b = micro(backbone, params, pool_b, slots, scales)
+        pool_s = micro(backbone, params, pool_s, slots, scales)
+    for k in ("out", "n_out", "active"):
+        np.testing.assert_array_equal(np.asarray(pool_b[k]),
+                                      np.asarray(pool_s[k]),
+                                      err_msg=f"pool[{k}] batched != single")
+    for k in ("pos", "lo"):
+        np.testing.assert_array_equal(np.asarray(pool_b["state"][k]),
+                                      np.asarray(pool_s["state"][k]),
+                                      err_msg=f"state[{k}] batched != single")
+
+
+def test_service_sampling_determinism_and_greedy_equivalence():
+    """Same seed -> bit-identical sampled generation (across different pool
+    rows); temperature 0 ignores the seed and equals the legacy greedy
+    default."""
+    svc = _coserve_service(auto_recalibrate=False)
+    svc.submit(make_task("a", "sst2", 2, AdapterConfig("lora", rank=4),
+                         seed=0), target_steps=10)
+    sa = svc.submit_request("a", [3, 5, 7], max_new_tokens=5,
+                            temperature=0.8, top_k=8, seed=11)
+    sb = svc.submit_request("a", [3, 5, 7], max_new_tokens=5,
+                            temperature=0.8, top_k=8, seed=11)
+    ga = svc.submit_request("a", [2, 4, 6], max_new_tokens=4)  # legacy greedy
+    gb = svc.submit_request("a", [2, 4, 6], max_new_tokens=4,
+                            temperature=0.0, seed=123)
+    for _ in range(8):
+        svc.step()
+        if all(r.state == "done" for r in (sa, sb, ga, gb)):
+            break
+    assert all(r.state == "done" for r in (sa, sb, ga, gb))
+    assert list(sa.tokens_out) == list(sb.tokens_out)
+    assert list(ga.tokens_out) == list(gb.tokens_out)
+
+
+def test_continuous_batching_mid_iteration_bind_and_parity():
+    """Acceptance: a request submitted MID-iteration (between training
+    micro-steps) binds onto a free pool row and begins decoding within the
+    same iteration — while the training losses stay exactly
+    traffic-independent (rtol 2e-4 vs the traffic-free run)."""
+    steps = 3
+
+    def run(with_traffic):
+        svc = _coserve_service(auto_recalibrate=False, n_micro=4)
+        svc.submit(make_task("a", "sst2", 2, AdapterConfig("lora", rank=4),
+                             seed=0), target_steps=steps)
+        mid = [None]
+        if with_traffic:
+            svc.submit_request("a", [3, 5, 7], max_new_tokens=4)
+            orig = svc.coserve.interleave_fn
+            calls = [0]
+
+            def patched(engine):
+                cb = orig(engine)
+
+                def wrapped():
+                    calls[0] += 1
+                    if calls[0] == 2 and mid[0] is None:
+                        mid[0] = svc.submit_request("a", [2, 4],
+                                                    max_new_tokens=3)
+                    cb()
+                return wrapped
+            svc.coserve.interleave_fn = patched
+        losses = []
+        for _ in range(steps):
+            m = svc.step()
+            losses.append(np.asarray(m.per_task_loss))
+        return svc, mid[0], np.asarray(losses)
+
+    _, _, ref_losses = run(False)
+    svc, req, losses = run(True)
+    assert req is not None
+    # bound within the SAME iteration it was submitted in, via the
+    # continuous-batching path — not parked until the next prepare()
+    assert svc.coserve.mid_iteration_binds >= 1
+    assert req.bind_clock == req.submit_clock
+    assert req.state == "done" and len(req.tokens_out) == 3
+    np.testing.assert_allclose(losses, ref_losses, rtol=2e-4, atol=2e-4)
+
+
+def test_decode_calibration_scale_fit():
+    """Satellite: ``calibrate_profile(decode_samples=...)`` fits the
+    ``"__decode__"`` scale so ``decode_token_latency`` reproduces measured
+    per-micro-step decode seconds — independently of the training wall
+    scale."""
+    from repro.core.cost_model import (CostModel, HardwareProfile,
+                                       calibrate_profile)
+
+    par = ParallelismSpec()
+    base = HardwareProfile()
+    bare = CostModel(CFG, [], par, base)
+    scale = 3.7
+    samples = [(r, float(c), scale * bare.decode_token_latency(r, c))
+               for r, c in [(1, 8), (2, 16), (2, 24), (1, 30)]]
+    hw = calibrate_profile(CFG, par, [], base_hw=base, decode_samples=samples)
+    np.testing.assert_allclose(hw.calibration["__decode__"], scale, rtol=1e-6)
+    cm = CostModel(CFG, [], par, hw)
+    for r, c, meas in samples:
+        np.testing.assert_allclose(cm.decode_token_latency(r, int(c)), meas,
+                                   rtol=1e-6)
+    # the decode fit must not inherit a training wall scale: with both
+    # channels present, each lands in its own key
+    tr_hw = calibrate_profile(CFG, par, [], base_hw=base,
+                              decode_samples=samples)
+    tr_hw.calibrate("__wall__", 100.0)
+    assert tr_hw.decode_scale() == pytest.approx(scale)
+
+
+def test_service_decode_calibration_channel():
+    """Service wiring: warm decode segments feed ``decode_trace``; a
+    ``calibrate()`` installs ``"__decode__"`` into the live profile and the
+    calibrated estimator tracks the measured micro-step seconds."""
+    from repro.core.cost_model import CostModel
+
+    svc = _coserve_service(auto_recalibrate=False)
+    svc.submit(make_task("a", "sst2", 2, AdapterConfig("lora", rank=4),
+                         seed=0), target_steps=8)
+    for i in range(5):
+        # sustained traffic: the first iteration's segment is cold (micro-step
+        # jit compile) and excluded; later warm segments feed the trace
+        svc.submit_request("a", [3, 5, 7], max_new_tokens=6,
+                           request_id=f"r{i}")
+        svc.step()
+    assert len(svc.decode_trace) >= 1
+    hw = svc.calibrate()
+    assert "__decode__" in hw.calibration
+    assert svc.planner.hw is hw and svc.admission.hw is hw
+    cm = CostModel(svc.cfg, [], svc.parallelism, hw)
+    r, ctx, s = svc.decode_trace[-1]
+    pred = cm.decode_token_latency(r, int(max(ctx, 1)))
+    assert 0.1 < pred / s < 10.0

@@ -156,3 +156,123 @@ def test_gla_reset_isolates_segments(key):
                         la[:, 32:], li[:, 32:], 16,
                         reset=jnp.zeros((B, 32)).at[:, 0].set(1.0))
     np.testing.assert_allclose(np.asarray(y[:, 32:]), np.asarray(y2), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# split-KV decode attention (PR 6): single-token query against a KV cache
+# window [cache_start, cache_len) — the co-serving decode hot loop.
+# ---------------------------------------------------------------------------
+
+
+def _decode_oracle_np(q, k_cache, v_cache, cache_len, cache_start):
+    """Brute-force per-(row, head) numpy oracle, independent of the jnp ref."""
+    q = np.asarray(q, np.float32)
+    kc = np.asarray(k_cache, np.float32)
+    vc = np.asarray(v_cache, np.float32)
+    B, _one, H, dh = q.shape
+    S, Hkv = kc.shape[1], kc.shape[2]
+    G = H // Hkv
+    out = np.zeros((B, 1, H, dh), np.float32)
+    for b in range(B):
+        lo, hi = int(cache_start[b]), int(cache_len[b])
+        if hi <= lo:
+            continue
+        for h in range(H):
+            kv = h // G
+            s = (kc[b, lo:hi, kv] @ q[b, 0, h]) / np.sqrt(dh)
+            p = np.exp(s - s.max())
+            p /= p.sum()
+            out[b, 0, h] = p @ vc[b, lo:hi, kv]
+    return out
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,Hkv,dh,S,split",
+    [
+        (3, 4, 2, 16, 64, 16),     # GQA, several splits
+        (2, 8, 8, 32, 128, 128),   # MHA, single split covering the cache
+        (1, 2, 1, 8, 48, 48),      # single row, one split
+        (2, 6, 3, 16, 96, 7),      # split not dividing S (largest-divisor fit)
+    ],
+)
+def test_decode_attention_kernel(dtype, B, H, Hkv, dh, S, split, key):
+    from repro.kernels.decode_attention import decode_attention_pallas
+    from repro.kernels.ref import decode_attention_ref
+
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, dh), dtype)
+    kc = jax.random.normal(ks[1], (B, S, Hkv, dh), dtype)
+    vc = jax.random.normal(ks[2], (B, S, Hkv, dh), dtype)
+    # per-row windows, including a reserved-prefix row (cache_start > 0)
+    cache_len = jnp.asarray([(S // 2 + 3 * i) % S + 1 for i in range(B)], jnp.int32)
+    cache_start = jnp.asarray([0] + [2] * (B - 1), jnp.int32)
+    ref = decode_attention_ref(q, kc, vc, cache_len, cache_start)
+    out = decode_attention_pallas(q, kc, vc, cache_len, cache_start,
+                                  split_k=split, interpret=True)
+    tol = 4e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+    if dtype == jnp.float32:
+        oracle = _decode_oracle_np(q, kc, vc, cache_len, cache_start)
+        np.testing.assert_allclose(np.asarray(out, np.float32), oracle,
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_decode_attention_tiers_match(key):
+    """kops.decode_attention parity: xla tier vs pallas_interpret tier."""
+    B, H, Hkv, dh, S = 2, 4, 2, 16, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, dh), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, Hkv, dh), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, S, Hkv, dh), jnp.float32)
+    cache_len = jnp.asarray([40, 17], jnp.int32)
+    cache_start = jnp.asarray([0, 4], jnp.int32)
+    prev = kops.get_impl()
+    try:
+        kops.set_impl("xla")
+        y_xla = kops.decode_attention(q, kc, vc, cache_len, cache_start)
+        kops.set_impl("pallas_interpret")
+        y_pal = kops.decode_attention(q, kc, vc, cache_len, cache_start,
+                                      split_k=16)
+    finally:
+        kops.set_impl(prev)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_xla),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_attention_single_split_matches_multi(key):
+    from repro.kernels.decode_attention import decode_attention_pallas
+
+    B, H, Hkv, dh, S = 2, 4, 2, 16, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, dh), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, Hkv, dh), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, S, Hkv, dh), jnp.float32)
+    cache_len = jnp.asarray([50, 33], jnp.int32)
+    one = decode_attention_pallas(q, kc, vc, cache_len, split_k=S, interpret=True)
+    many = decode_attention_pallas(q, kc, vc, cache_len, split_k=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(many), np.asarray(one),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_empty_window_finite_zeros(key):
+    """Regression: an empty [start, len) window (freshly-bound or inactive
+    pool row) must yield exact finite zeros, not NaN from a 0/0 softmax."""
+    from repro.kernels.decode_attention import decode_attention_pallas
+    from repro.kernels.ref import decode_attention_ref
+
+    B, H, Hkv, dh, S = 3, 4, 2, 16, 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, dh), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, S, Hkv, dh), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, S, Hkv, dh), jnp.float32)
+    cache_len = jnp.asarray([0, 8, 8], jnp.int32)
+    cache_start = jnp.asarray([0, 8, 2], jnp.int32)  # rows 0 and 1 are empty
+    for out in (decode_attention_ref(q, kc, vc, cache_len, cache_start),
+                decode_attention_pallas(q, kc, vc, cache_len, cache_start,
+                                        split_k=8, interpret=True)):
+        arr = np.asarray(out)
+        assert np.all(np.isfinite(arr))
+        np.testing.assert_array_equal(arr[:2], np.zeros_like(arr[:2]))
+        assert np.any(arr[2] != 0)
