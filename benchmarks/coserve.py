@@ -80,4 +80,11 @@ def run() -> list[str]:
         csv_row("coserve/step_wall_coserve", train_co * 1e6,
                 f"train_only_us={train_ref * 1e6:.0f};"
                 f"overhead={train_co / max(train_ref, 1e-9):.2f}x"),
+        # SLO attainment of retired requests (HIGHER is better — advisory
+        # only: coserve rows are outside the blocking kernel gate)
+        csv_row("coserve/slo_attainment_pct", acc["slo_attainment_pct"],
+                f"met={acc['slo_met']};missed={acc['slo_missed']};"
+                "by_class=" + "|".join(
+                    f"{c}:{v:.0f}"
+                    for c, v in acc["slo_attainment_by_class"].items())),
     ]

@@ -45,6 +45,10 @@ import sys
 import time
 import traceback
 
+from repro.obs.log import get_logger
+
+log = get_logger("bench")
+
 MODULES = [
     "alignment",
     "planner_quality",
@@ -125,7 +129,11 @@ def write_dashboard(baseline_dir: str, max_cols: int = 10) -> str:
     lines = ["# Benchmark history", "",
              "Per-PR metric trajectory (us/call, lower is better) over the "
              f"retained runs under `history/`.  Columns are runs oldest to "
-             f"newest; tagged runs are pinned baselines.", ""]
+             f"newest; tagged runs are pinned baselines.", "",
+             "Exception: `coserve/slo_attainment_pct` is a percentage "
+             "(HIGHER is better) and advisory — co-serve rows sit outside "
+             "the blocking compare gate, so a dip flags for review without "
+             "failing the build.", ""]
     modules: dict[str, dict[str, dict[int, float]]] = {}
     for seq, _tag, path in runs:
         for art in sorted(glob.glob(os.path.join(path, "BENCH_*.json"))):
@@ -185,30 +193,30 @@ def compare(baseline_dir: str, threshold: float, bootstrap: bool = True,
     DASHBOARD.md metric-trajectory table."""
     current = sorted(glob.glob("BENCH_*.json"))
     if not current:
-        print(f"# no BENCH_*.json in {os.getcwd()} to compare", file=sys.stderr)
+        log.error("no BENCH_*.json in %s to compare", os.getcwd())
         return 2
     base_src = baseline_dir
     if baseline_tag is not None:
         pinned = [r for r in _history_runs(baseline_dir)
                   if r[1] == baseline_tag]
         if not pinned:
-            print(f"# no pinned history run tagged '{baseline_tag}' under "
-                  f"{baseline_dir}", file=sys.stderr)
+            log.error("no pinned history run tagged '%s' under %s",
+                      baseline_tag, baseline_dir)
             return 2
         base_src = pinned[-1][2]
-        print(f"# baseline override: pinned {os.path.basename(base_src)}")
+        log.info("baseline override: pinned %s", os.path.basename(base_src))
     baseline_files = sorted(glob.glob(os.path.join(base_src, "BENCH_*.json")))
     if not baseline_files:
         if not bootstrap:
-            print(f"# no baseline artifacts under {baseline_dir}", file=sys.stderr)
+            log.error("no baseline artifacts under %s", baseline_dir)
             return 2
         os.makedirs(baseline_dir, exist_ok=True)
         for path in current:
             shutil.copy(path, os.path.join(baseline_dir, os.path.basename(path)))
         record_history(baseline_dir, retain=retain, tag=tag)
         write_dashboard(baseline_dir)
-        print(f"# bootstrap: no baseline under {baseline_dir}; seeded "
-              f"{len(current)} artifact(s) as the new baseline")
+        log.info("bootstrap: no baseline under %s; seeded %d artifact(s) "
+                 "as the new baseline", baseline_dir, len(current))
         return 0
     regressions = 0
     advisory = 0
@@ -247,11 +255,12 @@ def compare(baseline_dir: str, threshold: float, bootstrap: bool = True,
                 flag = "improved"
             compared += 1
             print(f"{mod},{metric},{b:.1f},{c:.1f},{delta * 100:+.1f},{flag}")
-    print(f"# compared {compared} metrics, {regressions} blocking + "
-          f"{advisory} advisory regression(s) beyond +{threshold * 100:.0f}%")
+    log.info("compared %d metrics, %d blocking + %d advisory "
+             "regression(s) beyond +%.0f%%", compared, regressions,
+             advisory, threshold * 100)
     dst = record_history(baseline_dir, retain=retain, tag=tag)
     dash = write_dashboard(baseline_dir)
-    print(f"# history: recorded {os.path.basename(dst)}, dashboard {dash}")
+    log.info("history: recorded %s, dashboard %s", os.path.basename(dst), dash)
     return 1 if regressions else 0
 
 
@@ -273,7 +282,7 @@ def main() -> None:
             i += 1
             if i >= len(args):
                 # usage error: distinct from the rc=1 "regression" signal
-                print(f"error: {a} requires a value", file=sys.stderr)
+                log.error("%s requires a value", a)
                 sys.exit(2)
             if a == "--compare":
                 compare_dir = args[i]
@@ -323,8 +332,8 @@ def main() -> None:
             path = f"BENCH_{name}.json"
             with open(path, "w") as f:
                 json.dump(art, f, indent=2, sort_keys=True)
-            print(f"# wrote {path} ({len(art)} rows)", flush=True)
-        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+            log.info("wrote %s (%d rows)", path, len(art))
+        log.info("%s done in %.1fs", name, time.time() - t0)
 
 
 if __name__ == "__main__":

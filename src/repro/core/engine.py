@@ -40,6 +40,7 @@ import numpy as np
 from repro.core.planner import ExecutionPlan
 from repro.core.registry import ModelGenerator, RegisteredTasks, _group_depths
 from repro.models.transformer import Model
+from repro.obs.tracing import span
 from repro.peft.methods import shared_leaf
 from repro.train.optimizer import adamw_update, apply_updates
 
@@ -425,8 +426,9 @@ class PEFTEngine:
         fn = self._decode_fn(
             "micro", lambda: build_decode_micro_step(
                 self.model, self.reg.mta, self._decode_geom[3]))
-        self._decode_pool = fn(self.backbone, self.reg.adapter_params,
-                               self._decode_pool, row_slots, scales)
+        with span("decode.micro_step", track="engine"):
+            self._decode_pool = fn(self.backbone, self.reg.adapter_params,
+                                   self._decode_pool, row_slots, scales)
 
     def dispatch_decode_bind(self, row: int, tokens: np.ndarray, length: int,
                              row_slots, scales, max_new: int,
@@ -463,18 +465,20 @@ class PEFTEngine:
                 "top_p": jnp.asarray(sampling["top_p"], jnp.float32),
                 "rng": jnp.asarray(sampling["rng"], jnp.uint32),
             }
-        self._decode_pool = fn(
-            self.backbone, self.reg.adapter_params, self._decode_pool,
-            jnp.asarray(rows, jnp.int32), jnp.asarray(tokens, jnp.int32),
-            jnp.asarray(lengths, jnp.int32), row_slots, scales,
-            jnp.asarray(max_new, jnp.int32), sampling)
+        with span("decode.bind", track="engine", args={"rows": R, "bucket": Lp}):
+            self._decode_pool = fn(
+                self.backbone, self.reg.adapter_params, self._decode_pool,
+                jnp.asarray(rows, jnp.int32), jnp.asarray(tokens, jnp.int32),
+                jnp.asarray(lengths, jnp.int32), row_slots, scales,
+                jnp.asarray(max_new, jnp.int32), sampling)
 
     def decode_accounting(self) -> Dict[str, np.ndarray]:
         """The per-iteration host sync of the decode pool: small counters
         only (generated counts, active flags, context lengths)."""
         p = self._decode_pool
-        got = jax.device_get({"n_out": p["n_out"], "active": p["active"],
-                              "pos": p["state"]["pos"]})
+        with span("decode.accounting_sync", track="engine"):
+            got = jax.device_get({"n_out": p["n_out"], "active": p["active"],
+                                  "pos": p["state"]["pos"]})
         return {k: np.asarray(v) for k, v in got.items()}
 
     def decode_outputs(self, row: int) -> np.ndarray:
@@ -504,39 +508,56 @@ class PEFTEngine:
         micro-steps (``dispatch_decode_micro``) — because dispatch is
         asynchronous, this interleaves inference tokens INTO the training
         iteration's device queue without stalling either stream.
+
+        Observability: the loop is span-instrumented (``engine.iteration``
+        / ``engine.prefetch`` / ``engine.micro_step`` / ``engine.sync`` on
+        the ``engine`` track).  With tracing OFF — the default — every span
+        site is a shared no-op context manager: no allocation, no extra
+        ``device_get``, so the stall-free transfer discipline above is
+        untouched (proven by the transfer-guard test's device_get census).
         """
         from repro.launch.steps import prefetch_to_device
 
-        t0 = time.perf_counter()
-        schedule = self._schedule(n_micro)
-        # device_put (not jnp.zeros) so accumulator init is an explicit
-        # transfer — the whole loop stays clean under transfer_guard.
-        # per-task accumulator sized to the total slot CAPACITY (not the live
-        # task count): capacity only changes when the adapter stacks are
-        # reshaped — exactly when the step cache is cleared — so reused
-        # steps never retrace on a censal shift; sliced to live tasks on host
-        n_acc = max(len(self.plan.tasks),
-                    sum(self.reg.mta.kind_capacity.values()))
-        acc = (jax.device_put(np.float32(0.0)),
-               jax.device_put(np.zeros((n_acc,), np.float32)))
-        tokens = eff = 0
-        batches = prefetch_to_device(next(loaders[h]) for h in schedule)
-        for hid, batch in zip(schedule, batches):
-            step = self._step_for(hid)
-            (self.reg.adapter_params, self.reg.opt_state, self._slot_steps,
-             acc) = step(
-                self.backbone, self.reg.adapter_params, self.reg.opt_state,
-                self._slot_steps, batch, self._member_ids[hid], acc,
-            )
-            h = self.plan.htasks[hid]
-            tokens += h.tokens
-            eff += h.effective_tokens
-            if interleave is not None:
-                interleave()
-        # The iteration's single host sync: one explicit transfer of the
-        # device accumulators (blocks until the whole iteration retires).
-        loss_h, pt_h = jax.device_get(acc)
-        dt = time.perf_counter() - t0
+        with span("engine.iteration", track="engine"):
+            t0 = time.perf_counter()
+            schedule = self._schedule(n_micro)
+            # device_put (not jnp.zeros) so accumulator init is an explicit
+            # transfer — the whole loop stays clean under transfer_guard.
+            # per-task accumulator sized to the total slot CAPACITY (not the
+            # live task count): capacity only changes when the adapter stacks
+            # are reshaped — exactly when the step cache is cleared — so
+            # reused steps never retrace on a censal shift; sliced to live
+            # tasks on host
+            n_acc = max(len(self.plan.tasks),
+                        sum(self.reg.mta.kind_capacity.values()))
+            acc = (jax.device_put(np.float32(0.0)),
+                   jax.device_put(np.zeros((n_acc,), np.float32)))
+            tokens = eff = 0
+            batches = prefetch_to_device(next(loaders[h]) for h in schedule)
+            for hid in schedule:
+                try:
+                    with span("engine.prefetch", track="engine"):
+                        batch = next(batches)
+                except StopIteration:
+                    break
+                step = self._step_for(hid)
+                with span("engine.micro_step", track="engine"):
+                    (self.reg.adapter_params, self.reg.opt_state,
+                     self._slot_steps, acc) = step(
+                        self.backbone, self.reg.adapter_params,
+                        self.reg.opt_state, self._slot_steps, batch,
+                        self._member_ids[hid], acc,
+                    )
+                h = self.plan.htasks[hid]
+                tokens += h.tokens
+                eff += h.effective_tokens
+                if interleave is not None:
+                    interleave()
+            # The iteration's single host sync: one explicit transfer of the
+            # device accumulators (blocks until the whole iteration retires).
+            with span("engine.sync", track="engine"):
+                loss_h, pt_h = jax.device_get(acc)
+            dt = time.perf_counter() - t0
         pt_h = np.asarray(pt_h, np.float64)[: len(self.plan.tasks)]
         return StepMetrics(float(loss_h), pt_h, tokens, eff, dt)
 

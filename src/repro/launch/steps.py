@@ -379,6 +379,14 @@ def sample_tokens(logits: jax.Array, temp: jax.Array, top_k: jax.Array,
     ``(tokens [B] int32, advanced rng [B, 2])`` so the caller threads the
     key through the pool state.
     """
+    # jax.named_scope: the label survives into the lowered HLO, so device
+    # profiles (jax.profiler.trace) show the sampling phase as its own
+    # region under the host-side decode spans (repro.obs.tracing)
+    with jax.named_scope("decode.sample"):
+        return _sample_tokens_impl(logits, temp, top_k, top_p, rng)
+
+
+def _sample_tokens_impl(logits, temp, top_k, top_p, rng):
     B, V = logits.shape
     lg = logits.astype(jnp.float32)
     greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
@@ -418,9 +426,10 @@ def build_decode_micro_step(model: Model, mta: MultiTaskAdapters,
         ctxf = mta.ctx_factory_from_slots(row_slots, scales)
         st = pool["state"]
         active = pool["active"] > 0
-        logits, new_st = model.decode_step(
-            backbone, st, pool["cur"][:, None], adapters=adapters,
-            ctx_factory=ctxf, prefix_reserve=prefix_reserve)
+        with jax.named_scope("decode.step"):
+            logits, new_st = model.decode_step(
+                backbone, st, pool["cur"][:, None], adapters=adapters,
+                ctx_factory=ctxf, prefix_reserve=prefix_reserve)
         nxt, rng2 = sample_tokens(logits[:, 0, :], pool["temp"],
                                   pool["top_k"], pool["top_p"], pool["rng"])
         B = pool["cur"].shape[0]
@@ -485,10 +494,11 @@ def build_decode_batched_bind_step(model: Model, mta: MultiTaskAdapters,
             S = tokens.shape[1]
             batch["mrope_positions"] = jnp.broadcast_to(
                 jnp.arange(S, dtype=jnp.int32), (3, R, S))
-        logits, st1 = model.prefill(backbone, batch, st1, adapters=adapters,
-                                    ctx_factory=ctxf,
-                                    prefix_reserve=prefix_reserve,
-                                    lengths=lengths)
+        with jax.named_scope("decode.prefill"):
+            logits, st1 = model.prefill(backbone, batch, st1,
+                                        adapters=adapters, ctx_factory=ctxf,
+                                        prefix_reserve=prefix_reserve,
+                                        lengths=lengths)
         # fold soft-prompt rows into the reserved prefix region + window
         k1, v1 = st1["kv"]["k"], st1["kv"]["v"]
         lo_val = jnp.full((R,), prefix_reserve, jnp.int32)

@@ -42,6 +42,9 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from repro.obs.telemetry import TelemetryRegistry
+from repro.obs.tracing import instant
+
 PENDING = "pending"
 DECODING = "decoding"
 DONE = "done"
@@ -59,6 +62,12 @@ class CoServeConfig:
     min_tokens: int = 1          # decode floor per iteration when traffic waits
     max_tokens_per_iter: int = 64
     latency_window: int = 512    # per-token latency samples kept for p50/p99
+    # per-request completion deadline in service ITERATIONS from submit,
+    # indexed by SLO class (the last entry covers higher classes).  A DONE
+    # request whose makespan beat its class deadline counts as SLO-met;
+    # ``slo_attainment()`` reports the attainment percentage per class —
+    # the signal MuxServe/FlexLLM-style placement policies optimize for.
+    slo_deadline_iters: tuple = (2, 4, 8)
 
 
 @dataclass
@@ -83,6 +92,8 @@ class InferenceRequest:
     # SLO class: lower = higher priority; pool rows are granted to the
     # lowest class first (FIFO by submit order within a class)
     slo_class: int = 0
+    # set at retirement: did the request complete within its class deadline?
+    slo_met: Optional[bool] = None
 
     @property
     def queue_wait(self) -> int:
@@ -100,6 +111,7 @@ class InferenceRequest:
             "makespan": (self.finish_clock - self.submit_clock
                          if self.finish_clock >= 0 else -1),
             "slo_class": self.slo_class,
+            "slo_met": self.slo_met,
         }
 
     def sampling_arrays(self) -> Dict[str, np.ndarray]:
@@ -116,8 +128,16 @@ class InferenceRequest:
 class DecodeScheduler:
     """Owns the decode pool bindings and the SLO token-packing policy."""
 
-    def __init__(self, config: Optional[CoServeConfig] = None):
+    def __init__(self, config: Optional[CoServeConfig] = None,
+                 telemetry: Optional[TelemetryRegistry] = None):
         self.config = config or CoServeConfig()
+        # a scheduler without an owning service records into a disabled
+        # registry (null instruments — zero overhead, no behavior change)
+        self.telemetry = telemetry or TelemetryRegistry(enabled=False)
+        # deadline-met/missed per SLO class (kept as plain dicts so the
+        # accounting works even with telemetry off)
+        self.slo_met: Dict[int, int] = {}
+        self.slo_missed: Dict[int, int] = {}
         self.requests: Dict[str, InferenceRequest] = {}
         self.queue: deque = deque()   # request ids awaiting a pool row
         self.rows: List[Optional[str]] = [None] * self.config.decode_slots
@@ -163,6 +183,9 @@ class DecodeScheduler:
             return self.reject(request, "length_caps")
         self.requests[request.request_id] = request
         self.queue.append(request.request_id)
+        instant("request.submit", track=f"tenant:{request.task_id}",
+                args={"request": request.request_id,
+                      "slo_class": request.slo_class})
         return request
 
     def reject(self, request: InferenceRequest, reason: str) -> InferenceRequest:
@@ -254,6 +277,12 @@ class DecodeScheduler:
         req = self.requests[rid]
         self.rows[row] = rid
         req.state, req.row, req.bind_clock = DECODING, row, self._clock
+        self.telemetry.histogram("decode.queue_wait_iters",
+                                 slo_class=str(req.slo_class)).observe(
+            float(req.queue_wait))
+        instant("request.bind", track=f"tenant:{req.task_id}",
+                args={"request": rid, "row": row,
+                      "queue_wait": req.queue_wait})
 
     def _refresh_row_ctx(self, engine) -> None:
         row_task = [
@@ -440,6 +469,15 @@ class DecodeScheduler:
             per_tok = wall / decoded
             if warm:
                 self.token_seconds.extend([per_tok] * min(decoded, 64))
+                # decode token latency per SLO class: one observation per
+                # class active in this warm timed segment (the fused step's
+                # wall is shared across rows, so per-class windows share the
+                # sample but diverge as class mixes shift across segments)
+                for cls in {self.requests[rid].slo_class
+                            for rid in self.rows if rid is not None}:
+                    self.telemetry.histogram(
+                        "decode.token_seconds",
+                        slo_class=str(cls)).observe(per_tok)
                 if k > 0:
                     self.step_seconds.append(wall / k)
                     # decode calibration channel: one DecodeSample per warm
@@ -458,9 +496,24 @@ class DecodeScheduler:
             req = self.requests[rid]
             if acct["active"][r] == 0 and req.state == DECODING:
                 req.tokens_out = engine.decode_outputs(r)[: int(n_out[r])]
-                req.state, req.finish_clock = DONE, clock
+                self._retire(req, clock)
                 self.rows[r] = None
         return decoded + mid_decoded, wall, per_task
+
+    def _retire(self, req: InferenceRequest, clock: int) -> None:
+        """Mark a request DONE and score it against its class deadline."""
+        req.state, req.finish_clock = DONE, clock
+        d = self.config.slo_deadline_iters
+        deadline = d[min(req.slo_class, len(d) - 1)]
+        req.slo_met = (req.finish_clock - req.submit_clock) <= deadline
+        bucket = self.slo_met if req.slo_met else self.slo_missed
+        bucket[req.slo_class] = bucket.get(req.slo_class, 0) + 1
+        self.telemetry.counter(
+            "decode.slo", outcome="met" if req.slo_met else "missed",
+            slo_class=str(req.slo_class)).inc()
+        instant("request.done", track=f"tenant:{req.task_id}",
+                args={"request": req.request_id, "slo_met": req.slo_met,
+                      "makespan": req.finish_clock - req.submit_clock})
 
     # ------------------------------------------------------------------
     # metrics
@@ -475,6 +528,24 @@ class DecodeScheduler:
             "decode_p99_s": float(np.percentile(arr, 99)),
         }
 
+    def slo_attainment(self) -> Dict[str, Any]:
+        """Deadline attainment of retired (DONE) requests, overall and per
+        SLO class.  Cancelled/rejected requests are excluded — they never
+        raced a deadline."""
+        met = sum(self.slo_met.values())
+        missed = sum(self.slo_missed.values())
+        per_class = {
+            c: 100.0 * self.slo_met.get(c, 0)
+            / max(self.slo_met.get(c, 0) + self.slo_missed.get(c, 0), 1)
+            for c in sorted(set(self.slo_met) | set(self.slo_missed))
+        }
+        return {
+            "slo_attainment_pct": 100.0 * met / max(met + missed, 1),
+            "slo_met": met,
+            "slo_missed": missed,
+            "slo_attainment_by_class": per_class,
+        }
+
     def accounting(self) -> Dict[str, Any]:
         reqs = [r.accounting() for r in self.requests.values()]
         done = [r for r in self.requests.values() if r.state == DONE]
@@ -486,4 +557,5 @@ class DecodeScheduler:
             "mid_iteration_binds": self.mid_iteration_binds,
         }
         out.update(self.latency_percentiles())
+        out.update(self.slo_attainment())
         return out

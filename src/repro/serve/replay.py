@@ -15,7 +15,13 @@ one service step per iteration, drain after the horizon.
 
 Runs as a module for the CI smoke job:
 
-    PYTHONPATH=src python -m repro.serve.replay --json replay.json
+    PYTHONPATH=src python -m repro.serve.replay --json replay.json \
+        --trace-out trace.json --metrics-out metrics.json
+
+``--trace-out`` installs a ``SpanTracer`` and saves the run as Chrome
+trace-event JSON (open in Perfetto / ``chrome://tracing``); per-tenant
+lifecycle events land on ``tenant:<task_id>`` swimlanes.  ``--metrics-out``
+saves the service's telemetry registry snapshot.
 """
 from __future__ import annotations
 
@@ -30,11 +36,14 @@ from repro.cluster.simulator import ClusterSim, TaskArrival, philly_style_trace
 from repro.configs import smoke_config
 from repro.core.task import ParallelismSpec, PEFTTask
 from repro.data.synthetic import make_task
+from repro.obs.log import get_logger
+from repro.obs.tracing import SpanTracer, set_tracer
 from repro.peft.adapters import ADAPTER_TUNING, LORA, AdapterConfig
 from repro.serve.admission import AdmissionConfig
 from repro.serve.service import COMPLETED, MuxTuneService
 
 _DATASETS = ("sst2", "qa", "rte")
+log = get_logger("replay")
 
 
 def arrival_to_task(arr: TaskArrival, index: int) -> PEFTTask:
@@ -69,9 +78,15 @@ def replay_trace(
     admission: Optional[AdmissionConfig] = None,
     ckpt_dir: Optional[str] = None,
     seed: int = 0,
+    requests_per_min: int = 0,
 ) -> Dict:
     """Replay ``trace`` through a real MuxTuneService AND the cluster
-    simulator; return both sides' accounting for validation."""
+    simulator; return both sides' accounting for validation.
+
+    ``requests_per_min`` > 0 additionally injects that many inference
+    requests per simulated minute against the resident tenants (round-robin,
+    cycling SLO classes), exercising the token-level co-serving path so the
+    exported trace carries decode bind/micro-step spans."""
     cfg = cfg or smoke_config("llama3.2-3b")
     par = parallelism or ParallelismSpec()
     service = MuxTuneService(cfg, par, admission=admission, ckpt_dir=ckpt_dir,
@@ -87,12 +102,22 @@ def replay_trace(
     arrivals = sorted(trace, key=lambda a: a.t_min)
     pending = list(enumerate(arrivals))
     horizon = max((a.t_min for a in arrivals), default=0.0) + 1.0
+    req_rng = np.random.RandomState(seed + 1)
+    injected = 0
     t = 0.0
     while t <= horizon:
         while pending and pending[0][1].t_min <= t:
             idx, arr = pending.pop(0)
             target = max(1, int(round(arr.duration_min * iters_per_min)))
             service.submit(arrival_to_task(arr, idx), target_steps=target)
+        resident = [r.task_id for r in service.resident]
+        for i in range(requests_per_min if resident else 0):
+            tid = resident[(injected + i) % len(resident)]
+            prompt = req_rng.randint(1, 64,
+                                     size=int(req_rng.randint(3, 9)))
+            service.submit_request(tid, prompt, max_new_tokens=4,
+                                   slo_class=(injected + i) % 2)
+        injected += requests_per_min if resident else 0
         for _ in range(max(1, int(round(iters_per_min)))):
             service.step()
         t += 1.0
@@ -115,8 +140,14 @@ def replay_trace(
                 [r.effective_token_ratio for r in completed])) if completed else 0.0,
             "total_effective_tokens": int(sum(
                 r.effective_tokens for r in service.tenants.values())),
+            "injected_requests": injected,
+            "slo_attainment_pct":
+                acct["coserve"]["slo_attainment_pct"],
         },
         "sim": sim_metrics,
+        # live registry handle (for --metrics-out); NOT JSON-serializable —
+        # callers that dump the report must pop it first
+        "_telemetry": service.telemetry,
         "sim_records": [
             {"index": r.index, "admitted": r.admitted,
              "t_arrive": r.t_arrive, "t_end": r.t_end, "colocated": r.colocated}
@@ -143,20 +174,43 @@ def main() -> None:
     ap.add_argument("--tenants", type=int, default=4)
     ap.add_argument("--philly", action="store_true",
                     help="use a (scaled-down) Philly-style random trace")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="save the run as Chrome trace-event JSON (Perfetto)")
+    ap.add_argument("--metrics-out", metavar="PATH", default=None,
+                    help="save the telemetry registry snapshot as JSON")
+    ap.add_argument("--requests-per-min", type=int, default=2,
+                    help="inference requests injected per simulated minute "
+                         "against resident tenants (0 disables co-serving)")
     args = ap.parse_args()
     if args.philly:
         trace = philly_style_trace(horizon_min=args.tenants * 2.0,
                                    rate_per_min=0.5, mean_dur_min=5.0)
     else:
         trace = tiny_trace(args.tenants)
-    report = replay_trace(trace)
+    tracer = prev = None
+    if args.trace_out:
+        tracer = SpanTracer()
+        prev = set_tracer(tracer)
+    try:
+        report = replay_trace(trace, requests_per_min=args.requests_per_min)
+    finally:
+        if tracer is not None:
+            set_tracer(prev)
     print(json.dumps({"real_summary": report["real_summary"],
                       "sim": report["sim"],
                       "validation": report["validation"]}, indent=2))
+    if tracer is not None:
+        tracer.save(args.trace_out)
+        log.info("wrote trace %s (%d events)", args.trace_out,
+                 len(tracer.events))
+    if args.metrics_out:
+        report["_telemetry"].save_snapshot(args.metrics_out)
+        log.info("wrote metrics snapshot %s", args.metrics_out)
     if args.json:
+        report.pop("_telemetry", None)
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2, default=float)
-        print(f"wrote {args.json}")
+        log.info("wrote %s", args.json)
 
 
 if __name__ == "__main__":

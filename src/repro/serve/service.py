@@ -34,12 +34,7 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 from repro.configs import ArchConfig
-from repro.core.cost_model import (
-    CalibrationSample,
-    DecodeSample,
-    HardwareProfile,
-    calibrate_profile,
-)
+from repro.core.cost_model import HardwareProfile, calibrate_profile
 from repro.core.engine import PEFTEngine, StepMetrics
 from repro.core.planner import ExecutionPlan, ExecutionPlanner
 from repro.core.registry import ModelGenerator, load_task_tree, slice_task_tree
@@ -47,6 +42,8 @@ from repro.core.task import ParallelismSpec, PEFTTask
 from repro.data.loader import HTaskLoader
 from repro.data.synthetic import token_stream
 from repro.distributed.checkpoint import restore_latest, save_checkpoint
+from repro.obs.telemetry import TelemetryRegistry
+from repro.obs.tracing import instant, span
 from repro.serve.admission import (
     AdmissionConfig,
     AdmissionController,
@@ -137,6 +134,7 @@ class MuxTuneService:
         auto_recalibrate: bool = True,
         drift_threshold: float = 1.0,
         drift_window: int = 8,
+        telemetry: Optional[TelemetryRegistry] = None,
     ):
         self.cfg = cfg
         self.parallelism = parallelism or ParallelismSpec()
@@ -165,22 +163,30 @@ class MuxTuneService:
         self._streams: Dict[str, Any] = {}  # task_id -> persistent token gen
         self._loaders: Dict[int, HTaskLoader] = {}
         self._iter_tokens: Dict[str, tuple] = {}  # task_id -> (padded, eff)/iter
-        self.memory_trace: List[float] = []  # Eq. 5 bytes after every event
+        # telemetry registry: the service's per-tenant sensor layer.  The
+        # trace buffers below are BOUNDED rings from it (list-like read API,
+        # capped writes) — long trace replays no longer grow host memory
+        # without bound the way the old ad-hoc Python lists did.
+        self.telemetry = telemetry or TelemetryRegistry()
+        self._calibration_window = min(256, self.telemetry.ring_cap)
+        # Eq. 5 bytes after every census event
+        self.memory_trace = self.telemetry.series("service.memory_bytes")
         self.replans = 0
         self._cache_stats = [0, 0]           # hits/misses of retired engines
         # measured (tasks, hTask schedule, wall) per iteration — the raw
         # material for HardwareProfile calibration (ROADMAP: calibrate the
         # admission saturation gate from StepMetrics wall times)
-        self.calibration_trace: List[CalibrationSample] = []
-        self._calibration_window = 256
+        self.calibration_trace = self.telemetry.series(
+            "service.calibration", cap=self._calibration_window)
         # decode-side channel: (rows, mean_ctx, per-micro-step seconds) from
         # each warm timed decode segment — fits the "__decode__" scale so
         # token_budget's estimator is calibrated independently of the
         # training-step wall scale
-        self.decode_trace: List[DecodeSample] = []
+        self.decode_trace = self.telemetry.series(
+            "service.decode_samples", cap=self._calibration_window)
         # token-level co-serving: inference decode traffic interleaved with
         # the training iterations under a latency SLO (FlexLLM-style)
-        self.coserve = DecodeScheduler(coserve)
+        self.coserve = DecodeScheduler(coserve, telemetry=self.telemetry)
         # auto-recalibration on drift (ROADMAP): when the predicted-vs-
         # measured iteration-time ratio drifts beyond ``drift_threshold``
         # (median log-ratio error over ``drift_window`` iterations), refit
@@ -240,14 +246,23 @@ class MuxTuneService:
         rec = TenantRecord(task, priority, target_steps, warm_start_dir,
                            submit_step=self.clock)
         self.tenants[task.task_id] = rec
+        instant("tenant.submit", track=f"tenant:{task.task_id}")
         decision = self.admission.check(self.resident, task)
         if decision:
             self._attach([rec])
+            outcome = "admit"
         else:
             rec.reason = decision.reason
-            if not self.queue.push(rec, priority):
+            if self.queue.push(rec, priority):
+                outcome = "queue"
+            else:
                 rec.state = REJECTED
                 rec.reason = f"queue_full({decision.reason})"
+                outcome = "reject"
+        # admission decisions are first-class telemetry: the fleet tier's
+        # router / autoscaler acts on admit/reject rates and their reasons
+        self.telemetry.counter("service.admission", decision=outcome,
+                               reason=decision.reason).inc()
         return rec
 
     def submit_request(self, task_id: str, prompt, max_new_tokens: int = 8,
@@ -301,10 +316,13 @@ class MuxTuneService:
     # attach / detach / re-plan
 
     def _replan(self, tasks: List[PEFTTask]) -> ExecutionPlan:
-        plan = self.planner.replan(tasks, prev=self.plan,
-                                   n_micro=self.n_micro,
-                                   enable_fusion=self.enable_fusion)
+        with span("service.replan", track="service",
+                  args={"tasks": len(tasks)}):
+            plan = self.planner.replan(tasks, prev=self.plan,
+                                       n_micro=self.n_micro,
+                                       enable_fusion=self.enable_fusion)
         self.replans += 1
+        self.telemetry.counter("service.replans").inc()
         return plan
 
     def _attach(self, recs: List[TenantRecord]) -> None:
@@ -320,12 +338,21 @@ class MuxTuneService:
         for r in recs:
             r.state = RUNNING
             r.admit_step = self.clock
+            instant("tenant.attach", track=f"tenant:{r.task_id}")
+            # per-tenant footprint + queue wait: the signals a fleet-level
+            # placement / migration policy keys on
+            self.telemetry.gauge("tenant.eq5_bytes", task=r.task_id).set(
+                self.admission.resident_memory([r.task]))
+            self.telemetry.histogram("service.queue_wait_iters").observe(
+                r.queue_wait)
             self._streams.setdefault(
                 r.task_id, token_stream(r.task_id, self.cfg.vocab_size, self.seed))
             if r.warm_start_dir:
                 self._warm_start(r)
         self._rebuild_loaders()
-        self.memory_trace.append(self.admission.resident_memory(self.resident))
+        mem = self.admission.resident_memory(self.resident)
+        self.memory_trace.append(mem)
+        self.telemetry.gauge("service.memory_bytes").set(mem)
 
     def _warm_start(self, rec: TenantRecord) -> None:
         reg = self.gen.registered
@@ -344,6 +371,7 @@ class MuxTuneService:
             reg.adapter_params = load_task_tree(self.cfg, reg.mta,
                                                 reg.adapter_params, gi, sub,
                                                 strict=True)
+            self.telemetry.counter("service.checkpoint", direction="in").inc()
         except ValueError:
             rec.reason = "warm_start_shape_mismatch"
 
@@ -354,16 +382,25 @@ class MuxTuneService:
             for r in recs:
                 gi = reg.task_index(r.task_id)
                 sub = slice_task_tree(self.cfg, reg.mta, reg.adapter_params, gi)
-                path = save_checkpoint(
-                    f"{self.ckpt_dir}/{r.task_id}", r.steps_trained, sub,
-                    extra={"task_id": r.task_id,
-                           "steps_trained": r.steps_trained,
-                           "losses": r.losses[-8:]})
+                with span("service.checkpoint_out", track="service",
+                          args={"task": r.task_id}):
+                    path = save_checkpoint(
+                        f"{self.ckpt_dir}/{r.task_id}", r.steps_trained, sub,
+                        extra={"task_id": r.task_id,
+                               "steps_trained": r.steps_trained,
+                               "losses": r.losses[-8:]})
                 r.checkpoint_path = path
+                self.telemetry.counter("service.checkpoint",
+                                       direction="out").inc()
         ids = [r.task_id for r in recs]
         for tid in ids:
             self._streams.pop(tid, None)
             self.coserve.drop_task(tid, self.clock)
+            instant("tenant.detach", track=f"tenant:{tid}")
+            # metric isolation under churn: a departed tenant's labeled
+            # series must not outlive it (its lifetime accounting stays in
+            # the TenantRecord)
+            self.telemetry.detach_tenant(tid)
         remaining = [t for t in self.resident if t.task_id not in ids]
         if not remaining:
             # last tenant out: drop the engine (a fresh one boots on the next
@@ -380,7 +417,9 @@ class MuxTuneService:
             self.engine.detach_tasks(ids, plan, compact=compact)
             self.plan = plan
             self._rebuild_loaders()
-        self.memory_trace.append(self.admission.resident_memory(remaining))
+        mem = self.admission.resident_memory(remaining)
+        self.memory_trace.append(mem)
+        self.telemetry.gauge("service.memory_bytes").set(mem)
         self._drain_queue()
 
     def _occupancy_after(self, remaining: List[PEFTTask]) -> float:
@@ -442,6 +481,10 @@ class MuxTuneService:
         waiting inference traffic token-level interleaved under the SLO;
         completes tenants that reached their target and re-drains the wait
         queue."""
+        with span("service.step", track="service"):
+            return self._step()
+
+    def _step(self) -> Optional[StepMetrics]:
         if self.engine is None or not self.resident:
             self.clock += 1
             if len(self.queue):
@@ -481,8 +524,6 @@ class MuxTuneService:
                 self.decode_trace.append((self.coserve.last_step_rows,
                                           mean_ctx,
                                           self.coserve.last_step_seconds))
-                if len(self.decode_trace) > self._calibration_window:
-                    del self.decode_trace[:-self._calibration_window]
         if not (coserving and (self.coserve.last_bind_count
                                or self.coserve.last_mid_micros)):
             # bind iterations interleave a prefill (and possibly its jit
@@ -530,12 +571,11 @@ class MuxTuneService:
         return [(self.plan.htasks[h], n) for h, n in counts.items()]
 
     def _record_calibration_sample(self, metrics: StepMetrics) -> None:
+        # the ring caps itself at the calibration window — no manual trim
         self.calibration_trace.append((
             tuple(self.plan.tasks), tuple(self._htask_counts()),
             metrics.wall_seconds,
         ))
-        if len(self.calibration_trace) > self._calibration_window:
-            del self.calibration_trace[:-self._calibration_window]
 
     def _maybe_recalibrate(self, metrics: StepMetrics) -> None:
         """Auto-recalibration on drift (ROADMAP): refit the hardware profile
@@ -571,9 +611,12 @@ class MuxTuneService:
         on (Fig. 9b on real timings) instead of the analytic TPU roofline."""
         samples = self.calibration_trace[-(window or self._calibration_window):]
         dsamples = self.decode_trace[-(window or self._calibration_window):]
-        hw = calibrate_profile(self.cfg, self.parallelism, samples,
-                               base_hw=self.planner.hw,
-                               decode_samples=dsamples)
+        with span("service.calibrate", track="service",
+                  args={"samples": len(samples)}):
+            hw = calibrate_profile(self.cfg, self.parallelism, samples,
+                                   base_hw=self.planner.hw,
+                                   decode_samples=dsamples)
+        self.telemetry.counter("service.calibration_refits").inc()
         self.planner.hw = hw
         self.admission.hw = hw
         return hw

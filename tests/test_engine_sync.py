@@ -60,6 +60,30 @@ def test_run_iteration_no_implicit_host_transfers():
     assert m.tokens > 0
 
 
+def test_run_iteration_exactly_one_device_get(monkeypatch):
+    """Observability-off census: with the default (disabled) tracer and no
+    telemetry attached, a warm iteration performs EXACTLY one explicit
+    ``jax.device_get`` — the end-of-iteration metrics sync.  Instrumentation
+    must never add a host-device sync on the off path."""
+    from repro.obs.tracing import get_tracer
+
+    assert not get_tracer().enabled  # default module tracer is off
+    eng, loaders = _engine()
+    eng.run_iteration(loaders)  # warmup: compile every bucket step
+    calls = []
+    real = jax.device_get
+
+    def counting_get(x):
+        calls.append(type(x).__name__)
+        return real(x)
+
+    monkeypatch.setattr(jax, "device_get", counting_get)
+    with jax.transfer_guard("disallow"):
+        m = eng.run_iteration(loaders)
+    assert np.isfinite(m.loss)
+    assert len(calls) == 1, calls
+
+
 def test_run_iteration_metrics_unchanged_semantics():
     eng, loaders = _engine()
     m = eng.run_iteration(loaders)

@@ -1,0 +1,306 @@
+"""Observability layer: telemetry registry, span tracer, trace schema.
+
+Covers the fleet-observability guarantees:
+
+  * ``Ring`` boundedness — the serving layer's trace buffers can no longer
+    grow host memory without bound (``total`` proves appends kept landing
+    while ``len`` stays capped);
+  * snapshot / Prometheus-exposition round-trip (what CI uploads is what a
+    scraper would parse back);
+  * per-tenant metric isolation under churn — a departed tenant's
+    instruments are dropped, other tenants' survive;
+  * Chrome trace-event schema — balanced properly-nested B/E spans,
+    monotonic per-thread timestamps, stable per-tenant tids — validated by
+    the same ``validate_chrome_trace`` the CI artifact gate runs;
+  * zero-overhead-off — the module span helper returns one shared no-op
+    context manager and a disabled registry hands out one shared null
+    instrument (no per-call allocation on the off path);
+  * service integration — a live ``MuxTuneService`` run emits the spans,
+    admission counters and bounded series the dashboards consume.
+"""
+import json
+import logging
+
+import numpy as np
+import pytest
+
+from repro.obs.log import RateLimitFilter, configure, get_logger
+from repro.obs.telemetry import (DEFAULT_RING_CAP, Ring, TelemetryRegistry,
+                                 _NULL, parse_exposition)
+from repro.obs.tracing import (_NULL_SPAN, SpanTracer, get_tracer, instant,
+                               set_tracer, span, validate_chrome_trace)
+
+
+# ---------------------------------------------------------------------------
+# Ring
+
+
+def test_ring_bounded_under_churn():
+    r = Ring(cap=16)
+    for i in range(200):
+        r.append(i)
+    assert len(r) == 16
+    assert r.total == 200          # lifetime appends kept landing
+    assert list(r) == list(range(184, 200))
+    assert r[0] == 184 and r[-1] == 199
+    assert r[-3:] == [197, 198, 199]
+    assert max(r) == 199 and bool(r)
+    with pytest.raises(IndexError):
+        r[16]
+
+
+def test_ring_is_list_like_before_wrap():
+    r = Ring(cap=8)
+    assert not r and len(r) == 0 and list(r) == []
+    r.append(3.5)
+    assert r and r[-1] == 3.5 and r[0:10] == [3.5]
+
+
+# ---------------------------------------------------------------------------
+# Telemetry registry
+
+
+def test_registry_snapshot_and_exposition_round_trip():
+    reg = TelemetryRegistry(ring_cap=32)
+    reg.counter("service.admission", decision="admit", reason="ok").inc()
+    reg.counter("service.admission", decision="admit", reason="ok").inc(2)
+    reg.counter("service.admission", decision="reject", reason="memory").inc()
+    reg.gauge("service.memory_bytes").set(1234.5)
+    h = reg.histogram("decode.token_seconds", slo_class="0")
+    for v in (0.1, 0.2, 0.3, 0.4):
+        h.observe(v)
+
+    snap = reg.snapshot()
+    assert snap["counters"][
+        "service.admission{decision=admit,reason=ok}"] == 3.0
+    assert snap["gauges"]["service.memory_bytes"] == 1234.5
+    hs = snap["histograms"]["decode.token_seconds{slo_class=0}"]
+    assert hs["count"] == 4 and hs["sum"] == pytest.approx(1.0)
+    assert json.loads(json.dumps(snap)) == snap  # JSON-able as promised
+
+    parsed = parse_exposition(reg.exposition())
+    assert parsed["service_admission_total{decision=admit,reason=ok}"] == 3.0
+    assert parsed["service_memory_bytes"] == 1234.5
+    assert parsed["decode_token_seconds_count{slo_class=0}"] == 4.0
+    assert parsed["decode_token_seconds_sum{slo_class=0}"] == \
+        pytest.approx(1.0)
+    assert parsed["decode_token_seconds{quantile=0.50,slo_class=0}"] == \
+        pytest.approx(h.percentile(50))
+
+
+def test_per_tenant_isolation_under_churn():
+    reg = TelemetryRegistry()
+    reg.gauge("tenant.eq5_bytes", task="a").set(100.0)
+    reg.gauge("tenant.eq5_bytes", task="b").set(200.0)
+    reg.histogram("tenant.loss", task="a").observe(1.0)
+    reg.counter("service.replans").inc()  # unlabeled: never tenant-owned
+
+    va = reg.tenant_view("a")
+    assert va["gauges"]["tenant.eq5_bytes{task=a}"] == 100.0
+    assert "tenant.eq5_bytes{task=b}" not in va["gauges"]
+
+    assert reg.detach_tenant("a") == 2
+    snap = reg.snapshot()
+    assert "tenant.eq5_bytes{task=a}" not in snap["gauges"]
+    assert snap["gauges"]["tenant.eq5_bytes{task=b}"] == 200.0
+    assert snap["counters"]["service.replans"] == 1.0
+    # re-admission starts clean, not from the departed tenant's value
+    assert reg.gauge("tenant.eq5_bytes", task="a").value == 0.0
+
+
+def test_disabled_registry_hands_out_shared_null():
+    reg = TelemetryRegistry(enabled=False)
+    c = reg.counter("x", task="a")
+    assert c is _NULL is reg.gauge("y") is reg.histogram("z")
+    assert reg.series("w") is _NULL
+    c.inc(); reg.histogram("z").observe(1.0); reg.series("w").append(5)
+    assert reg.snapshot() == {"counters": {}, "gauges": {},
+                              "histograms": {}, "series": {}}
+    assert reg.series("w")[-4:] == [] and not reg.series("w")
+
+
+# ---------------------------------------------------------------------------
+# Span tracer + schema
+
+
+def test_tracer_chrome_trace_schema():
+    tr = SpanTracer()
+    with tr.span("service.step", track="service"):
+        with tr.span("engine.iteration", track="engine",
+                     args={"micros": 2}):
+            with tr.span("engine.micro_step", track="engine"):
+                pass
+        tr.instant("tenant.attach", track="tenant:alice")
+        with tr.span("decode.bind", track="tenant:alice"):
+            pass
+    tr.instant("tenant.attach", track="tenant:bob")
+    doc = tr.chrome_trace()
+    stats = validate_chrome_trace(doc, require_phases=[
+        "service.step", "engine.iteration", "engine.micro_step",
+        "decode.bind"])
+    assert stats["spans"] == 4
+    assert set(stats["tenant_tids"]) == {"tenant:alice", "tenant:bob"}
+    # tids are stable: re-asking for a track returns the same lane
+    assert tr.tid_for("tenant:alice") == stats["tenant_tids"]["tenant:alice"]
+    # round-trips through JSON (what --trace-out writes)
+    assert validate_chrome_trace(json.loads(json.dumps(doc)))["spans"] == 4
+
+
+def test_trace_validation_rejects_malformed():
+    tr = SpanTracer()
+    with tr.span("a"):
+        pass
+    # unbalanced: open B without E
+    tr._record("B", "dangling", tr.tid_for("host"), None)
+    with pytest.raises(ValueError, match="unbalanced"):
+        validate_chrome_trace(tr.chrome_trace())
+
+    tr2 = SpanTracer()
+    tid = tr2.tid_for("host")
+    tr2._record("B", "outer", tid, None)
+    tr2._record("B", "inner", tid, None)
+    tr2._record("E", "outer", tid, None)  # closes inner: improper nesting
+    tr2._record("E", "inner", tid, None)
+    with pytest.raises(ValueError, match="nesting"):
+        validate_chrome_trace(tr2.chrome_trace())
+
+    tr3 = SpanTracer()
+    with tr3.span("present.phase"):
+        pass
+    with pytest.raises(ValueError, match="no completed span"):
+        validate_chrome_trace(tr3.chrome_trace(),
+                              require_phases=["missing.phase"])
+
+
+def test_tracer_ring_caps_events():
+    tr = SpanTracer(cap=8)
+    for _ in range(50):
+        with tr.span("s"):
+            pass
+    assert len(tr.events) == 8 and tr.events.total == 100
+    assert tr.chrome_trace()["otherData"]["dropped_events"] == 92
+
+
+def test_module_tracer_off_is_allocation_free():
+    assert not get_tracer().enabled  # default: off
+    s1 = span("engine.micro_step", track="engine")
+    s2 = span("anything.else", args={"k": 1})
+    assert s1 is s2 is _NULL_SPAN    # one shared no-op CM, no allocation
+    instant("x", track="tenant:t")   # no-op, records nothing
+
+
+def test_set_tracer_round_trip():
+    tr = SpanTracer()
+    prev = set_tracer(tr)
+    try:
+        with span("phase.one", track="engine"):
+            instant("mark", track="tenant:t0")
+        assert get_tracer() is tr
+    finally:
+        set_tracer(prev)
+    stats = validate_chrome_trace(tr.chrome_trace(),
+                                  require_phases=["phase.one"])
+    assert stats["tenant_tids"] == {"tenant:t0": tr.tid_for("tenant:t0")}
+    assert get_tracer() is prev
+
+
+# ---------------------------------------------------------------------------
+# Structured logging
+
+
+def test_log_rate_limit_suppresses_floods():
+    f = RateLimitFilter(interval=3600.0, burst=2)
+
+    def rec(msg):
+        return logging.LogRecord("repro.obs.t", logging.INFO, __file__, 1,
+                                 msg, None, None)
+    passed = [f.filter(rec("same %d")) for _ in range(10)]
+    assert passed == [True, True] + [False] * 8
+    assert f.filter(rec("different"))  # other templates unaffected
+    # when the window reopens, the first record carries the drop count
+    f._state[("same %d", logging.INFO)][0] -= 7200.0
+    r = rec("same %d")
+    assert f.filter(r)
+    assert str(r.msg).startswith("[8 similar suppressed]")
+
+
+def test_configure_is_idempotent_and_leveled(monkeypatch):
+    monkeypatch.setenv("REPRO_LOG", "warning")
+    lg = configure()
+    n = len(lg.handlers)
+    assert configure() is lg and len(lg.handlers) == n  # no handler pile-up
+    assert lg.level == logging.WARNING
+    assert get_logger("replay").name == "repro.obs.replay"
+
+
+# ---------------------------------------------------------------------------
+# Service integration (live engine; mirrors the CI serve-smoke gate)
+
+
+def test_service_emits_spans_metrics_and_stays_bounded():
+    from repro.configs import smoke_config
+    from repro.core.task import ParallelismSpec
+    from repro.data.synthetic import make_task
+    from repro.peft.adapters import AdapterConfig
+    from repro.serve import CoServeConfig, MuxTuneService
+
+    telemetry = TelemetryRegistry(ring_cap=8)
+    tracer = SpanTracer()
+    prev = set_tracer(tracer)
+    try:
+        svc = MuxTuneService(
+            smoke_config("llama3.2-3b"), ParallelismSpec(),
+            enable_fusion=False, reserve_slots=4, auto_recalibrate=False,
+            telemetry=telemetry,
+            coserve=CoServeConfig(decode_slots=2, decode_max_len=48,
+                                  max_new_cap=8, slo_seconds=2.0))
+        svc.submit(make_task("a", "sst2", 2, AdapterConfig("lora", rank=4),
+                             seed=0), target_steps=64)
+        svc.submit(make_task("b", "qa", 2, AdapterConfig("lora", rank=8),
+                             seed=1), target_steps=64)
+        first = svc.submit_request("a", np.arange(1, 7), max_new_tokens=2,
+                                   slo_class=1)
+        n_req = 1
+        for _ in range(12):
+            # keep decode traffic flowing so warm (post-compile) timed
+            # segments exist to feed the per-class latency histograms
+            while n_req < 8 and sum(
+                    r.state in ("pending", "decoding")
+                    for r in svc.coserve.requests.values()) < 2:
+                svc.submit_request("a" if n_req % 2 else "b",
+                                   np.arange(1, 7), max_new_tokens=2,
+                                   slo_class=n_req % 2)
+                n_req += 1
+            svc.step()
+    finally:
+        set_tracer(prev)
+
+    stats = validate_chrome_trace(tracer.chrome_trace(), require_phases=[
+        "service.step", "engine.iteration", "engine.micro_step",
+        "engine.sync", "decode.bind", "decode.micro_step"])
+    assert set(stats["tenant_tids"]) == {"tenant:a", "tenant:b"}
+    assert stats["phases"]["service.step"] == 12
+
+    snap = telemetry.snapshot()
+    assert snap["counters"][
+        "service.admission{decision=admit,reason=ok}"] == 2.0
+    assert snap["gauges"]["tenant.eq5_bytes{task=a}"] > 0
+    assert any(k.startswith("decode.token_seconds")
+               for k in snap["histograms"])
+    assert first.state == "done" and first.slo_met is not None
+    acc = svc.coserve.slo_attainment()
+    done = sum(1 for r in svc.coserve.requests.values()
+               if r.state == "done")
+    assert acc["slo_met"] + acc["slo_missed"] == done >= 1
+
+    # boundedness: every registry series respects the tiny ring_cap even
+    # though the run appended more samples than the cap
+    for name, meta in snap["series"].items():
+        assert meta["len"] <= 8, name
+    assert len(svc.decode_trace) <= 8
+    assert svc.decode_trace.total >= len(svc.decode_trace)
+
+    # churn drops the tenant's instruments
+    ndropped = telemetry.detach_tenant("a")
+    assert ndropped >= 1
+    assert "tenant.eq5_bytes{task=a}" not in telemetry.snapshot()["gauges"]
