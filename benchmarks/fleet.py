@@ -1,0 +1,68 @@
+"""Fleet tier benchmark: router decision latency and live-migration downtime.
+
+Drives a real 2-instance ``FleetRouter`` (each instance a full
+``MuxTuneService``) and measures the two fleet-level costs the paper's
+datacenter story depends on:
+
+  * router decision latency — the admission-path cost of scoring every
+    instance (Eq. 5 residency bytes + calibrated saturation) plus the
+    lockstep ``ClusterSim`` oracle query;
+  * live-migration downtime — wall time the tenant is not trainable
+    (drain -> checkpoint-out -> release -> warm-start -> rebind), with the
+    per-phase breakdown in the derived column.
+
+Both rows are advisory (fleet paths sit outside the blocking kernel gate)
+but join the ``--json`` BENCH artifact so cross-PR drift is visible.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_config, csv_row
+
+
+def run() -> list[str]:
+    from repro.core.task import ParallelismSpec
+    from repro.data.synthetic import make_task
+    from repro.fleet import FleetRouter
+    from repro.peft.adapters import AdapterConfig
+    from repro.serve import MuxTuneService
+
+    cfg = bench_config("llama3.2-3b")
+
+    def factory(iid):
+        return MuxTuneService(cfg, ParallelismSpec(), lr=5e-3, n_micro=1,
+                              enable_fusion=False, reserve_slots=4,
+                              auto_recalibrate=False, seed=0)
+
+    fleet = FleetRouter(factory, n_instances=2, policy="best_fit")
+
+    # --- router decision latency: admit a stream of small tenants --------
+    walls = []
+    for i in range(8):
+        task = make_task(f"t{i}", ("sst2", "qa", "rte")[i % 3], 1,
+                         AdapterConfig("lora", rank=4), seed=i)
+        t0 = time.perf_counter()
+        d = fleet.submit(task, target_steps=8)
+        walls.append(time.perf_counter() - t0)
+        if d.outcome == "reject":  # keep measuring placements, not rejects
+            break
+    route_p50 = float(np.median(walls))
+    agree = fleet.oracle_agreement()
+
+    # --- live-migration downtime: warm the tenant, then move it ----------
+    fleet.step()  # at least one trained step so there is state to carry
+    victim = sorted(fleet.placements)[0]
+    rep = fleet.migrate(victim)
+    phases = ";".join(f"{k}={v * 1e6:.0f}us"
+                      for k, v in rep.phase_seconds.items())
+    return [
+        csv_row("fleet/router_decision_us", route_p50 * 1e6,
+                f"placements={len(fleet.placements)};"
+                f"oracle_agreement={agree:.2f}"),
+        csv_row("fleet/migration_downtime_us", rep.wall_seconds * 1e6,
+                f"steps_carried={rep.steps_trained};"
+                f"requests_moved={rep.requests_moved};{phases}"),
+    ]

@@ -61,6 +61,7 @@ MODULES = [
     "roofline",
     "serve_trace",
     "coserve",
+    "fleet",
 ]
 
 

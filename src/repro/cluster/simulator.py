@@ -54,6 +54,7 @@ class Instance:
     hbm_gb: float = 64.0
     backbone_gb: float = 14.0
     active: List[Tuple[float, float]] = field(default_factory=list)  # (end, mem)
+    retired: bool = False  # fleet lockstep: drained + scaled down
 
     def gc(self, now: float) -> None:
         self.active = [(e, m) for (e, m) in self.active if e > now]
@@ -63,6 +64,8 @@ class Instance:
         return base + sum(m for _, m in self.active)
 
     def can_admit(self, task: TaskArrival, max_colocate: int) -> bool:
+        if self.retired:
+            return False
         if self.active and self.backbone != task.backbone:
             return False
         if len(self.active) >= max_colocate:
@@ -109,9 +112,15 @@ class ClusterSim:
         max_colocate: int = 8,
         multiplexed: bool = True,
         policy: str = "fcfs",
+        hbm_gb: float = 64.0,
+        backbone_gb: float = 14.0,
     ):
+        self.chips_per_instance = chips_per_instance
+        self.hbm_gb = hbm_gb
+        self.backbone_gb = backbone_gb
         self.instances = [
-            Instance(i, chips_per_instance)
+            Instance(i, chips_per_instance, hbm_gb=hbm_gb,
+                     backbone_gb=backbone_gb)
             for i in range(n_chips // chips_per_instance)
         ]
         self.max_colocate = max_colocate
@@ -121,6 +130,8 @@ class ClusterSim:
         self.queued_drops = 0
         self.completed = 0
         self.records: List[SimRecord] = []
+        # fleet lockstep: open-ended residencies keyed by tenant id
+        self._lockstep: Dict[str, Tuple[int, Tuple[float, float]]] = {}
 
     def _pick(self, task: TaskArrival) -> Optional[Instance]:
         feas = [i for i in self.instances if i.can_admit(task, self.max_colocate)]
@@ -135,6 +146,54 @@ class ClusterSim:
                     feas = same
             return max(feas, key=lambda i: (len(i.active), i.mem_used()))
         raise ValueError(self.policy)
+
+    # ------------------------------------------------------------------
+    # fleet lockstep oracle (repro.fleet.FleetRouter mirrors live decisions)
+    #
+    # Unlike ``run``'s trace replay, fleet tenants have no predicted end
+    # time — residencies are open-ended (end = +inf) and are closed by an
+    # explicit ``lockstep_depart`` when the live tenant completes, migrates
+    # or cancels.  ``gc`` never reaps an open-ended entry.
+
+    def lockstep_pick(self, task: TaskArrival) -> Optional[int]:
+        """Placement the policy WOULD choose right now (no state change).
+        Returns the instance id, or None when nothing is feasible."""
+        inst = self._pick(task)
+        return None if inst is None else inst.iid
+
+    def lockstep_admit(self, tenant_id: str, task: TaskArrival,
+                       iid: int) -> None:
+        """Mirror a live admission onto instance ``iid``."""
+        if tenant_id in self._lockstep:
+            raise ValueError(f"tenant {tenant_id} already resident in oracle")
+        inst = self.instances[iid]
+        entry = (math.inf, task.mem_gb)
+        inst.backbone = task.backbone
+        inst.active.append(entry)
+        self._lockstep[tenant_id] = (iid, entry)
+
+    def lockstep_depart(self, tenant_id: str) -> None:
+        """Mirror a live departure (completion, cancel, or migration-out)."""
+        iid, entry = self._lockstep.pop(tenant_id)
+        self.instances[iid].active.remove(entry)
+
+    def add_instance(self, chips: Optional[int] = None) -> int:
+        """Mirror a fleet scale-up.  Keeps the iid == list-index invariant
+        the lockstep bookkeeping relies on."""
+        iid = len(self.instances)
+        self.instances.append(Instance(
+            iid, chips or self.chips_per_instance,
+            hbm_gb=self.hbm_gb, backbone_gb=self.backbone_gb))
+        return iid
+
+    def remove_instance(self, iid: int) -> None:
+        """Mirror a fleet drain-and-retire: the instance must be empty.
+        It stays in the list (iid == index invariant) but is marked retired
+        so no policy will place onto it again."""
+        inst = self.instances[iid]
+        if inst.active:
+            raise ValueError(f"instance {iid} still has resident tenants")
+        inst.retired = True
 
     def run(self, trace: Sequence[TaskArrival]) -> Dict[str, float]:
         for idx, task in enumerate(sorted(trace, key=lambda a: a.t_min)):

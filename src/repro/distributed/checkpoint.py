@@ -92,9 +92,16 @@ def restore_checkpoint(
     like: Any,
     shardings: Any = None,
     verify: bool = True,
+    strict_shapes: bool = True,
 ) -> Tuple[Any, Dict]:
     """Restore into the structure of ``like``; optionally device_put with
-    ``shardings`` (elastic: any mesh whose shardings fit the logical shapes)."""
+    ``shardings`` (elastic: any mesh whose shardings fit the logical shapes).
+
+    ``strict_shapes=False`` keeps the structural (leaf-key) contract but
+    returns each leaf at its SAVED shape — the warm-start path needs this
+    because an adapter slice checkpointed out of one tenant cohort can be
+    rank-padded wider or narrower than the restoring stack's slot, and the
+    slot writer (``load_task_tree``) owns the shape-adaptation rules."""
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
@@ -111,7 +118,7 @@ def restore_checkpoint(
         arr = np.load(os.path.join(path, meta["file"]))
         if verify and zlib.crc32(arr.tobytes()) != meta["crc32"]:
             raise IOError(f"checksum mismatch for {key} — corrupt checkpoint")
-        if list(arr.shape) != list(np.shape(leaf)):
+        if strict_shapes and list(arr.shape) != list(np.shape(leaf)):
             raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {np.shape(leaf)}")
         if str(arr.dtype) != meta["dtype"]:
             import ml_dtypes  # lossless narrow back (bf16 saved as f32)
@@ -129,6 +136,7 @@ def restore_latest(
     like: Any,
     shardings: Any = None,
     verify: bool = True,
+    strict_shapes: bool = True,
 ) -> Optional[Tuple[int, Any, Dict]]:
     """Restore the newest committed checkpoint in ``directory`` (or None if
     the directory holds none) — the warm-start entry point for a tenant
@@ -136,7 +144,8 @@ def restore_latest(
     step = latest_step(directory)
     if step is None:
         return None
-    tree, extra = restore_checkpoint(directory, step, like, shardings, verify)
+    tree, extra = restore_checkpoint(directory, step, like, shardings, verify,
+                                     strict_shapes)
     return step, tree, extra
 
 

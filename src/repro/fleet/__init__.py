@@ -1,0 +1,21 @@
+"""Fleet tier: multi-instance router, live tenant migration, autoscaling.
+
+The control plane over N in-process ``MuxTuneService`` instances — the
+cluster simulator's placement policies made real, with the simulator kept
+in lockstep as the placement oracle.
+"""
+from repro.fleet.autoscaler import Autoscaler, AutoscalerConfig
+from repro.fleet.migration import (MigrationProtocol, MigrationReport,
+                                   PHASES)
+from repro.fleet.router import (FleetInstance, FleetRouter, RouteDecision)
+
+__all__ = [
+    "Autoscaler",
+    "AutoscalerConfig",
+    "FleetInstance",
+    "FleetRouter",
+    "MigrationProtocol",
+    "MigrationReport",
+    "PHASES",
+    "RouteDecision",
+]

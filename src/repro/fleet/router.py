@@ -1,0 +1,460 @@
+"""Fleet-wide admission router over N in-process MuxTuneService instances.
+
+The cluster simulator's placement policies (``fcfs`` / ``best_fit`` /
+``backbone_affine``) become REAL here: the router evaluates them against
+live per-instance state — each service's ``AdmissionController`` (Eq. 5
+bytes + calibrated saturation curve) decides feasibility, the policy picks
+among feasible instances — and keeps a ``ClusterSim`` in lockstep as a
+placement oracle, so every live routing decision can be validated against
+the abstract model it came from.
+
+Overflow goes to a bounded fleet-level wait queue (highest priority first,
+FIFO within a class) that re-drains after every fleet step; hard overflow
+rejects.  Live tenant migration and autoscaling are delegated to the
+``MigrationProtocol`` and ``Autoscaler`` but planned here (target
+selection reuses the same policy code path as admission).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.cluster.simulator import ClusterSim, TaskArrival
+from repro.core.task import PEFTTask
+from repro.obs.telemetry import TelemetryRegistry
+from repro.obs.tracing import instant, span
+from repro.serve.inference import InferenceRequest
+from repro.serve.service import (CANCELLED, COMPLETED, MIGRATED, REJECTED,
+                                 MuxTuneService, TenantRecord)
+
+from .migration import MigrationProtocol, MigrationReport
+
+GB = 1024.0 ** 3
+
+
+@dataclass
+class RouteDecision:
+    clock: int
+    task_id: str
+    instance: int          # -1 = not placed (queued or rejected)
+    oracle: int            # ClusterSim's lockstep pick (-1 = infeasible)
+    outcome: str           # admit | queue | reject
+
+    def summary(self) -> Dict[str, Any]:
+        return {"clock": self.clock, "task_id": self.task_id,
+                "instance": self.instance, "oracle": self.oracle,
+                "outcome": self.outcome,
+                "oracle_agrees": self.instance == self.oracle}
+
+
+@dataclass
+class _Pending:
+    task: PEFTTask
+    priority: int
+    target_steps: int
+    warm_start_dir: Optional[str]
+    seq: int
+
+
+@dataclass
+class FleetInstance:
+    """One managed service instance plus its fleet-side bookkeeping."""
+    iid: int
+    service: MuxTuneService
+    backbone: str
+    admitted: int = 0
+    migrated_in: int = 0
+    migrated_out: int = 0
+    retired: bool = False
+
+    @property
+    def n_resident(self) -> int:
+        return len(self.service.resident)
+
+    def resident_bytes(self) -> float:
+        return float(self.service.admission.resident_memory(
+            self.service.resident))
+
+    def can_admit(self, task: PEFTTask) -> bool:
+        if self.retired:
+            return False
+        return bool(self.service.admission.check(self.service.resident,
+                                                 task))
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "iid": self.iid,
+            "retired": self.retired,
+            "resident": self.service.resident_ids,
+            "n_resident": self.n_resident,
+            "resident_bytes": self.resident_bytes(),
+            "admitted": self.admitted,
+            "migrated_in": self.migrated_in,
+            "migrated_out": self.migrated_out,
+            "clock": self.service.clock,
+        }
+
+
+class FleetRouter:
+    """The fleet control plane: admission, placement, migration planning.
+
+    ``factory(iid) -> MuxTuneService`` builds instances (all config-
+    identical: the fleet assumes one backbone geometry and one decode-pool
+    geometry, which is what makes migration and request adoption safe).
+    """
+
+    def __init__(
+        self,
+        factory: Callable[[int], MuxTuneService],
+        n_instances: int = 2,
+        policy: str = "best_fit",
+        max_queue: int = 32,
+        backbone: str = "default",
+        telemetry: Optional[TelemetryRegistry] = None,
+        migration: Optional[MigrationProtocol] = None,
+        oracle: bool = True,
+    ):
+        if policy not in ("fcfs", "best_fit", "backbone_affine"):
+            raise ValueError(policy)
+        self.factory = factory
+        self.policy = policy
+        self.max_queue = max_queue
+        self.backbone = backbone
+        self.telemetry = telemetry or TelemetryRegistry()
+        self.migration = migration or MigrationProtocol(
+            telemetry=self.telemetry)
+        self.use_oracle = oracle
+        self.instances: Dict[int, FleetInstance] = {}
+        self.retired_instances: List[FleetInstance] = []
+        self.queue: List[_Pending] = []
+        self.placements: Dict[str, int] = {}      # task_id -> live iid
+        self.decisions: List[RouteDecision] = []
+        self.migrations: List[MigrationReport] = []
+        self.rejected: List[str] = []
+        self.autoscaler = None                    # installed by Autoscaler
+        self.clock = 0
+        self._next_iid = 0
+        self._seq = 0
+        self._arrivals: Dict[str, TaskArrival] = {}  # oracle-side footprints
+        self.sim: Optional[ClusterSim] = None
+        self._backbone_bytes = 0.0
+        for _ in range(n_instances):
+            self.spawn()
+
+    # ------------------------------------------------------------------
+    # instance lifecycle
+
+    def spawn(self) -> FleetInstance:
+        """Provision one instance (and mirror it into the oracle)."""
+        iid = self._next_iid
+        self._next_iid += 1
+        svc = self.factory(iid)
+        inst = FleetInstance(iid, svc, self.backbone)
+        self.instances[iid] = inst
+        if self.sim is None:
+            # oracle geometry from the first live instance: the Eq. 5
+            # budget and backbone bytes the AdmissionController gates with
+            self._backbone_bytes = float(
+                svc.planner.cost_model([]).stage_memory([]))
+            self.sim = ClusterSim(
+                n_chips=0,
+                chips_per_instance=max(svc.parallelism.total_chips, 1),
+                max_colocate=svc.admission_config.max_tenants,
+                policy=self.policy,
+                hbm_gb=svc.admission_config.memory_budget / GB,
+                backbone_gb=self._backbone_bytes / GB,
+            )
+        sim_iid = self.sim.add_instance()
+        assert sim_iid == iid, "oracle instance ids out of lockstep"
+        self.telemetry.gauge("fleet.instances").set(float(len(self.instances)))
+        instant("fleet.spawn", track="fleet", args={"instance": iid})
+        return inst
+
+    def retire(self, iid: int) -> None:
+        """Retire an EMPTY instance (mirror into the oracle)."""
+        inst = self.instances[iid]
+        if inst.n_resident or any(
+            i == iid for i in self.placements.values()):
+            raise ValueError(f"instance {iid} still has resident tenants")
+        del self.instances[iid]
+        inst.retired = True
+        self.retired_instances.append(inst)
+        self.sim.remove_instance(iid)
+        self.telemetry.gauge("fleet.instances").set(float(len(self.instances)))
+        instant("fleet.retire", track="fleet", args={"instance": iid})
+
+    def drain_and_retire(self, iid: int) -> bool:
+        """Migrate every resident tenant off ``iid``, then retire it.
+        Returns False (instance untouched beyond completed migrations) when
+        some tenant has no feasible target."""
+        resident = [tid for tid, i in self.placements.items() if i == iid]
+        for tid in resident:
+            try:
+                self.migrate(tid)
+            except ValueError:
+                return False
+        self.retire(iid)
+        return True
+
+    # ------------------------------------------------------------------
+    # placement policy (mirrors ClusterSim._pick against live state)
+
+    def _feasible(self, task: PEFTTask,
+                  exclude: Optional[set] = None) -> List[FleetInstance]:
+        out = []
+        for iid in sorted(self.instances):
+            if exclude and iid in exclude:
+                continue
+            inst = self.instances[iid]
+            if inst.n_resident and inst.backbone != self.backbone:
+                continue
+            if inst.can_admit(task):
+                out.append(inst)
+        return out
+
+    def _pick_instance(self, task: PEFTTask,
+                       exclude: Optional[set] = None
+                       ) -> Optional[FleetInstance]:
+        feas = self._feasible(task, exclude)
+        if not feas:
+            return None
+        if self.policy == "fcfs":
+            return feas[0]
+        # best_fit / backbone_affine: pack tightest (most residents, then
+        # most bytes) — identical key, identical tie-break (lowest iid) to
+        # the simulator's max() over its feasible list
+        if self.policy == "backbone_affine":
+            same = [i for i in feas
+                    if i.backbone == self.backbone and i.n_resident]
+            if same:
+                feas = same
+        return max(feas, key=lambda i: (i.n_resident, i.resident_bytes()))
+
+    def _arrival_for(self, task: PEFTTask, target_steps: int) -> TaskArrival:
+        """The oracle-side footprint of a live task: Eq. 5 bytes of the
+        task alone (backbone share subtracted — the sim adds its own)."""
+        ref = next(iter(self.instances.values())).service
+        solo = float(ref.admission.resident_memory([task]))
+        return TaskArrival(
+            t_min=float(self.clock), duration_min=float(max(target_steps, 1)),
+            backbone=self.backbone,
+            mem_gb=max(solo - self._backbone_bytes, 0.0) / GB)
+
+    # ------------------------------------------------------------------
+    # tenant lifecycle
+
+    def submit(self, task: PEFTTask, priority: int = 0,
+               target_steps: int = 10,
+               warm_start_dir: Optional[str] = None) -> RouteDecision:
+        """Route one tenant fleet-wide: place, queue, or reject."""
+        with span("fleet.route", track="fleet",
+                  args={"task": task.task_id, "policy": self.policy}):
+            arrival = self._arrival_for(task, target_steps)
+            self._arrivals[task.task_id] = arrival
+            oracle = -1
+            if self.use_oracle:
+                pick = self.sim.lockstep_pick(arrival)
+                oracle = -1 if pick is None else pick
+            inst = self._pick_instance(task)
+            if inst is not None:
+                self._admit(inst, task, priority, target_steps,
+                            warm_start_dir, arrival)
+                outcome, iid = "admit", inst.iid
+            elif len(self.queue) < self.max_queue:
+                self._seq += 1
+                self.queue.append(_Pending(task, priority, target_steps,
+                                           warm_start_dir, self._seq))
+                outcome, iid = "queue", -1
+            else:
+                self.rejected.append(task.task_id)
+                outcome, iid = "reject", -1
+        decision = RouteDecision(self.clock, task.task_id, iid, oracle,
+                                 outcome)
+        self.decisions.append(decision)
+        self.telemetry.counter("fleet.route", policy=self.policy,
+                               outcome=outcome).inc()
+        if self.use_oracle and outcome != "queue":
+            self.telemetry.counter(
+                "fleet.oracle",
+                agreement=str(iid == oracle).lower()).inc()
+        return decision
+
+    def _admit(self, inst: FleetInstance, task: PEFTTask, priority: int,
+               target_steps: int, warm_start_dir: Optional[str],
+               arrival: TaskArrival) -> TenantRecord:
+        rec = inst.service.submit(task, priority=priority,
+                                  target_steps=target_steps,
+                                  warm_start_dir=warm_start_dir)
+        inst.admitted += 1
+        inst.backbone = self.backbone
+        self.placements[task.task_id] = inst.iid
+        self.sim.lockstep_admit(task.task_id, arrival, inst.iid)
+        instant("fleet.admit", track="fleet",
+                args={"task": task.task_id, "instance": inst.iid})
+        return rec
+
+    def submit_request(self, task_id: str, prompt, **kwargs
+                       ) -> InferenceRequest:
+        """Route an inference request to the tenant's owning instance."""
+        iid = self.placements.get(task_id)
+        if iid is None:
+            raise KeyError(f"tenant {task_id} is not placed on any instance")
+        return self.instances[iid].service.submit_request(task_id, prompt,
+                                                          **kwargs)
+
+    def record(self, task_id: str) -> TenantRecord:
+        """The tenant's CURRENT record: its live instance while placed,
+        otherwise its final record — a MIGRATED stub (superseded by the
+        record on the migration target) is only returned when no other
+        instance holds the tenant."""
+        iid = self.placements.get(task_id)
+        if iid is not None:
+            return self.instances[iid].service.tenants[task_id]
+        stub = None
+        for inst in list(self.instances.values()) + self.retired_instances:
+            rec = inst.service.tenants.get(task_id)
+            if rec is None:
+                continue
+            if rec.state != MIGRATED:
+                return rec
+            stub = rec
+        if stub is not None:
+            return stub
+        raise KeyError(task_id)
+
+    # ------------------------------------------------------------------
+    # migration
+
+    def migrate(self, task_id: str,
+                target_iid: Optional[int] = None) -> MigrationReport:
+        """Live-migrate one tenant; the target defaults to what the
+        placement policy picks among the OTHER instances."""
+        src_iid = self.placements[task_id]
+        src = self.instances[src_iid]
+        task = src.service.tenants[task_id].task
+        if target_iid is None:
+            dst = self._pick_instance(task, exclude={src_iid})
+            if dst is None:
+                raise ValueError(
+                    f"no feasible migration target for {task_id}")
+        else:
+            dst = self.instances[target_iid]
+        report = self.migration.migrate(src.service, dst.service, task_id,
+                                        source_iid=src_iid,
+                                        target_iid=dst.iid)
+        self.sim.lockstep_depart(task_id)
+        self.sim.lockstep_admit(task_id, self._arrivals[task_id], dst.iid)
+        self.placements[task_id] = dst.iid
+        src.migrated_out += 1
+        dst.migrated_in += 1
+        dst.backbone = self.backbone
+        self.migrations.append(report)
+        return report
+
+    # ------------------------------------------------------------------
+    # fleet step loop
+
+    def step(self) -> None:
+        """One fleet tick: step every instance, reconcile departures with
+        the oracle, re-drain the fleet queue, let the autoscaler act."""
+        with span("fleet.step", track="fleet",
+                  args={"clock": self.clock,
+                        "instances": len(self.instances)}):
+            for iid in sorted(self.instances):
+                self.instances[iid].service.step()
+            self.clock += 1
+            self._reconcile_departures()
+            self._drain_queue()
+            if self.autoscaler is not None:
+                self.autoscaler.tick(self)
+
+    def _reconcile_departures(self) -> None:
+        for tid, iid in list(self.placements.items()):
+            inst = self.instances.get(iid)
+            rec = inst.service.tenants.get(tid) if inst else None
+            if rec is not None and rec.state in (COMPLETED, CANCELLED,
+                                                 REJECTED):
+                del self.placements[tid]
+                self.sim.lockstep_depart(tid)
+                self.telemetry.counter("fleet.departures",
+                                       state=rec.state).inc()
+
+    def _drain_queue(self) -> None:
+        """Re-route queued tenants, highest priority first (FIFO within a
+        class); each successful placement is recorded as a fresh decision."""
+        if not self.queue:
+            return
+        still: List[_Pending] = []
+        for p in sorted(self.queue, key=lambda p: (-p.priority, p.seq)):
+            inst = self._pick_instance(p.task)
+            if inst is None:
+                still.append(p)
+                continue
+            arrival = self._arrivals[p.task.task_id]
+            oracle = -1
+            if self.use_oracle:
+                pick = self.sim.lockstep_pick(arrival)
+                oracle = -1 if pick is None else pick
+            self._admit(inst, p.task, p.priority, p.target_steps,
+                        p.warm_start_dir, arrival)
+            decision = RouteDecision(self.clock, p.task.task_id, inst.iid,
+                                     oracle, "admit")
+            self.decisions.append(decision)
+            self.telemetry.counter("fleet.route", policy=self.policy,
+                                   outcome="drain_admit").inc()
+            if self.use_oracle:
+                self.telemetry.counter(
+                    "fleet.oracle",
+                    agreement=str(inst.iid == oracle).lower()).inc()
+        still.sort(key=lambda p: p.seq)
+        self.queue = still
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(
+            inst.service.resident or len(inst.service.queue)
+            for inst in self.instances.values())
+
+    def run(self, max_iters: int = 512) -> int:
+        """Step until the fleet is idle (or ``max_iters``); returns the
+        number of steps taken."""
+        n = 0
+        while self.has_work() and n < max_iters:
+            self.step()
+            n += 1
+        return n
+
+    # ------------------------------------------------------------------
+    # accounting
+
+    def oracle_agreement(self) -> float:
+        placed = [d for d in self.decisions if d.outcome != "queue"]
+        if not placed:
+            return 1.0
+        agree = sum(1 for d in placed if d.instance == d.oracle)
+        return agree / len(placed)
+
+    def accounting(self) -> Dict[str, Any]:
+        return {
+            "clock": self.clock,
+            "policy": self.policy,
+            "instances": {str(i.iid): i.summary()
+                          for i in self.instances.values()},
+            "retired_instances": [i.summary()
+                                  for i in self.retired_instances],
+            "placements": dict(self.placements),
+            "queued": len(self.queue),
+            "rejected": list(self.rejected),
+            "decisions": [d.summary() for d in self.decisions],
+            "oracle_agreement": self.oracle_agreement(),
+            "migrations": [m.summary() for m in self.migrations],
+            "autoscaler": (self.autoscaler.accounting()
+                           if self.autoscaler else None),
+        }
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """Fleet registry + every instance's registry (incl. retired)."""
+        per_inst = {
+            str(i.iid): i.service.telemetry.snapshot()
+            for i in list(self.instances.values()) + self.retired_instances
+        }
+        return {"fleet": self.telemetry.snapshot(), "instances": per_inst}

@@ -22,7 +22,9 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("trace", help="Chrome trace-event JSON file")
     ap.add_argument("--require-phase", nargs="*", default=[],
-                    help="span names that must each appear >= 1 time")
+                    action="extend",
+                    help="span names that must each appear >= 1 time "
+                         "(repeatable; occurrences accumulate)")
     ap.add_argument("--require-tenants", type=int, default=0,
                     help="minimum number of distinct tenant tracks")
     args = ap.parse_args(argv)

@@ -12,6 +12,8 @@ from repro.serve.admission import (  # noqa: F401
 from repro.serve.service import (  # noqa: F401
     CANCELLED,
     COMPLETED,
+    MIGRATED,
+    MigrationTicket,
     MuxTuneService,
     QUEUED,
     REJECTED,
@@ -25,6 +27,7 @@ from repro.serve.inference import (  # noqa: F401
 )
 from repro.serve.replay import (  # noqa: F401
     arrival_to_task,
+    replay_fleet,
     replay_trace,
     tiny_trace,
 )

@@ -62,6 +62,10 @@ class CoServeConfig:
     min_tokens: int = 1          # decode floor per iteration when traffic waits
     max_tokens_per_iter: int = 64
     latency_window: int = 512    # per-token latency samples kept for p50/p99
+    # SLO-class preemption: when a strictly higher-class (lower number)
+    # request is queued and no pool row is free, evict the lowest-class
+    # in-flight row and requeue it via the pool-generation recovery path
+    preempt: bool = True
     # per-request completion deadline in service ITERATIONS from submit,
     # indexed by SLO class (the last entry covers higher classes).  A DONE
     # request whose makespan beat its class deadline counts as SLO-met;
@@ -168,6 +172,8 @@ class DecodeScheduler:
         # per-micro-step seconds and decoding-row count (DecodeSample feed)
         self.last_step_seconds: Optional[float] = None
         self.last_step_rows = 0
+        # SLO-class preemptions performed (victim rows requeued, not lost)
+        self.preemptions = 0
 
     # ------------------------------------------------------------------
     # request lifecycle
@@ -208,6 +214,47 @@ class DecodeScheduler:
         for rid, req in list(self.requests.items()):
             if req.task_id == task_id and req.state in (PENDING, DECODING):
                 self.cancel(rid, clock, reason="tenant_departed")
+
+    def drain_task(self, task_id: str) -> List[InferenceRequest]:
+        """Live migration: remove a tenant's queued and in-flight requests
+        from this scheduler WITHOUT cancelling them.  In-flight rows are
+        freed via the same reset the pool-generation recovery path uses;
+        the returned request objects are re-submitted on the target
+        instance (``adopt``), where the bind re-prefills the prompt and the
+        seeded sampler replays the same token sequence."""
+        drained: List[InferenceRequest] = []
+        for rid, req in list(self.requests.items()):
+            if req.task_id != task_id or req.state not in (PENDING, DECODING):
+                continue
+            if req.state == DECODING and req.row >= 0:
+                self.rows[req.row] = None
+            if rid in self.queue:
+                self.queue.remove(rid)
+            req.state, req.row, req.bind_clock = PENDING, -1, -1
+            req.tokens_out = None
+            del self.requests[rid]
+            drained.append(req)
+            instant("request.drain", track=f"tenant:{task_id}",
+                    args={"request": rid})
+        if drained:
+            ids = {r.request_id for r in drained}
+            self._pending_binds = [
+                (row, req) for row, req in self._pending_binds
+                if req.request_id not in ids]
+        return drained
+
+    def adopt(self, request: InferenceRequest) -> InferenceRequest:
+        """Live migration: accept a request drained from another instance.
+        It queues like a fresh submission (length caps were validated at
+        original submit; the pool geometry is config-identical fleet-wide)."""
+        if request.request_id in self.requests and \
+                self.requests[request.request_id].state in (PENDING, DECODING):
+            raise ValueError(f"request {request.request_id} already live")
+        self.requests[request.request_id] = request
+        self.queue.append(request.request_id)
+        instant("request.adopt", track=f"tenant:{request.task_id}",
+                args={"request": request.request_id})
+        return request
 
     def has_traffic(self) -> bool:
         return bool(self.queue) or any(r is not None for r in self.rows)
@@ -255,8 +302,50 @@ class DecodeScheduler:
                 break
             self._claim(rid, r)
             self._pending_binds.append((r, self.requests[rid]))
+        if c.preempt:
+            self._preempt_for_priority()
         self.last_bind_count = len(self._pending_binds)
         self._refresh_row_ctx(engine)
+
+    def _preempt_for_priority(self) -> None:
+        """SLO-class preemption: while a strictly higher-class request is
+        queued with no free row, evict the LOWEST-class in-flight row and
+        requeue its request via the pool-generation recovery reset (state
+        back to PENDING, row -1, front of queue — on rebind the prompt
+        re-prefills and the seeded sampler regenerates identically).  Rows
+        claimed by this iteration's staged binds are never victims."""
+        while True:
+            rid = self._next_candidate()
+            if rid is None or any(r is None for r in self.rows):
+                return
+            cand = self.requests[rid]
+            staged = {req.request_id for _, req in self._pending_binds}
+            victims = [
+                (self.requests[h].slo_class, self.requests[h].submit_clock, r)
+                for r, h in enumerate(self.rows)
+                if h is not None and h not in staged
+                and self.requests[h].state == DECODING
+            ]
+            if not victims:
+                return
+            vcls, _, vrow = max(victims)
+            if vcls <= cand.slo_class:
+                return  # no strictly lower-class victim: nothing to evict
+            victim = self.requests[self.rows[vrow]]
+            victim.state, victim.row, victim.bind_clock = PENDING, -1, -1
+            victim.tokens_out = None
+            self.queue.appendleft(victim.request_id)
+            self.rows[vrow] = None
+            self.preemptions += 1
+            self.telemetry.counter(
+                "decode.preemptions", slo_class=str(victim.slo_class)).inc()
+            instant("request.preempt", track=f"tenant:{victim.task_id}",
+                    args={"request": victim.request_id,
+                          "by": cand.request_id,
+                          "victim_class": victim.slo_class,
+                          "winner_class": cand.slo_class})
+            self._claim(rid, vrow)
+            self._pending_binds.append((vrow, cand))
 
     def _next_candidate(self) -> Optional[str]:
         """Highest-priority queued request whose tenant is resident: lowest
@@ -555,6 +644,7 @@ class DecodeScheduler:
             "decode_tokens": self.total_tokens,
             "queued_requests": len(self.queue),
             "mid_iteration_binds": self.mid_iteration_binds,
+            "preemptions": self.preemptions,
         }
         out.update(self.latency_percentiles())
         out.update(self.slo_attainment())

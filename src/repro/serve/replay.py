@@ -40,7 +40,7 @@ from repro.obs.log import get_logger
 from repro.obs.tracing import SpanTracer, set_tracer
 from repro.peft.adapters import ADAPTER_TUNING, LORA, AdapterConfig
 from repro.serve.admission import AdmissionConfig
-from repro.serve.service import COMPLETED, MuxTuneService
+from repro.serve.service import COMPLETED, RUNNING, MuxTuneService
 
 _DATASETS = ("sst2", "qa", "rte")
 log = get_logger("replay")
@@ -167,6 +167,164 @@ def replay_trace(
     return out
 
 
+def _try_force_migration(fleet, spawn_if_needed=False):
+    """Best-effort forced migration for smoke runs: pick a RUNNING tenant
+    with enough training left that any in-flight decode request finishes
+    after the move, and migrate it wherever the policy allows.
+
+    ``spawn_if_needed`` is the drain-loop last resort: if the autoscaler
+    already shrank the fleet to one instance, spawn a target — the point
+    of the hook is to guarantee migration coverage.  The mid-replay call
+    site keeps it off so the spawn never masks the autoscaler's own
+    queue-pressure scale-up."""
+    if len(fleet.instances) < 2:
+        if not spawn_if_needed:
+            return None
+        fleet.spawn()
+    for tid in sorted(fleet.placements):
+        rec = fleet.record(tid)
+        if rec.state != RUNNING or rec.target_steps - rec.steps_trained <= 4:
+            continue
+        try:
+            return fleet.migrate(tid)
+        except ValueError:
+            continue
+    return None
+
+
+def replay_fleet(
+    trace: Sequence[TaskArrival],
+    cfg=None,
+    parallelism: Optional[ParallelismSpec] = None,
+    iters_per_min: float = 1.0,
+    max_drain_iters: int = 256,
+    admission: Optional[AdmissionConfig] = None,
+    seed: int = 0,
+    requests_per_min: int = 0,
+    n_instances: int = 2,
+    policy: str = "best_fit",
+    autoscale: bool = False,
+    autoscaler_config=None,
+    force_migration: bool = False,
+) -> Dict:
+    """Replay ``trace`` through an N-instance fleet: the ``FleetRouter``
+    places arrivals with ``policy`` against live admission state (the
+    ``ClusterSim`` oracle in lockstep), inference requests route to each
+    tenant's owning instance, and — optionally — the autoscaler provisions
+    and retires instances while ``force_migration`` guarantees at least one
+    live migration lands in the trace (smoke-run determinism).
+
+    Fusion stays off fleet-wide so a migrated tenant's data stream (and
+    therefore its loss trajectory) is exactly its solo trajectory."""
+    from repro.fleet import Autoscaler, FleetRouter
+
+    cfg = cfg or smoke_config("llama3.2-3b")
+    par = parallelism or ParallelismSpec()
+
+    def factory(iid: int) -> MuxTuneService:
+        return MuxTuneService(cfg, par, admission=admission, seed=seed,
+                              reserve_slots=4, enable_fusion=False)
+
+    fleet = FleetRouter(factory, n_instances=n_instances, policy=policy)
+    if autoscale:
+        fleet.autoscaler = Autoscaler(autoscaler_config)
+
+    arrivals = sorted(trace, key=lambda a: a.t_min)
+    pending = list(enumerate(arrivals))
+    horizon = max((a.t_min for a in arrivals), default=0.0) + 1.0
+    req_rng = np.random.RandomState(seed + 1)
+    injected = 0
+    forced: List = []
+    t = 0.0
+    while t <= horizon:
+        while pending and pending[0][1].t_min <= t:
+            idx, arr = pending.pop(0)
+            target = max(1, int(round(arr.duration_min * iters_per_min)))
+            fleet.submit(arrival_to_task(arr, idx), target_steps=target)
+        placed = sorted(fleet.placements)
+        for i in range(requests_per_min if placed else 0):
+            tid = placed[(injected + i) % len(placed)]
+            prompt = req_rng.randint(1, 64, size=int(req_rng.randint(3, 9)))
+            fleet.submit_request(tid, prompt, max_new_tokens=4,
+                                 slo_class=(injected + i) % 2)
+        injected += requests_per_min if placed else 0
+        if force_migration and not forced and t >= horizon / 2:
+            rep = _try_force_migration(fleet)
+            if rep is not None:
+                forced.append(rep)
+        for _ in range(max(1, int(round(iters_per_min)))):
+            fleet.step()
+        t += 1.0
+    for _ in range(max_drain_iters):
+        if not fleet.has_work():
+            break
+        if force_migration and not forced:
+            rep = _try_force_migration(fleet, spawn_if_needed=True)
+            if rep is not None:
+                forced.append(rep)
+        fleet.step()
+    if autoscale:
+        # a few idle ticks so the utilization floor can retire instances
+        # the drain loop (which exits on no-work) never reaches
+        extra = fleet.autoscaler.config.cooldown_ticks + 3
+        for _ in range(extra):
+            fleet.step()
+
+    acct = fleet.accounting()
+    all_insts = list(fleet.instances.values()) + fleet.retired_instances
+    completed = {
+        tid: rec
+        for inst in all_insts
+        for tid, rec in inst.service.tenants.items()
+        if rec.state == COMPLETED
+    }
+    # zero-drop guarantee: every request a migration moved must have
+    # completed (or still be live) on SOME instance — never cancelled
+    moved_ids = {rid for m in fleet.migrations for rid in m.request_ids}
+    dropped = []
+    for inst in all_insts:
+        for rid, req in inst.service.coserve.requests.items():
+            if rid in moved_ids and req.state == "cancelled":
+                dropped.append(rid)
+    makespans = [r.makespan for r in completed.values() if r.makespan >= 0]
+    out = {
+        "fleet": acct,
+        "real_summary": {
+            "instances": n_instances,
+            "live_instances": len(fleet.instances),
+            "retired_instances": len(fleet.retired_instances),
+            "policy": policy,
+            "completed": len(completed),
+            "mean_makespan_iters": float(np.mean(makespans)) if makespans else 0.0,
+            "injected_requests": injected,
+            "migrations": len(fleet.migrations),
+            "forced_migrations": len(forced),
+            "requests_moved": sum(m.requests_moved for m in fleet.migrations),
+            "dropped_moved_requests": dropped,
+            "oracle_agreement": acct["oracle_agreement"],
+            "scale_ups": (fleet.autoscaler.accounting()["scale_ups"]
+                          if autoscale else 0),
+            "scale_downs": (fleet.autoscaler.accounting()["scale_downs"]
+                            if autoscale else 0),
+            # per-instance breakdown: fleet replays debuggable from the
+            # metrics JSON alone
+            "per_instance": {
+                str(i.iid): {"admitted": i.admitted,
+                             "migrated_in": i.migrated_in,
+                             "migrated_out": i.migrated_out,
+                             "retired": i.retired,
+                             "completed": sum(
+                                 1 for r in i.service.tenants.values()
+                                 if r.state == COMPLETED)}
+                for i in all_insts
+            },
+        },
+        # live router handle (for --metrics-out); NOT JSON-serializable
+        "_fleet": fleet,
+    }
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", metavar="PATH", default=None,
@@ -181,10 +339,26 @@ def main() -> None:
     ap.add_argument("--requests-per-min", type=int, default=2,
                     help="inference requests injected per simulated minute "
                          "against resident tenants (0 disables co-serving)")
+    ap.add_argument("--instances", type=int, default=1,
+                    help="fleet size; > 1 replays through the FleetRouter "
+                         "(1 keeps the single-instance driver unchanged)")
+    ap.add_argument("--policy", default="best_fit",
+                    choices=["fcfs", "best_fit", "backbone_affine"],
+                    help="fleet placement policy (--instances > 1)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="enable the cost-model-driven autoscaler "
+                         "(--instances > 1)")
+    ap.add_argument("--force-migration", action="store_true",
+                    help="guarantee >= 1 live migration during the replay "
+                         "(--instances > 1; smoke-run determinism)")
     args = ap.parse_args()
     if args.philly:
         trace = philly_style_trace(horizon_min=args.tenants * 2.0,
                                    rate_per_min=0.5, mean_dur_min=5.0)
+    elif args.instances > 1:
+        # longer-lived tenants: a mid-replay forced migration needs a
+        # candidate with enough training left to survive the move
+        trace = tiny_trace(args.tenants, gap_min=1.0, dur_min=6.0)
     else:
         trace = tiny_trace(args.tenants)
     tracer = prev = None
@@ -192,22 +366,40 @@ def main() -> None:
         tracer = SpanTracer()
         prev = set_tracer(tracer)
     try:
-        report = replay_trace(trace, requests_per_min=args.requests_per_min)
+        if args.instances > 1:
+            report = replay_fleet(trace,
+                                  requests_per_min=args.requests_per_min,
+                                  n_instances=args.instances,
+                                  policy=args.policy,
+                                  autoscale=args.autoscale,
+                                  force_migration=args.force_migration)
+        else:
+            report = replay_trace(trace,
+                                  requests_per_min=args.requests_per_min)
     finally:
         if tracer is not None:
             set_tracer(prev)
-    print(json.dumps({"real_summary": report["real_summary"],
-                      "sim": report["sim"],
-                      "validation": report["validation"]}, indent=2))
+    head = {"real_summary": report["real_summary"]}
+    for k in ("sim", "validation"):
+        if k in report:
+            head[k] = report[k]
+    print(json.dumps(head, indent=2))
     if tracer is not None:
         tracer.save(args.trace_out)
         log.info("wrote trace %s (%d events)", args.trace_out,
                  len(tracer.events))
     if args.metrics_out:
-        report["_telemetry"].save_snapshot(args.metrics_out)
+        fleet = report.get("_fleet")
+        if fleet is not None:
+            with open(args.metrics_out, "w") as f:
+                json.dump(fleet.metrics_snapshot(), f, indent=2,
+                          default=float)
+        else:
+            report["_telemetry"].save_snapshot(args.metrics_out)
         log.info("wrote metrics snapshot %s", args.metrics_out)
     if args.json:
         report.pop("_telemetry", None)
+        report.pop("_fleet", None)
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2, default=float)
         log.info("wrote %s", args.json)

@@ -42,6 +42,7 @@ from repro.core.task import ParallelismSpec, PEFTTask
 from repro.data.loader import HTaskLoader
 from repro.data.synthetic import token_stream
 from repro.distributed.checkpoint import restore_latest, save_checkpoint
+from repro.train.optimizer import AdamWState
 from repro.obs.telemetry import TelemetryRegistry
 from repro.obs.tracing import instant, span
 from repro.serve.admission import (
@@ -60,6 +61,38 @@ RUNNING = "running"
 COMPLETED = "completed"
 CANCELLED = "cancelled"
 REJECTED = "rejected"
+MIGRATED = "migrated"  # moved to another instance (fleet tier)
+
+
+@dataclass
+class MigrationTicket:
+    """In-process handoff bundle for live tenant migration (fleet tier).
+
+    Produced by ``release_tenant`` on the source instance and consumed by
+    ``migrate_in`` on the target.  Besides the checkpoint directory (adapter
+    slice + AdamW moment slices + per-slot step count, written atomically by
+    ``checkpoint_out_tenant``), it carries the tenant's LIVE token-stream
+    generator — the target continues the training-data sequence exactly
+    where the source left off, which is what makes the post-migration loss
+    trajectory solo-parity — plus the drained inference requests awaiting
+    re-binding and the accounting the target record inherits."""
+
+    task: PEFTTask
+    priority: int
+    target_steps: int
+    ckpt_dir: str
+    steps_trained: int
+    tokens: int
+    effective_tokens: int
+    decode_tokens: int
+    losses: List[float]
+    stream: Any
+    requests: List[InferenceRequest]
+    source_clock: int
+    # the source stack's rank for the task's kind: the tenant TRAINED at
+    # this width (rank-padded by co-residents), so the target's stack must
+    # open at least as wide for the artifact to load exactly
+    stack_rank: int = 0
 
 
 @dataclass
@@ -313,6 +346,133 @@ class MuxTuneService:
         return rec
 
     # ------------------------------------------------------------------
+    # live migration hooks (fleet tier: repro.fleet.migration drives these)
+
+    def drain_tenant(self, task_id: str) -> List[InferenceRequest]:
+        """Migration phase 1 (drain): pull the tenant's live decode requests
+        out of the scheduler via the pool-generation recovery semantics —
+        in-flight rows are freed and the request objects leave this
+        scheduler to be adopted on the target.  Nothing is cancelled."""
+        rec = self.tenants[task_id]
+        if rec.state != RUNNING:
+            raise ValueError(f"tenant {task_id} not running ({rec.state})")
+        return self.coserve.drain_task(task_id)
+
+    def checkpoint_out_tenant(self, task_id: str, ckpt_dir: str,
+                              include_optimizer: bool = True) -> str:
+        """Migration phase 2 (checkpoint out): atomically checkpoint one
+        RESIDENT tenant's adapter slice — with ``include_optimizer`` also
+        its AdamW moment slices and per-slot step count, the layout a
+        migration warm-start restores for an exactly solo-parity loss
+        trajectory on the target instance."""
+        rec = self.tenants[task_id]
+        reg = self.gen.registered
+        gi = reg.task_index(task_id)
+        sub: Any = slice_task_tree(self.cfg, reg.mta, reg.adapter_params, gi)
+        extra: Dict[str, Any] = {"task_id": task_id,
+                                 "steps_trained": rec.steps_trained,
+                                 "losses": rec.losses[-8:]}
+        if include_optimizer:
+            sub = {
+                "params": sub,
+                "m": slice_task_tree(self.cfg, reg.mta, reg.opt_state.m, gi),
+                "v": slice_task_tree(self.cfg, reg.mta, reg.opt_state.v, gi),
+            }
+            kind = rec.task.adapter.kind
+            slot = int(reg.mta.task_slot[gi])
+            extra["slot_step"] = float(
+                np.asarray(self.engine._slot_steps[kind])[slot])
+        with span("service.checkpoint_out", track="service",
+                  args={"task": task_id, "optimizer": include_optimizer}):
+            path = save_checkpoint(ckpt_dir, rec.steps_trained, sub,
+                                   extra=extra)
+        rec.checkpoint_path = path
+        self.telemetry.counter("service.checkpoint", direction="out").inc()
+        return path
+
+    def release_tenant(self, task_id: str, ckpt_dir: str,
+                       requests: Optional[List[InferenceRequest]] = None,
+                       ) -> MigrationTicket:
+        """Migration phase 3 (release): detach the tenant WITHOUT the
+        completion checkpoint (the migration checkpoint already exists) and
+        bundle everything the target needs — including the live token-stream
+        generator, so the data sequence continues exactly."""
+        rec = self.tenants[task_id]
+        if rec.state != RUNNING:
+            raise ValueError(f"tenant {task_id} not running ({rec.state})")
+        stream = self._streams.get(task_id)
+        kind = rec.task.adapter.kind
+        ticket = MigrationTicket(
+            task=rec.task, priority=rec.priority,
+            target_steps=rec.target_steps, ckpt_dir=ckpt_dir,
+            steps_trained=rec.steps_trained, tokens=rec.tokens,
+            effective_tokens=rec.effective_tokens,
+            decode_tokens=rec.decode_tokens, losses=list(rec.losses),
+            stream=stream, requests=list(requests or []),
+            source_clock=self.clock,
+            stack_rank=int(self.gen.registered.mta.kind_rank[kind]))
+        self._detach([rec], checkpoint=False)
+        rec.state = MIGRATED
+        rec.reason = "migrated_out"
+        rec.finish_step = self.clock
+        instant("tenant.migrate_out", track=f"tenant:{task_id}")
+        self.telemetry.counter("service.migrations", direction="out").inc()
+        return ticket
+
+    def migrate_in(self, ticket: MigrationTicket) -> TenantRecord:
+        """Migration phase 4 (warm start): admit a migrated tenant with its
+        full optimizer state.  Re-binding the drained inference requests is
+        the separate ``adopt_requests`` phase (the protocol's final span)."""
+        task = ticket.task
+        tid = task.task_id
+        if tid in self.tenants:
+            prev = self.tenants[tid]
+            if prev.state in (QUEUED, RUNNING):
+                raise ValueError(f"tenant {tid} already live on target")
+            self.retired.append(prev)
+        decision = self.admission.check(self.resident, task)
+        if not decision:
+            raise ValueError(
+                f"migration target cannot admit {tid}: {decision.reason}")
+        rec = TenantRecord(task, ticket.priority, ticket.target_steps,
+                           warm_start_dir=ticket.ckpt_dir,
+                           submit_step=self.clock)
+        rec.steps_trained = ticket.steps_trained
+        rec.tokens = ticket.tokens
+        rec.effective_tokens = ticket.effective_tokens
+        rec.decode_tokens = ticket.decode_tokens
+        rec.losses = list(ticket.losses)
+        self.tenants[tid] = rec
+        if ticket.stream is not None:
+            # live stream handoff: _attach's setdefault keeps this generator
+            self._streams[tid] = ticket.stream
+        if ticket.stack_rank:
+            # the tenant trained at the source stack's (rank-padded) width:
+            # raise this kind's monotone rank floor so the target stack
+            # opens at least that wide and the artifact loads exactly
+            kind = task.adapter.kind
+            self.gen._kind_rank[kind] = max(
+                self.gen._kind_rank.get(kind, 0), ticket.stack_rank)
+        instant("tenant.migrate_in", track=f"tenant:{tid}")
+        self._attach([rec])
+        if rec.reason.startswith("warm_start"):
+            raise ValueError(
+                f"migration warm-start failed for {tid}: {rec.reason}")
+        self.telemetry.counter("service.migrations", direction="in").inc()
+        self.telemetry.counter("service.admission", decision="admit",
+                               reason=decision.reason).inc()
+        return rec
+
+    def adopt_requests(self, requests: List[InferenceRequest]) -> None:
+        """Migration phase 5 (re-bind): adopt drained requests from a source
+        instance.  They queue for pool rows like fresh submissions — the
+        regenerated tokens replay the source's exactly (deterministic
+        prompt + seeded sampling against the migrated adapter)."""
+        for req in requests:
+            req.submit_clock = self.clock
+            self.coserve.adopt(req)
+
+    # ------------------------------------------------------------------
     # attach / detach / re-plan
 
     def _replan(self, tasks: List[PEFTTask]) -> ExecutionPlan:
@@ -358,19 +518,59 @@ class MuxTuneService:
         reg = self.gen.registered
         gi = reg.task_index(rec.task_id)
         like = slice_task_tree(self.cfg, reg.mta, reg.adapter_params, gi)
+        # migration checkpoints carry the optimizer-inclusive layout
+        # {"params", "m", "v"} (+ per-slot step count in extra): try it
+        # first, then fall back to the plain adapter-only artifact of a
+        # completed tenant re-submitting
+        like_full = {
+            "params": like,
+            "m": slice_task_tree(self.cfg, reg.mta, reg.opt_state.m, gi),
+            "v": slice_task_tree(self.cfg, reg.mta, reg.opt_state.v, gi),
+        }
+        # strict_shapes=False: the artifact keeps its SAVED rank-pad width
+        # (cohort-dependent); load_task_tree owns the adaptation rules
+        full, res = True, None
         try:
-            res = restore_latest(rec.warm_start_dir, like)
+            res = restore_latest(rec.warm_start_dir, like_full,
+                                 strict_shapes=False)
         except (ValueError, KeyError, IOError):
-            rec.reason = "warm_start_shape_mismatch"
-            return
+            res = None
+        if res is None:
+            full = False
+            try:
+                res = restore_latest(rec.warm_start_dir, like,
+                                     strict_shapes=False)
+            except (ValueError, KeyError, IOError):
+                rec.reason = "warm_start_shape_mismatch"
+                return
         if res is None:
             rec.reason = "warm_start_empty"
             return
-        _, sub, _ = res
+        _, sub, extra = res
         try:
-            reg.adapter_params = load_task_tree(self.cfg, reg.mta,
-                                                reg.adapter_params, gi, sub,
-                                                strict=True)
+            if full:
+                reg.adapter_params = load_task_tree(
+                    self.cfg, reg.mta, reg.adapter_params, gi, sub["params"],
+                    strict=True)
+                m2 = load_task_tree(self.cfg, reg.mta, reg.opt_state.m, gi,
+                                    sub["m"], strict=True)
+                v2 = load_task_tree(self.cfg, reg.mta, reg.opt_state.v, gi,
+                                    sub["v"], strict=True)
+                reg.opt_state = AdamWState(reg.opt_state.step, m2, v2)
+                slot_step = (extra or {}).get("slot_step")
+                if slot_step is not None and self.engine is not None:
+                    # per-slot bias-correction counter: without it the first
+                    # post-migration update would rewarm AdamW from step 0
+                    # and the loss trajectory would diverge from solo
+                    kind = rec.task.adapter.kind
+                    slot = int(reg.mta.task_slot[gi])
+                    self.engine._slot_steps[kind] = (
+                        self.engine._slot_steps[kind]
+                        .at[slot].set(float(slot_step)))
+            else:
+                reg.adapter_params = load_task_tree(self.cfg, reg.mta,
+                                                    reg.adapter_params, gi,
+                                                    sub, strict=True)
             self.telemetry.counter("service.checkpoint", direction="in").inc()
         except ValueError:
             rec.reason = "warm_start_shape_mismatch"

@@ -124,3 +124,45 @@ def test_multiplexing_beats_time_slicing_on_saturated_trace():
     sliced = ClusterSim(n_chips=16, chips_per_instance=4, multiplexed=False).run(trace)
     assert mux["completed"] >= sliced["completed"]
     assert mux["served_task_min"] >= sliced["served_task_min"]
+
+
+def test_lockstep_placement_api():
+    """Fleet-router lockstep surface: ``lockstep_pick`` is a pure query,
+    ``lockstep_admit``/``lockstep_depart`` manage open-ended residencies
+    the time-based ``gc`` never reaps, and ``add_instance`` /
+    ``remove_instance`` grow/retire capacity while keeping iid == index."""
+    sim = ClusterSim(n_chips=8, chips_per_instance=4, policy="best_fit",
+                     hbm_gb=16.0, backbone_gb=14.0)
+    task = TaskArrival(t_min=0.0, duration_min=10.0, mem_gb=1.0)
+    iid = sim.lockstep_pick(task)
+    assert iid == sim.lockstep_pick(task)  # pure: no state change
+    sim.lockstep_admit("t0", task, iid)
+    with pytest.raises(ValueError):
+        sim.lockstep_admit("t0", task, iid)  # duplicate tenant
+    # the residency is open-ended: a later pick still sees the occupancy
+    # (best_fit packs onto the busiest feasible instance)
+    assert sim.lockstep_pick(task) == iid
+    assert sim.instances[iid].active  # gc must not reap the inf-end entry
+
+    new_iid = sim.add_instance()
+    assert new_iid == len(sim.instances) - 1
+    assert [i.iid for i in sim.instances] == list(range(len(sim.instances)))
+
+    with pytest.raises(ValueError):
+        sim.remove_instance(iid)  # still occupied
+    sim.lockstep_depart("t0")
+    sim.remove_instance(iid)
+    assert sim.instances[iid].retired
+    # retired instances never place, but iids stay stable
+    assert sim.lockstep_pick(task) != iid
+    assert [i.iid for i in sim.instances] == list(range(len(sim.instances)))
+
+
+def test_lockstep_pick_exhausts_to_none():
+    """When every instance is saturated, lockstep_pick reports None rather
+    than over-admitting past the Eq. 5 bound."""
+    sim = ClusterSim(n_chips=4, chips_per_instance=4, max_colocate=1,
+                     policy="fcfs")
+    task = TaskArrival(t_min=0.0, duration_min=10.0, mem_gb=1.0)
+    sim.lockstep_admit("t0", task, sim.lockstep_pick(task))
+    assert sim.lockstep_pick(task) is None

@@ -554,3 +554,50 @@ def test_service_decode_calibration_channel():
     r, ctx, s = svc.decode_trace[-1]
     pred = cm.decode_token_latency(r, int(max(ctx, 1)))
     assert 0.1 < pred / s < 10.0
+
+
+def test_slo_class_preemption():
+    """A class-0 request arriving while the single decode row is held by a
+    class-2 request evicts it: the victim re-queues (pool-generation
+    recovery re-prefills it later), the urgent request binds, BOTH finish
+    with full-length outputs, and the eviction is counted."""
+    svc = _coserve_service(
+        auto_recalibrate=False,
+        coserve=CoServeConfig(decode_slots=1, max_tokens_per_iter=1))
+    svc.submit(make_task("a", "sst2", 1, AdapterConfig("lora", rank=4),
+                         seed=0), target_steps=12)
+    lo = svc.submit_request("a", np.arange(1, 6), max_new_tokens=6,
+                            request_id="lo", slo_class=2)
+    svc.step()
+    assert lo.state == "decoding"  # holds the only row
+    hi = svc.submit_request("a", np.arange(1, 4), max_new_tokens=2,
+                            request_id="hi", slo_class=0)
+    svc.step()
+    assert svc.coserve.preemptions == 1
+    assert hi.state in ("decoding", "done")
+    for _ in range(16):
+        if lo.state == hi.state == "done":
+            break
+        svc.step()
+    assert lo.state == hi.state == "done"
+    assert len(lo.tokens_out) == 6 and len(hi.tokens_out) == 2
+    assert svc.coserve.accounting()["preemptions"] == 1
+
+
+def test_preemption_disabled_preserves_fcfs_binding():
+    """With preempt=False a later class-0 request waits for the row instead
+    of evicting the class-2 holder."""
+    svc = _coserve_service(
+        auto_recalibrate=False,
+        coserve=CoServeConfig(decode_slots=1, max_tokens_per_iter=1,
+                              preempt=False))
+    svc.submit(make_task("a", "sst2", 1, AdapterConfig("lora", rank=4),
+                         seed=0), target_steps=12)
+    lo = svc.submit_request("a", np.arange(1, 6), max_new_tokens=3,
+                            request_id="lo", slo_class=2)
+    svc.step()
+    svc.submit_request("a", np.arange(1, 4), max_new_tokens=2,
+                       request_id="hi", slo_class=0)
+    svc.step()
+    assert svc.coserve.preemptions == 0
+    assert lo.state in ("decoding", "done")  # never evicted

@@ -1,0 +1,201 @@
+"""Fleet tier acceptance: router-vs-oracle placement, live migration, and
+cost-model-driven autoscaling over N in-process ``MuxTuneService`` instances.
+
+Four guarantees:
+
+  (a) MIGRATION LOSS PARITY — train 3 iterations on the source instance,
+      live-migrate (drain -> checkpoint-out -> release -> warm-start ->
+      rebind), finish on the target: the 6-entry loss trajectory matches a
+      same-process solo service at rtol 2e-4.  Cohorts are rank-homogeneous
+      because a surviving co-tenant pads the stack rank, which genuinely
+      (and correctly) perturbs the solo trajectory otherwise.
+  (b) ROUTER == ORACLE — every FleetRouter placement decision matches the
+      lockstep ``ClusterSim`` run on the same arrival sequence, for every
+      admission policy.
+  (c) DECODE SURVIVAL — an in-flight decode request is drained with its
+      tenant, re-bound on the target, and completes with seeded-sampling
+      tokens identical to a no-migration control.
+  (d) FLEET REPLAY ACCEPTANCE — a churn replay with forced migration and
+      the autoscaler enabled completes every tenant, performs >= 1 live
+      migration with zero dropped in-flight requests, both provisions and
+      retires an instance, and emits a Chrome trace whose ``fleet.*``
+      spans pass ``validate_chrome_trace``.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.task import ParallelismSpec
+from repro.data.synthetic import make_task
+from repro.obs.tracing import SpanTracer, set_tracer, validate_chrome_trace
+from repro.peft.adapters import AdapterConfig, LORA
+from repro.serve import CoServeConfig, MuxTuneService
+from repro.serve.admission import AdmissionConfig
+from repro.serve.replay import replay_fleet, tiny_trace
+from repro.serve.service import COMPLETED, MIGRATED
+from repro.fleet import Autoscaler, AutoscalerConfig, FleetRouter
+
+CFG = smoke_config("llama3.2-3b")
+
+
+def _factory(coserve=None):
+    def make(iid):
+        return MuxTuneService(CFG, ParallelismSpec(), lr=5e-3, n_micro=1,
+                              enable_fusion=False, reserve_slots=4, seed=0,
+                              coserve=coserve)
+    return make
+
+
+def _task(tid, dataset="sst2", rank=4, seed=0, **adapter_kw):
+    return make_task(tid, dataset, micro_batch=1,
+                     adapter=AdapterConfig(LORA, rank=rank, **adapter_kw),
+                     seed=seed)
+
+
+def test_migration_loss_parity():
+    """(a): 3 iters on source -> migrate -> 3 iters on target reproduces
+    the solo 6-iteration loss trajectory exactly (rtol 2e-4).  The solo
+    control runs in the SAME process: cross-process runs of identical
+    seeds differ at float ulp level, which this tolerance must not hide.
+    """
+    fleet = FleetRouter(_factory(), n_instances=2, policy="best_fit")
+    fleet.submit(_task("mig0", "sst2", seed=0), target_steps=6)
+    fleet.submit(_task("stay1", "qa", seed=1), target_steps=6)
+    for _ in range(3):
+        fleet.step()
+    rec = fleet.record("mig0")
+    assert rec.steps_trained == 3 and len(rec.losses) == 3
+    source_iid = fleet.placements["mig0"]
+
+    rep = fleet.migrate("mig0")
+    assert rep.request_ids == []  # no inference traffic in this test
+    assert set(rep.phase_seconds) == {"drain", "checkpoint_out", "release",
+                                      "warm_start", "rebind"}
+    assert fleet.placements["mig0"] != source_iid
+    assert fleet.instances[source_iid].service.tenants["mig0"].state == MIGRATED
+
+    fleet.run(max_iters=32)
+    rec = fleet.record("mig0")
+    assert rec.state == COMPLETED
+    assert rec.steps_trained == 6 and len(rec.losses) == 6
+
+    solo = _factory()(99)
+    solo.submit(_task("mig0", "sst2", seed=0), target_steps=6)
+    for _ in range(12):
+        solo.step()
+    srec = solo.tenants["mig0"]
+    assert srec.state == COMPLETED
+    np.testing.assert_allclose(rec.losses, srec.losses, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("policy", ("fcfs", "best_fit", "backbone_affine"))
+def test_router_placements_match_cluster_sim(policy):
+    """(b): the router's live placement of every arrival agrees with the
+    lockstep ClusterSim oracle fed the same (mem_gb, backbone) arrivals."""
+    fleet = FleetRouter(_factory(), n_instances=3, policy=policy)
+    for i in range(5):
+        d = fleet.submit(_task(f"t{i}", ("sst2", "qa", "rte")[i % 3],
+                               rank=(4, 8)[i % 2], seed=i),
+                         target_steps=2)
+        assert d.outcome in ("admit", "queue")
+        if d.outcome == "admit":
+            assert d.oracle == d.instance, d.summary()
+    fleet.run(max_iters=64)
+    assert fleet.oracle_agreement() == 1.0
+    placed = [d for d in fleet.decisions if d.instance is not None]
+    assert len(placed) == 5  # queued arrivals drain to a placement too
+
+
+def test_inflight_decode_request_survives_migration():
+    """(c): a partially-decoded request is moved with its tenant and the
+    target regenerates the identical seeded-sampling token sequence.  The
+    adapter trains at lr=0 so control/migrated paths see the same weights;
+    max_tokens_per_iter=1 keeps the request in flight across the move."""
+    prompt = np.arange(1, 6)
+    kw = dict(max_new_tokens=6, temperature=0.7, top_k=5, seed=11,
+              request_id="r0")
+
+    def run(migrate):
+        fleet = FleetRouter(
+            _factory(CoServeConfig(max_tokens_per_iter=1)),
+            n_instances=2, policy="fcfs")
+        fleet.submit(_task("t0", "sst2", lr=0.0, seed=0), target_steps=10)
+        req = fleet.submit_request("t0", prompt, **kw)
+        fleet.step()  # partial decode: 1 token emitted, 5 pending
+        assert req.state == "decoding"
+        if migrate:
+            rep = fleet.migrate("t0")
+            assert rep.request_ids == ["r0"]
+        for _ in range(16):
+            fleet.step()
+            for inst in fleet.instances.values():
+                live = inst.service.coserve.requests.get("r0")
+                if live is not None:
+                    req = live  # the object moves with the tenant
+            if req.state == "done":
+                break
+        return req
+
+    control = run(migrate=False)
+    moved = run(migrate=True)
+    assert control.state == moved.state == "done"
+    assert moved.reason != "tenant_departed"
+    np.testing.assert_array_equal(control.tokens_out, moved.tokens_out)
+
+
+def test_fleet_replay_acceptance():
+    """(d): end-to-end churn replay — tight admission forces queueing, the
+    autoscaler provisions a second instance at the utilization knee and
+    retires it after drain, one migration is forced mid-replay, and every
+    fleet.* span validates."""
+    tracer = SpanTracer()
+    prev = set_tracer(tracer)
+    try:
+        report = replay_fleet(
+            tiny_trace(4, gap_min=1.0, dur_min=6.0),
+            admission=AdmissionConfig(max_tenants=2),
+            requests_per_min=1,
+            n_instances=1,
+            policy="best_fit",
+            autoscale=True,
+            autoscaler_config=AutoscalerConfig(min_instances=1,
+                                               max_instances=3,
+                                               cooldown_ticks=1),
+            force_migration=True,
+        )
+    finally:
+        set_tracer(prev)
+    rs = report["real_summary"]
+    assert rs["completed"] == 4
+    assert rs["migrations"] >= 1 and rs["forced_migrations"] >= 1
+    assert rs["dropped_moved_requests"] == []
+    assert rs["scale_ups"] >= 1, "autoscaler never provisioned"
+    assert rs["scale_downs"] >= 1, "autoscaler never retired"
+    assert rs["oracle_agreement"] == 1.0
+    assert rs["live_instances"] >= 1
+
+    stats = validate_chrome_trace(
+        tracer.chrome_trace(),
+        require_phases=["fleet.route", "fleet.migrate", "fleet.scale_up",
+                        "fleet.scale_down", "fleet.step"])
+    assert stats["phases"]["fleet.migrate"] >= 1
+
+
+def test_autoscaler_respects_floor_and_cooldown():
+    """The autoscaler never drops below min_instances and honours the
+    cooldown between actions."""
+    fleet = FleetRouter(_factory(), n_instances=1, policy="best_fit")
+    fleet.autoscaler = Autoscaler(AutoscalerConfig(
+        min_instances=1, max_instances=2, cooldown_ticks=3))
+    for _ in range(6):  # idle fleet: utilization 0, but floor holds
+        fleet.step()
+    assert len([i for i in fleet.instances.values() if not i.retired]) == 1
+    assert fleet.autoscaler.accounting()["scale_downs"] == 0
+
+
+def test_retire_refuses_nonempty_instance():
+    fleet = FleetRouter(_factory(), n_instances=2, policy="fcfs")
+    fleet.submit(_task("t0", "sst2", seed=0), target_steps=4)
+    iid = fleet.placements["t0"]
+    with pytest.raises(ValueError, match="resident"):
+        fleet.retire(iid)
