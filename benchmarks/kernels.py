@@ -198,6 +198,37 @@ def _bench_decode_attention(rows: list[str]) -> None:
             ))
 
 
+def _bench_quant_matmul(rows: list[str]) -> None:
+    """Int8 backbone matmul (PR 9): x[M,K] @ int8 q[K,N] with dequant fused
+    in-register.  Decode-regime (small M) and train-regime (large M) rows;
+    fwd-only — the backbone is frozen, adapter cotangents flow through the
+    custom_vjp dx which the grads suite covers."""
+    from repro.models.quantize import quantize_weight
+
+    key = jax.random.PRNGKey(5)
+    K, N = 1024, 1024
+    for M in (8, 2048):
+        ks = jax.random.split(key, 2)
+        x = jax.random.normal(ks[0], (M, K), jnp.float32)
+        w = jax.random.normal(ks[1], (K, N), jnp.float32) * 0.1
+        qw = quantize_weight(w, (-2,))
+        q, scale = qw["q"], qw["scale"]
+        for impl in _impls():
+            kops.set_impl(impl)
+            try:
+                fwd = jax.jit(lambda x, q, scale: kops.quant_matmul(
+                    x, q, scale, "mk,kn->mn"))
+                fwd(x, q, scale).block_until_ready()
+                tf = timeit(lambda: fwd(x, q, scale).block_until_ready(),
+                            iters=10)
+            finally:
+                kops.set_impl("xla")
+            rows.append(csv_row(
+                f"kernels/quant_matmul/fwd/{impl}/M_{M}", tf * 1e6,
+                f"K={K};N={N};int8",
+            ))
+
+
 def _bench_interpret_smoke(rows: list[str]) -> None:
     """One tiny fwd+bwd through the interpret tier: tracks that the
     differentiable Pallas path stays alive (timing is interpreter-bound)."""
@@ -244,6 +275,17 @@ def _bench_interpret_smoke(rows: list[str]) -> None:
         dfwd = jax.jit(lambda q, k, v: kops.decode_attention(q, k, v, dlen))
         dfwd(dq, dk, dv).block_until_ready()
         td = timeit(lambda: dfwd(dq, dk, dv).block_until_ready(), iters=2)
+
+        # quant_matmul: fwd-only (frozen int8 backbone side)
+        from repro.models.quantize import quantize_weight
+        ks = jax.random.split(key, 2)
+        qx = jax.random.normal(ks[0], (64, 128), jnp.float32)
+        qw = quantize_weight(
+            jax.random.normal(ks[1], (128, 128), jnp.float32) * 0.1, (-2,))
+        qfwd = jax.jit(lambda x: kops.quant_matmul(
+            x, qw["q"], qw["scale"], "mk,kn->mn"))
+        qfwd(qx).block_until_ready()
+        tq = timeit(lambda: qfwd(qx).block_until_ready(), iters=2)
     finally:
         kops.set_impl("xla")
     rows.append(csv_row(
@@ -258,6 +300,10 @@ def _bench_interpret_smoke(rows: list[str]) -> None:
         "kernels/decode_attention/fwd/pallas_interpret/smoke", td * 1e6,
         "correctness_tier=1",
     ))
+    rows.append(csv_row(
+        "kernels/quant_matmul/fwd/pallas_interpret/smoke", tq * 1e6,
+        "correctness_tier=1",
+    ))
 
 
 def run() -> list[str]:
@@ -266,5 +312,6 @@ def run() -> list[str]:
     _bench_packed_attention(rows)
     _bench_mamba_scan(rows)
     _bench_decode_attention(rows)
+    _bench_quant_matmul(rows)
     _bench_interpret_smoke(rows)
     return rows

@@ -45,4 +45,19 @@ def run() -> list[str]:
             f"effective_tokens={real['total_effective_tokens']}",
         ),
     ]
+    # advisory: Eq. 5 resident-backbone bytes per precision tier (PR 9) —
+    # the admission/packing numerator an int8 backbone shrinks.  Full-size
+    # config: the smoke geometry would understate the ratio.
+    from repro.configs import get_config
+    from repro.core.cost_model import CostModel
+
+    full = get_config("llama3.2-3b")
+    for bd in ("bfloat16", "int8"):
+        cm = CostModel(full.with_overrides(backbone_dtype=bd), [],
+                       ParallelismSpec())
+        rows.append(csv_row(
+            f"serve/eq5_backbone_bytes/{bd}",
+            float(cm.stage_memory([])),
+            f"weight_bytes={cm.weight_bytes}",
+        ))
     return rows

@@ -55,6 +55,12 @@ class Instance:
     backbone_gb: float = 14.0
     active: List[Tuple[float, float]] = field(default_factory=list)  # (end, mem)
     retired: bool = False  # fleet lockstep: drained + scaled down
+    # A pinned instance's backbone is fixed at provision time (fleet
+    # lockstep: the live service was BUILT with that backbone config, e.g.
+    # an int8-quantized copy) — it rejects mismatched tasks even while
+    # empty, and admissions never relabel it.  Trace-replay instances stay
+    # unpinned: they adopt whatever backbone lands first.
+    pinned: bool = False
 
     def gc(self, now: float) -> None:
         self.active = [(e, m) for (e, m) in self.active if e > now]
@@ -66,7 +72,7 @@ class Instance:
     def can_admit(self, task: TaskArrival, max_colocate: int) -> bool:
         if self.retired:
             return False
-        if self.active and self.backbone != task.backbone:
+        if (self.pinned or self.active) and self.backbone != task.backbone:
             return False
         if len(self.active) >= max_colocate:
             return False
@@ -168,7 +174,13 @@ class ClusterSim:
             raise ValueError(f"tenant {tenant_id} already resident in oracle")
         inst = self.instances[iid]
         entry = (math.inf, task.mem_gb)
-        inst.backbone = task.backbone
+        if inst.pinned:
+            if inst.backbone != task.backbone:
+                raise ValueError(
+                    f"lockstep: task backbone {task.backbone!r} does not "
+                    f"match pinned instance {iid} ({inst.backbone!r})")
+        else:
+            inst.backbone = task.backbone
         inst.active.append(entry)
         self._lockstep[tenant_id] = (iid, entry)
 
@@ -177,13 +189,22 @@ class ClusterSim:
         iid, entry = self._lockstep.pop(tenant_id)
         self.instances[iid].active.remove(entry)
 
-    def add_instance(self, chips: Optional[int] = None) -> int:
+    def add_instance(self, chips: Optional[int] = None,
+                     backbone: Optional[str] = None,
+                     backbone_gb: Optional[float] = None,
+                     pinned: bool = False) -> int:
         """Mirror a fleet scale-up.  Keeps the iid == list-index invariant
-        the lockstep bookkeeping relies on."""
+        the lockstep bookkeeping relies on.  Heterogeneous fleets pass a
+        per-instance ``backbone`` label + ``backbone_gb`` footprint (an int8
+        copy is smaller than an fp32 one) with ``pinned=True`` so the oracle
+        prices and constrains each instance like its live counterpart."""
         iid = len(self.instances)
         self.instances.append(Instance(
-            iid, chips or self.chips_per_instance,
-            hbm_gb=self.hbm_gb, backbone_gb=self.backbone_gb))
+            iid, chips or self.chips_per_instance, backbone=backbone,
+            hbm_gb=self.hbm_gb,
+            backbone_gb=(self.backbone_gb if backbone_gb is None
+                         else backbone_gb),
+            pinned=pinned))
         return iid
 
     def remove_instance(self, iid: int) -> None:
@@ -209,7 +230,8 @@ class ClusterSim:
             # slowdown() already returns the per-task wall-time inflation
             # (k for time-slicing, k^0.15 multiplexed) — apply it directly
             dur = task.duration_min * inst.slowdown(k, self.multiplexed)
-            inst.backbone = task.backbone
+            if not inst.pinned:
+                inst.backbone = task.backbone
             inst.active.append((now + dur, task.mem_gb))
             self.served_min += task.duration_min
             self.completed += 1

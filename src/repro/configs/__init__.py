@@ -104,6 +104,11 @@ class ArchConfig:
 
     # --- dtype / execution knobs ---
     param_dtype: str = "bfloat16"
+    # Frozen-backbone storage precision ("bfloat16" | "float32" | "int8").
+    # "int8" quantizes every adapter-capable BaseOp weight at model build
+    # (symmetric, per-output-channel scale) with dequant fused into the
+    # hot-path kernels — see repro.models.quantize / kernels.quant_matmul.
+    backbone_dtype: str = "bfloat16"
     remat: bool = True
     scan_layers: bool = True
     use_pallas: bool = False  # TPU target path; CPU dry-run uses jnp flash
@@ -112,6 +117,12 @@ class ArchConfig:
 
     def resolved_head_dim(self) -> int:
         return self.head_dim or (self.d_model // self.num_heads)
+
+    def backbone_dtype_bytes(self) -> int:
+        """Bytes per resident backbone weight — the precision axis of the
+        cost model (Eq. 5 / bandwidth terms) and of admission packing."""
+        return {"int8": 1, "float8": 1, "bfloat16": 2, "float16": 2,
+                "float32": 4}[self.backbone_dtype]
 
     @property
     def q_dim(self) -> int:

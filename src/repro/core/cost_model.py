@@ -75,16 +75,27 @@ class HardwareProfile:
         return self.calibration.get("__decode__", self.wall_scale())
 
 
-def backbone_ops(cfg: ArchConfig, dtype_bytes: int = 2) -> List[OpCost]:
-    """Per-layer BaseOp inventory with analytic FLOPs/bytes per token."""
+def backbone_ops(cfg: ArchConfig, dtype_bytes: int = 2,
+                 weight_bytes: Optional[int] = None) -> List[OpCost]:
+    """Per-layer BaseOp inventory with analytic FLOPs/bytes per token.
+
+    ``dtype_bytes`` prices activation traffic; ``weight_bytes`` prices the
+    resident-weight reads (``bytes_fixed``) and defaults to the activation
+    precision.  An int8 backbone halves/quarters exactly the weight-read
+    term — the one that dominates the §2.2 memory-bound decode regime —
+    while activations stay at compute precision (dequant is in-register).
+    MoE expert stacks and the router are not quantized (direct einsums
+    outside the BaseOp chokepoint), so they keep ``dtype_bytes``.
+    """
     d = cfg.d_model
+    wb = dtype_bytes if weight_bytes is None else weight_bytes
     ops: List[OpCost] = []
     dims = base_op_dims(cfg)
     for name, (din, dout) in dims.items():
         ops.append(OpCost(
             name=name,
             flops_per_token=2.0 * din * dout,
-            bytes_fixed=din * dout * dtype_bytes,
+            bytes_fixed=din * dout * wb,
             bytes_per_token=(din + dout) * dtype_bytes,
         ))
     if cfg.attention != "none":
@@ -120,11 +131,19 @@ class CostModel:
     tasks: Sequence[PEFTTask]
     parallelism: ParallelismSpec
     hw: HardwareProfile = field(default_factory=HardwareProfile)
-    dtype_bytes: int = 2
+    dtype_bytes: int = 2  # activation / compute precision
+    # Resident-backbone-weight precision.  None -> resolved from
+    # ``cfg.backbone_dtype_bytes()`` so an int8 backbone automatically
+    # reprices Eq. 5 memory, the bytes_fixed latency terms, admission
+    # packing, and everything downstream (planner, fleet router,
+    # autoscaler) that builds a CostModel from the service config.
+    weight_bytes: Optional[int] = None
     comm_overlapped: bool = True  # §3.4.2 orchestration hides intra-stage comm
 
     def __post_init__(self) -> None:
-        self._ops = backbone_ops(self.cfg, self.dtype_bytes)
+        if self.weight_bytes is None:
+            self.weight_bytes = self.cfg.backbone_dtype_bytes()
+        self._ops = backbone_ops(self.cfg, self.dtype_bytes, self.weight_bytes)
         self._dims = base_op_dims(self.cfg)
         self._attention_ok = supports_attention_prefix(self.cfg)
         self._layers_per_stage = max(self.cfg.num_layers // self.parallelism.num_stages, 1)
@@ -194,7 +213,20 @@ class CostModel:
         """Peak per-stage bytes for co-located hTasks (1F1B accumulation)."""
         p = self.parallelism
         S = p.num_stages
-        m_backbone = self.cfg.param_count() * self.dtype_bytes / p.tp
+        # Backbone residency splits by precision: the quantizable BaseOp
+        # params sit at ``weight_bytes`` (1 for int8), the remainder (norms,
+        # embeddings, expert stacks, direct-einsum leaves) stays at
+        # activation precision — matching what quantize_backbone actually
+        # converts.
+        n_total = self.cfg.param_count()
+        wb = self.weight_bytes if self.weight_bytes is not None else self.dtype_bytes
+        if wb != self.dtype_bytes:
+            from repro.models.quantize import quantized_param_count
+            n_quant = quantized_param_count(self.cfg)
+            m_backbone = (n_quant * wb
+                          + (n_total - n_quant) * self.dtype_bytes) / p.tp
+        else:
+            m_backbone = n_total * self.dtype_bytes / p.tp
         m_grad = 0.0  # input grads reuse activation buffers (paper: M_g ~ M_a reuse)
         m_act = 0.0
         # shared (task-axis-free) adapter leaves — e.g. VeRA's frozen A/B —

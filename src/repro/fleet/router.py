@@ -58,10 +58,16 @@ class _Pending:
 
 @dataclass
 class FleetInstance:
-    """One managed service instance plus its fleet-side bookkeeping."""
+    """One managed service instance plus its fleet-side bookkeeping.
+
+    ``backbone`` is the instance's pinned label (``<arch>:<backbone_dtype>``,
+    derived from its service config at spawn) and ``backbone_bytes`` its own
+    Eq. 5 resident-backbone footprint — an int8 instance is cheaper than an
+    fp32 one, and the lockstep oracle prices each accordingly."""
     iid: int
     service: MuxTuneService
     backbone: str
+    backbone_bytes: float = 0.0
     admitted: int = 0
     migrated_in: int = 0
     migrated_out: int = 0
@@ -84,6 +90,7 @@ class FleetInstance:
     def summary(self) -> Dict[str, Any]:
         return {
             "iid": self.iid,
+            "backbone": self.backbone,
             "retired": self.retired,
             "resident": self.service.resident_ids,
             "n_resident": self.n_resident,
@@ -98,9 +105,15 @@ class FleetInstance:
 class FleetRouter:
     """The fleet control plane: admission, placement, migration planning.
 
-    ``factory(iid) -> MuxTuneService`` builds instances (all config-
-    identical: the fleet assumes one backbone geometry and one decode-pool
-    geometry, which is what makes migration and request adoption safe).
+    ``factory(iid) -> MuxTuneService`` builds instances.  Fleets may be
+    backbone-heterogeneous: each instance is labeled
+    ``<arch>:<backbone_dtype>`` from its own service config at spawn (e.g.
+    an fp32 pool next to an int8-quantized pool), tenants route only onto
+    instances whose label matches their requested backbone, and migration
+    targets are constrained the same way — which is what keeps migration
+    and request adoption safe between matching instances.  ``backbone``
+    (when given) overrides the default label tenants are submitted under;
+    otherwise the first spawned instance's label is the default.
     """
 
     def __init__(
@@ -109,7 +122,7 @@ class FleetRouter:
         n_instances: int = 2,
         policy: str = "best_fit",
         max_queue: int = 32,
-        backbone: str = "default",
+        backbone: Optional[str] = None,
         telemetry: Optional[TelemetryRegistry] = None,
         migration: Optional[MigrationProtocol] = None,
         oracle: bool = True,
@@ -149,13 +162,19 @@ class FleetRouter:
         iid = self._next_iid
         self._next_iid += 1
         svc = self.factory(iid)
-        inst = FleetInstance(iid, svc, self.backbone)
+        # per-instance pinned label + Eq. 5 backbone footprint: the service
+        # config decides both (an int8 backbone is a different label AND a
+        # smaller resident copy than fp32 of the same arch)
+        label = f"{svc.cfg.name}:{svc.cfg.backbone_dtype}"
+        bb_bytes = float(svc.planner.cost_model([]).stage_memory([]))
+        inst = FleetInstance(iid, svc, label, backbone_bytes=bb_bytes)
         self.instances[iid] = inst
+        if self.backbone is None:
+            self.backbone = label
         if self.sim is None:
             # oracle geometry from the first live instance: the Eq. 5
             # budget and backbone bytes the AdmissionController gates with
-            self._backbone_bytes = float(
-                svc.planner.cost_model([]).stage_memory([]))
+            self._backbone_bytes = bb_bytes
             self.sim = ClusterSim(
                 n_chips=0,
                 chips_per_instance=max(svc.parallelism.total_chips, 1),
@@ -164,7 +183,9 @@ class FleetRouter:
                 hbm_gb=svc.admission_config.memory_budget / GB,
                 backbone_gb=self._backbone_bytes / GB,
             )
-        sim_iid = self.sim.add_instance()
+        sim_iid = self.sim.add_instance(backbone=label,
+                                        backbone_gb=bb_bytes / GB,
+                                        pinned=True)
         assert sim_iid == iid, "oracle instance ids out of lockstep"
         self.telemetry.gauge("fleet.instances").set(float(len(self.instances)))
         instant("fleet.spawn", track="fleet", args={"instance": iid})
@@ -199,23 +220,23 @@ class FleetRouter:
     # ------------------------------------------------------------------
     # placement policy (mirrors ClusterSim._pick against live state)
 
-    def _feasible(self, task: PEFTTask,
+    def _feasible(self, task: PEFTTask, backbone: str,
                   exclude: Optional[set] = None) -> List[FleetInstance]:
         out = []
         for iid in sorted(self.instances):
             if exclude and iid in exclude:
                 continue
             inst = self.instances[iid]
-            if inst.n_resident and inst.backbone != self.backbone:
+            if inst.backbone != backbone:
                 continue
             if inst.can_admit(task):
                 out.append(inst)
         return out
 
-    def _pick_instance(self, task: PEFTTask,
+    def _pick_instance(self, task: PEFTTask, backbone: str,
                        exclude: Optional[set] = None
                        ) -> Optional[FleetInstance]:
-        feas = self._feasible(task, exclude)
+        feas = self._feasible(task, backbone, exclude)
         if not feas:
             return None
         if self.policy == "fcfs":
@@ -224,38 +245,47 @@ class FleetRouter:
         # most bytes) — identical key, identical tie-break (lowest iid) to
         # the simulator's max() over its feasible list
         if self.policy == "backbone_affine":
-            same = [i for i in feas
-                    if i.backbone == self.backbone and i.n_resident]
+            same = [i for i in feas if i.n_resident]
             if same:
                 feas = same
         return max(feas, key=lambda i: (i.n_resident, i.resident_bytes()))
 
-    def _arrival_for(self, task: PEFTTask, target_steps: int) -> TaskArrival:
+    def _arrival_for(self, task: PEFTTask, target_steps: int,
+                     backbone: str) -> TaskArrival:
         """The oracle-side footprint of a live task: Eq. 5 bytes of the
-        task alone (backbone share subtracted — the sim adds its own)."""
-        ref = next(iter(self.instances.values())).service
-        solo = float(ref.admission.resident_memory([task]))
+        task alone (backbone share subtracted — the sim adds its own,
+        per-instance).  The reference instance is one matching the task's
+        requested backbone, so the subtraction uses the right copy size."""
+        ref = next((i for i in self.instances.values()
+                    if i.backbone == backbone),
+                   next(iter(self.instances.values())))
+        solo = float(ref.service.admission.resident_memory([task]))
         return TaskArrival(
             t_min=float(self.clock), duration_min=float(max(target_steps, 1)),
-            backbone=self.backbone,
-            mem_gb=max(solo - self._backbone_bytes, 0.0) / GB)
+            backbone=backbone,
+            mem_gb=max(solo - ref.backbone_bytes, 0.0) / GB)
 
     # ------------------------------------------------------------------
     # tenant lifecycle
 
     def submit(self, task: PEFTTask, priority: int = 0,
                target_steps: int = 10,
-               warm_start_dir: Optional[str] = None) -> RouteDecision:
-        """Route one tenant fleet-wide: place, queue, or reject."""
+               warm_start_dir: Optional[str] = None,
+               backbone: Optional[str] = None) -> RouteDecision:
+        """Route one tenant fleet-wide: place, queue, or reject.
+        ``backbone`` restricts placement to instances carrying that label
+        (default: the fleet's default label)."""
+        bb = backbone if backbone is not None else self.backbone
         with span("fleet.route", track="fleet",
-                  args={"task": task.task_id, "policy": self.policy}):
-            arrival = self._arrival_for(task, target_steps)
+                  args={"task": task.task_id, "policy": self.policy,
+                        "backbone": bb}):
+            arrival = self._arrival_for(task, target_steps, bb)
             self._arrivals[task.task_id] = arrival
             oracle = -1
             if self.use_oracle:
                 pick = self.sim.lockstep_pick(arrival)
                 oracle = -1 if pick is None else pick
-            inst = self._pick_instance(task)
+            inst = self._pick_instance(task, bb)
             if inst is not None:
                 self._admit(inst, task, priority, target_steps,
                             warm_start_dir, arrival)
@@ -286,7 +316,6 @@ class FleetRouter:
                                   target_steps=target_steps,
                                   warm_start_dir=warm_start_dir)
         inst.admitted += 1
-        inst.backbone = self.backbone
         self.placements[task.task_id] = inst.iid
         self.sim.lockstep_admit(task.task_id, arrival, inst.iid)
         instant("fleet.admit", track="fleet",
@@ -332,13 +361,18 @@ class FleetRouter:
         src_iid = self.placements[task_id]
         src = self.instances[src_iid]
         task = src.service.tenants[task_id].task
+        bb = self._arrivals[task_id].backbone
         if target_iid is None:
-            dst = self._pick_instance(task, exclude={src_iid})
+            dst = self._pick_instance(task, bb, exclude={src_iid})
             if dst is None:
                 raise ValueError(
                     f"no feasible migration target for {task_id}")
         else:
             dst = self.instances[target_iid]
+            if dst.backbone != bb:
+                raise ValueError(
+                    f"migration target {target_iid} runs {dst.backbone!r}; "
+                    f"tenant {task_id} needs {bb!r}")
         report = self.migration.migrate(src.service, dst.service, task_id,
                                         source_iid=src_iid,
                                         target_iid=dst.iid)
@@ -347,7 +381,6 @@ class FleetRouter:
         self.placements[task_id] = dst.iid
         src.migrated_out += 1
         dst.migrated_in += 1
-        dst.backbone = self.backbone
         self.migrations.append(report)
         return report
 
@@ -386,7 +419,8 @@ class FleetRouter:
             return
         still: List[_Pending] = []
         for p in sorted(self.queue, key=lambda p: (-p.priority, p.seq)):
-            inst = self._pick_instance(p.task)
+            inst = self._pick_instance(
+                p.task, self._arrivals[p.task.task_id].backbone)
             if inst is None:
                 still.append(p)
                 continue

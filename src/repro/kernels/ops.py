@@ -18,10 +18,20 @@ Training support matrix (forward / backward under ``jax.grad``):
   packed_attention   fwd+bwd    fwd+bwd (vjp)    fwd+bwd (vjp)
   mamba_scan         fwd+bwd    fwd+bwd (vjp)    fwd+bwd (vjp)
   decode_attention   fwd        fwd              fwd
+  quant_matmul       fwd        fwd              fwd
 
 ``decode_attention`` is the serving hot loop (one query token against a
 padded per-row KV cache window); it is never differentiated, so all three
-tiers are forward-only.  The Pallas tiers run the flash-decode split-KV
+tiers are forward-only.
+``quant_matmul`` is the int8 frozen-backbone matmul (PR 9): the Pallas
+tiers stream int8 weight blocks + a per-output-channel scale vector and
+dequantize in-register (``kernels/quant_matmul.py``); the xla tier is the
+dequantize-then-einsum formulation, bitwise identical to running the dense
+BaseOp on an explicitly dequantized weight — which is what makes adapter
+gradients under a quantized backbone EXACTLY equal to the dequantized
+reference on that tier.  "fwd" here means the backbone weight side: the
+backbone is frozen, but adapter cotangents still flow through the
+activation input on every tier (a ``custom_vjp`` dx on the Pallas tiers).  The Pallas tiers run the flash-decode split-KV
 kernel (``kernels/decode_attention.py``): stage 1 computes partial
 softmax per contiguous KV split on a ``[B*Hkv, n_splits]`` grid, stage 2
 combines with the online-softmax reduction.
@@ -235,6 +245,57 @@ def decode_attention(
         q, k_cache, v_cache, cache_len, cache_start,
         split_k=split_k, interpret=(impl == "pallas_interpret"),
     )
+
+
+# ---------------------------------------------------------------------------
+# int8 backbone matmul (dequant fused into the kernel) — QLoRA tier, PR 9
+# ---------------------------------------------------------------------------
+
+
+def quant_matmul(
+    x: jax.Array,      # [*batch, *contract] activations
+    q: jax.Array,      # [*contract, *out] int8 weight blocks
+    scale: jax.Array,  # per-output-channel scale, keepdims over *contract
+    einsum_str: str,
+) -> jax.Array:
+    """The BaseOp einsum against an int8 frozen-backbone weight.
+
+    ``einsum_str`` is the site's dense einsum (e.g. ``"bsd,dhk->bshk"``);
+    every BaseOp site contracts x's trailing axes against q's leading axes,
+    which is what lets the Pallas tiers flatten to one 2D
+    ``y = (x @ q) * scale`` problem.  Gradients flow through ``x`` only.
+    """
+    impl = _IMPL.name
+    if impl == "xla":
+        # dequantize-then-einsum: the IDENTICAL graph to the dense BaseOp on
+        # an explicitly dequantized weight (exact adapter-grad parity)
+        return jnp.einsum(einsum_str, x, q.astype(jnp.float32) * scale)
+    from repro.kernels.quant_matmul import quant_matmul_pallas
+
+    lhs, out_sub = einsum_str.split("->")
+    xs, ws = lhs.split(",")
+    contract = [c for c in xs if c in ws]
+    batch = [c for c in xs if c not in ws]
+    wout = [c for c in ws if c not in xs]
+    assert xs == "".join(batch + contract), einsum_str
+    assert ws == "".join(contract + wout), einsum_str
+    assert out_sub == "".join(batch + wout), einsum_str
+    nb, nc = len(batch), len(contract)
+    batch_shape, out_shape = x.shape[:nb], q.shape[nc:]
+    M = 1
+    for s in batch_shape:
+        M *= s
+    K = 1
+    for s in x.shape[nb:]:
+        K *= s
+    N = 1
+    for s in out_shape:
+        N *= s
+    y = quant_matmul_pallas(
+        x.reshape(M, K), q.reshape(K, N), scale.reshape(N),
+        interpret=(impl == "pallas_interpret"),
+    )
+    return y.reshape(*batch_shape, *out_shape)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,105 @@
+"""Int8 backbone quantization (the QLoRA tier, PR 9).
+
+``quantize_backbone`` walks an initialized backbone param tree and replaces
+every adapter-capable BaseOp weight leaf with a ``{"q": int8, "scale": f32}``
+node — symmetric, per-output-channel scale, computed ONCE at model build
+(``ModelGenerator.init_backbone``).  Everything else (norms, biases,
+embeddings/unembedding, convs, SSM decay/gate leaves, MoE expert stacks,
+the audio cross-attention k/v read directly by ``Model._cross_kv``) stays
+dense: those leaves are either tiny, numerically sensitive, or consumed by
+direct einsums outside the :func:`repro.peft.hooks.apply_base_op` chokepoint
+that knows how to read quantized nodes.
+
+The scale keeps the weight's rank with size-1 contracted axes (``keepdims``),
+so (a) dequantization is uniformly ``q.astype(f32) * scale`` under numpy
+broadcasting for every site — 2D MLP/SSM projections, the 3D attention
+q/k/v ([d, H, dh], contracted axis -3) and o ([H, dh, d], contracted axes
+-3/-2) — and (b) stacked layer leaves quantize in one shot: the reduction
+axes are trailing, so the leading layer-stack dims ride through untouched
+and ``jax.lax.scan`` / per-layer slicing see matching leading axes on both
+``q`` and ``scale``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+
+#: BaseOp weight leaves eligible for int8 storage (see module docstring).
+QUANT_LEAVES = frozenset({
+    "w_q", "w_k", "w_v", "w_o",
+    "w_gate", "w_up", "w_down", "w_fc1", "w_fc2",
+    "w_in", "w_out",
+})
+
+#: subtrees never entered: MoE expert stacks run direct einsums inside the
+#: shard_map expert core, not through apply_base_op
+_SKIP_SUBTREES = frozenset({"moe"})
+
+
+def is_quantized(w: Any) -> bool:
+    return isinstance(w, dict) and "q" in w and "scale" in w
+
+
+def _contract_axes(name: str, path: Tuple[str, ...]) -> Tuple[int, ...]:
+    """Per-layer contracted axes of a BaseOp weight, as negative indices
+    (robust to any number of leading layer-stack dims)."""
+    if "mlstm" in path:
+        return (-2,)  # xLSTM q/k/v are square 2D [d_in, d_in] projections
+    if name == "w_o":
+        return (-3, -2)  # [H, dh, d] -> contract heads x head_dim
+    if name in ("w_q", "w_k", "w_v"):
+        return (-3,)  # [d, H(kv), dh] -> contract embed
+    return (-2,)  # [d_in, d_out]
+
+
+def quantize_weight(w: jax.Array, axes: Tuple[int, ...]) -> Dict[str, jax.Array]:
+    """Symmetric int8 quantization with per-output-channel scale."""
+    wf = w.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(wf), axis=axes, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale}
+
+
+def dequantize(w: Dict[str, jax.Array], dtype=jnp.float32) -> jax.Array:
+    """The dense effective weight — lazy on the hot path (DoRA reads it;
+    XLA dead-code-eliminates it for every other method)."""
+    return (w["q"].astype(jnp.float32) * w["scale"]).astype(dtype)
+
+
+def quantize_backbone(params: Any, cfg: ArchConfig) -> Any:
+    """Replace eligible weight leaves of ``params`` with quantized nodes.
+
+    No-op unless ``cfg.backbone_dtype == "int8"`` callers gate on it; the
+    walk itself is config-independent.
+    """
+    def walk(node: Any, path: Tuple[str, ...]) -> Any:
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for k, v in node.items():
+            if isinstance(v, dict):
+                out[k] = v if k in _SKIP_SUBTREES else walk(v, path + (k,))
+            elif (k in QUANT_LEAVES
+                  and not (path and path[-1] == "cross" and k in ("w_k", "w_v"))):
+                out[k] = quantize_weight(v, _contract_axes(k, path))
+            else:
+                out[k] = v
+        return out
+
+    return walk(params, ())
+
+
+def quantized_param_count(cfg: ArchConfig) -> int:
+    """Backbone params resident at ``backbone_dtype`` bytes (the BaseOp
+    sites), for the Eq. 5 split accounting — the remainder (norms, embed,
+    experts, direct-einsum leaves) stays at activation precision.  Analytic:
+    per-layer BaseOp dims x layer count, clamped to the true total."""
+    from repro.peft.adapters import base_op_dims
+
+    per_layer = sum(din * dout for din, dout in base_op_dims(cfg).values())
+    return min(per_layer * cfg.num_layers, cfg.param_count())

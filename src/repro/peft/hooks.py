@@ -19,6 +19,8 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kops
+
 
 class AdapterContext:
     """Interface: maps BaseOp names to adapter transforms.
@@ -81,6 +83,28 @@ def apply_base_op(
 ) -> jax.Array:
     """A BaseOp: einsum + optional adapter Dispatch/Aggregate around it."""
     ctx = _ENV.ctx
+    if isinstance(w, dict):
+        # int8 frozen-backbone leaf {"q", "scale"} (repro.models.quantize):
+        # the base matmul reads the int8 blocks through kops.quant_matmul
+        # (dequant fused in-kernel on the Pallas tiers).  The dense
+        # effective weight is built lazily for methods that read it (DoRA's
+        # renorm, selective base_weight rewrites) — XLA dead-code-eliminates
+        # it for everyone else, so it never costs HBM on the hot path.
+        from repro.models.quantize import dequantize  # lazy: import cycle
+
+        w_dense = dequantize(w, dtype=x.dtype)
+        w_eff = ctx.base_weight(name, w_dense) if ctx is not None else w_dense
+        if w_eff is w_dense:
+            out = kops.quant_matmul(x, w["q"], w["scale"], einsum_str)
+        else:
+            # a method rewrote the effective weight: the quantized blocks no
+            # longer describe the op — fall back to the dense formulation
+            out = jnp.einsum(einsum_str, x, w_eff)
+        if bias is not None:
+            out = out + bias
+        if ctx is not None and ctx.has(name):
+            out = ctx.apply(name, x, out, w_eff)
+        return out
     if ctx is not None:
         w = ctx.base_weight(name, w)
     out = jnp.einsum(einsum_str, x, w)

@@ -38,6 +38,11 @@ KERNEL_TIER = os.environ.get("REPRO_KERNEL_IMPL", "pallas_interpret")
 assert KERNEL_TIER in ("xla", "pallas", "pallas_interpret"), KERNEL_TIER
 INTERPRET = KERNEL_TIER != "pallas"
 
+# Backbone storage precision for the end-to-end train-step leg.  The CI
+# matrix runs the int8 leg against every tier — proving the quantized
+# backbone (PR 9) trains through the same grouped-kernel routing as bf16.
+BACKBONE_DTYPE = os.environ.get("REPRO_BACKBONE_DTYPE", "bfloat16")
+
 # Direct kernel-body-vs-oracle tests exercise the Pallas kernels whatever
 # the env says — running them again on the xla leg would only repeat the
 # pallas_interpret leg's work, so that leg keeps the ops-level/e2e tests.
@@ -520,6 +525,66 @@ def test_ssm_cell_grads_tier_vs_xla(cell, key):
 
 
 # ---------------------------------------------------------------------------
+# int8 quant matmul (PR 9): fwd parity + the custom_vjp dx path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 256, 192), (64, 96, 64)])
+@skip_on_xla
+def test_quant_matmul_kernel_grads_match_ref(M, K, N, key):
+    from repro.kernels.quant_matmul import (quant_matmul_pallas,
+                                            quant_matmul_ref)
+    from repro.models.quantize import quantize_weight
+
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (M, K), jnp.float32)
+    w = jax.random.normal(ks[1], (K, N), jnp.float32) * 0.1
+    qw = quantize_weight(w, (-2,))
+    q, scale = qw["q"], qw["scale"].reshape(N)
+    g = jax.random.normal(ks[2], (M, N), jnp.float32)
+
+    def run_k(x):
+        return (quant_matmul_pallas(x, q, scale, interpret=INTERPRET) * g).sum()
+
+    def run_r(x):
+        return (quant_matmul_ref(x, q, scale) * g).sum()
+
+    yk = quant_matmul_pallas(x, q, scale, interpret=INTERPRET)
+    yr = quant_matmul_ref(x, q, scale)
+    assert _max_err(yk, yr) < 1e-4
+    vk, dk = jax.value_and_grad(run_k)(x)
+    vr, dr = jax.value_and_grad(run_r)(x)
+    np.testing.assert_allclose(float(vk), float(vr), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dr),
+                               rtol=1e-4, atol=1e-3)
+
+
+@skip_parity_on_xla
+def test_quant_matmul_op_tier_vs_xla(key):
+    """The 3D einsum dispatcher (flatten -> kernel -> reshape) matches the
+    xla tier's dequantized einsum, value and dx."""
+    from repro.models.quantize import quantize_weight
+
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (2, 16, 32), jnp.float32)
+    w = jax.random.normal(ks[1], (32, 4, 8), jnp.float32) * 0.1
+    qw = quantize_weight(w, (-3,))
+    g = jax.random.normal(ks[2], (2, 16, 4, 8), jnp.float32)
+
+    def loss(x):
+        y = kops.quant_matmul(x, qw["q"], qw["scale"], "bsd,dhk->bshk")
+        return (y * g).sum()
+
+    with _impl("xla"):
+        vx, dx = jax.value_and_grad(loss)(x)
+    with _impl(KERNEL_TIER):
+        vp, dp = jax.value_and_grad(loss)(x)
+    np.testing.assert_allclose(float(vp), float(vx), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(dp), np.asarray(dx),
+                               rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
 # end-to-end: value_and_grad of a full train step under the Pallas tier
 # ---------------------------------------------------------------------------
 
@@ -531,8 +596,14 @@ def _train_step_grads(cfg_name, targets, key, seq_len=32):
     from repro.peft.multitask import MultiTaskAdapters, TaskSegments
 
     cfg = smoke_config(cfg_name)
+    if BACKBONE_DTYPE != cfg.backbone_dtype:
+        cfg = cfg.with_overrides(backbone_dtype=BACKBONE_DTYPE)
     m = build_model(cfg)
     params = m.init(key)
+    if cfg.backbone_dtype == "int8":
+        from repro.models.quantize import quantize_backbone
+
+        params = quantize_backbone(params, cfg)
     mta = MultiTaskAdapters(cfg, [AdapterConfig(LORA, rank=4, targets=targets),
                                   AdapterConfig(LORA, rank=4, targets=targets)])
     seg = TaskSegments.contiguous([2, 2])

