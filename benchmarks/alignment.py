@@ -5,7 +5,8 @@ from __future__ import annotations
 from benchmarks.common import csv_row
 from repro.core.alignment import align_tasks
 from repro.data import make_task
-from repro.peft.adapters import AdapterConfig, LORA
+from repro.peft.adapters import LORA
+from repro.peft.methods import AdapterConfig
 
 WL_A = [("sst2", 4), ("qa", 2), ("qa", 4), ("sst2", 4), ("sst2", 8), ("sst2", 2),
         ("qa", 4), ("qa", 4)]

@@ -25,7 +25,8 @@ from repro.core import ExecutionPlanner, ModelGenerator, ParallelismSpec, PEFTEn
 from repro.core.fusion import FusionResult, build_htask
 from repro.core.planner import ExecutionPlan
 from repro.data import HTaskLoader, make_task
-from repro.peft.adapters import ADAPTER_TUNING, LORA, AdapterConfig
+from repro.peft.adapters import ADAPTER_TUNING, LORA
+from repro.peft.methods import AdapterConfig
 
 
 def bench_config(arch: str = "llama3.2-3b", **over):

@@ -24,7 +24,7 @@ from benchmarks.common import bench_config, csv_row
 def _run(with_traffic: bool, steps: int = 6):
     from repro.core.task import ParallelismSpec
     from repro.data.synthetic import make_task
-    from repro.peft.adapters import AdapterConfig
+    from repro.peft.methods import AdapterConfig
     from repro.serve import CoServeConfig, MuxTuneService
 
     cfg = bench_config("llama3.2-3b")

@@ -27,7 +27,7 @@ def run() -> list[str]:
     from repro.core.task import ParallelismSpec
     from repro.data.synthetic import make_task
     from repro.fleet import FleetRouter
-    from repro.peft.adapters import AdapterConfig
+    from repro.peft.methods import AdapterConfig
     from repro.serve import MuxTuneService
 
     cfg = bench_config("llama3.2-3b")

@@ -12,7 +12,8 @@ from benchmarks.common import bench_config, csv_row, default_tasks
 from repro.configs import get_config
 from repro.core import CostModel, ParallelismSpec, build_htask
 from repro.data import make_task
-from repro.peft.adapters import AdapterConfig, LORA
+from repro.peft.adapters import LORA
+from repro.peft.methods import AdapterConfig
 
 
 def _tasks(n):

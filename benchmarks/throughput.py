@@ -9,7 +9,8 @@ from __future__ import annotations
 from repro.core.task import ParallelismSpec
 from benchmarks.common import bench_config, csv_row, default_tasks, run_system
 from repro.data import make_task
-from repro.peft.adapters import AdapterConfig, LORA
+from repro.peft.adapters import LORA
+from repro.peft.methods import AdapterConfig
 
 
 def _tpu_projection(combo: str, tasks) -> dict:

@@ -17,7 +17,8 @@ import numpy as np
 from repro.configs import smoke_config
 from repro.core.task import ParallelismSpec
 from repro.data.synthetic import make_task
-from repro.peft.adapters import LORA, PREFIX_TUNING, AdapterConfig
+from repro.peft.adapters import LORA, PREFIX_TUNING
+from repro.peft.methods import AdapterConfig
 from repro.serve import CoServeConfig, MuxTuneService
 
 STEPS = 6

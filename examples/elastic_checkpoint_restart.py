@@ -25,7 +25,8 @@ from repro.distributed.fault_tolerance import (
     elastic_respec,
     simulated_failure,
 )
-from repro.peft.adapters import AdapterConfig, LORA
+from repro.peft.adapters import LORA
+from repro.peft.methods import AdapterConfig
 
 CKPT = "/tmp/muxtune_elastic_demo"
 

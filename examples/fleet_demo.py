@@ -20,7 +20,8 @@ from repro.configs import smoke_config
 from repro.core.task import ParallelismSpec
 from repro.data.synthetic import make_task
 from repro.fleet import Autoscaler, AutoscalerConfig, FleetRouter
-from repro.peft.adapters import LORA, AdapterConfig
+from repro.peft.adapters import LORA
+from repro.peft.methods import AdapterConfig
 from repro.serve import CoServeConfig, MuxTuneService
 
 STEPS = 6

@@ -15,7 +15,8 @@ import numpy as np
 from repro.configs import smoke_config
 from repro.core import ExecutionPlanner, ModelGenerator, ParallelismSpec, PEFTEngine
 from repro.data import HTaskLoader, make_task
-from repro.peft.adapters import ADAPTER_TUNING, LORA, AdapterConfig
+from repro.peft.adapters import ADAPTER_TUNING, LORA
+from repro.peft.methods import AdapterConfig
 
 
 def main():

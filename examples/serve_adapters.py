@@ -16,7 +16,8 @@ import tempfile
 from repro.configs import smoke_config
 from repro.core.task import ParallelismSpec
 from repro.data.synthetic import make_task
-from repro.peft.adapters import LORA, VERA, AdapterConfig
+from repro.peft.adapters import LORA, VERA
+from repro.peft.methods import AdapterConfig
 from repro.serve import MuxTuneService
 
 

@@ -207,6 +207,20 @@ class ClusterSim:
             pinned=pinned))
         return iid
 
+    def fail_instance(self, iid: int) -> List[str]:
+        """Mirror an instance CRASH: unlike :meth:`remove_instance` the
+        instance may (and usually does) still host tenants — their open-
+        ended residencies are force-departed and the orphaned tenant ids
+        returned so the router can replay recovery placements through
+        ``lockstep_pick``/``lockstep_admit`` on the survivors."""
+        inst = self.instances[iid]
+        orphans = [tid for tid, (i, _) in self._lockstep.items() if i == iid]
+        for tid in orphans:
+            self.lockstep_depart(tid)
+        inst.active.clear()
+        inst.retired = True
+        return orphans
+
     def remove_instance(self, iid: int) -> None:
         """Mirror a fleet drain-and-retire: the instance must be empty.
         It stays in the list (iid == index invariant) but is marked retired

@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.configs import ArchConfig
 from repro.core.task import HTask, ParallelismSpec, PEFTTask
-from repro.peft.adapters import base_op_dims, supports_attention_prefix
+from repro.peft.methods import base_op_dims, supports_attention_prefix
 from repro.peft.methods import adapter_shared_params, adapter_sites
 
 # TPU v5e-class hardware constants (per chip) — also used by §Roofline.

@@ -27,7 +27,7 @@ import numpy as np
 from repro.configs import ArchConfig
 from repro.core.cost_model import CostModel, HardwareProfile
 from repro.core.task import HTask, ParallelismSpec
-from repro.peft.adapters import base_op_dims
+from repro.peft.methods import base_op_dims
 
 
 @dataclass

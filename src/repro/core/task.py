@@ -14,7 +14,7 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.peft.adapters import AdapterConfig
+from repro.peft.methods import AdapterConfig
 
 
 @dataclass(frozen=True)

@@ -13,7 +13,7 @@ from typing import Dict, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.task import PEFTTask
-from repro.peft.adapters import AdapterConfig
+from repro.peft.methods import AdapterConfig
 
 
 @dataclass(frozen=True)

@@ -1,3 +1,9 @@
+from repro.distributed.checkpoint import (  # noqa: F401
+    AsyncCheckpointer,
+    CheckpointStore,
+    restore_latest,
+    save_checkpoint,
+)
 from repro.distributed.sharding import (  # noqa: F401
     ShardingRules,
     activate_rules,

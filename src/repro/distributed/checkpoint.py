@@ -160,24 +160,50 @@ def prune_checkpoints(directory: str, keep: int = 3) -> None:
         shutil.rmtree(os.path.join(directory, f"step_{s:08d}"), ignore_errors=True)
 
 
-class AsyncCheckpointer:
-    """Serializes checkpoints on a background thread (training never stalls
-    beyond the device->host copy)."""
+class CheckpointStore:
+    """THE checkpoint surface (PR 10): one root directory of atomic
+    ``step_<n>`` artifacts with synchronous and background-thread writes,
+    latest-committed reads, manifest-only metadata reads, and the
+    ``strict_shapes`` restore contract.
 
-    def __init__(self, directory: str, keep: int = 3):
-        self.directory = directory
-        self.keep = keep
+    Before PR 10 three near-copies of this logic existed — the training
+    supervisor's ``AsyncCheckpointer``, ``MuxTuneService.checkpoint_out_tenant``
+    and the ``MigrationTicket`` artifact directory.  They all route through
+    one store now, so migration warm-start, completed-tenant resubmission
+    and crash recovery read and write the exact same layout.
+
+    Crash consistency: a reader only ever sees directories that finished
+    the tmp-then-rename commit, so ``restore_latest``/``read_extra`` after
+    a mid-write kill observe the previous committed step, never a torn one.
+    """
+
+    def __init__(self, root: str, keep: int = 0):
+        self.root = root
+        self.keep = keep                     # 0 = keep every step
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
-    def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> None:
+    # -- writes -----------------------------------------------------------
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> str:
+        """Synchronous atomic write; returns the committed path."""
+        path = save_checkpoint(self.root, step, tree, extra)
+        if self.keep:
+            prune_checkpoints(self.root, self.keep)
+        return path
+
+    def save_async(self, step: int, tree: Any,
+                   extra: Optional[Dict] = None) -> None:
+        """Host-copy now (one device sync), serialize on a background
+        thread — the training loop never blocks on file IO.  Saves are
+        ordered: a still-running previous save is joined first, and its
+        error (if any) surfaces here or on the next ``wait()``."""
         self.wait()
         host_tree = jax.tree.map(np.asarray, tree)  # sync copy out of device
 
         def work():
             try:
-                save_checkpoint(self.directory, step, host_tree, extra)
-                prune_checkpoints(self.directory, self.keep)
+                self.save(step, host_tree, extra)
             except BaseException as e:  # surfaced on next wait()
                 self._error = e
 
@@ -185,9 +211,59 @@ class AsyncCheckpointer:
         self._thread.start()
 
     def wait(self) -> None:
+        """Join the in-flight background save (re-raising its error)."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
         if self._error is not None:
             err, self._error = self._error, None
             raise err
+
+    # -- reads ------------------------------------------------------------
+
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.root)
+
+    def read_extra(self, step: Optional[int] = None) -> Optional[Dict]:
+        """Manifest-only read of a committed artifact's ``extra`` record (no
+        leaf IO, no ``like`` tree needed) — crash recovery plans from this
+        before it knows what shapes the restoring stack will open."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            return None
+        path = os.path.join(self.root, f"step_{step:08d}", "manifest.json")
+        with open(path) as f:
+            return json.load(f).get("extra", {})
+
+    def restore(self, like: Any, step: Optional[int] = None,
+                shardings: Any = None, verify: bool = True,
+                strict_shapes: bool = True
+                ) -> Optional[Tuple[int, Any, Dict]]:
+        """(step, tree, extra) of ``step`` — default the latest committed —
+        or None when the store holds no committed artifact."""
+        if step is None:
+            return restore_latest(self.root, like, shardings, verify,
+                                  strict_shapes)
+        tree, extra = restore_checkpoint(self.root, step, like, shardings,
+                                         verify, strict_shapes)
+        return step, tree, extra
+
+    def prune(self, keep: Optional[int] = None) -> None:
+        prune_checkpoints(self.root, keep if keep is not None else
+                          (self.keep or 3))
+
+
+class AsyncCheckpointer:
+    """Back-compat facade over :class:`CheckpointStore` (pre-PR-10 API:
+    ``save`` is the ASYNC write).  New code should use the store directly."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self.store = CheckpointStore(directory, keep=keep)
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> None:
+        self.store.save_async(step, tree, extra)
+
+    def wait(self) -> None:
+        self.store.wait()

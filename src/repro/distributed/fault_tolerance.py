@@ -15,8 +15,10 @@ Design points realized here:
    fastest hosts next iteration.  With MuxTune's static bucket templates the
    re-dispatch is a permutation of the (host, micro-batch) table, so shapes
    and compiled steps are untouched — re-planning is O(hosts log hosts).
- * ``ElasticPlanner`` — given a new chip count, recomputes the ParallelismSpec
-   and returns the reshard plan (checkpoint restore handles the data move).
+ * ``ElasticPlanner`` — the shrunk-capacity brain: recomputes the
+   ParallelismSpec for a changed chip count (checkpoint restore handles the
+   data move) and, for the fleet tier, orders and drives the re-admission
+   of tenants orphaned by a hard instance loss onto surviving capacity.
 """
 from __future__ import annotations
 
@@ -29,7 +31,7 @@ import numpy as np
 
 from repro.core.task import ParallelismSpec
 from repro.distributed.checkpoint import (
-    AsyncCheckpointer,
+    CheckpointStore,
     latest_step,
     restore_checkpoint,
 )
@@ -53,7 +55,7 @@ class TrainSupervisor:
     def __init__(self, cfg: SupervisorConfig,
                  failure_hook: Optional[Callable[[int], None]] = None):
         self.cfg = cfg
-        self.ckpt = AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep)
+        self.ckpt = CheckpointStore(cfg.ckpt_dir, keep=cfg.keep)
         self.failure_hook = failure_hook
         self.restarts = 0
 
@@ -82,7 +84,7 @@ class TrainSupervisor:
                 state = step_fn(state, i)
                 i += 1
                 if i % self.cfg.ckpt_every == 0 or i == n_steps:
-                    self.ckpt.save(i, state, extra={"next_step": i})
+                    self.ckpt.save_async(i, state, extra={"next_step": i})
             except _SimulatedFailure:
                 self.restarts += 1
                 if self.restarts > self.cfg.max_restarts:
@@ -162,6 +164,61 @@ class StragglerMitigator:
 # ---------------------------------------------------------------------------
 # Elastic scaling
 # ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RecoveryAction:
+    """One planned step of elastic recovery after an instance loss."""
+
+    tenant_id: str
+    action: str                  # "readmit" | "queue"
+    target: Optional[int] = None  # instance the tenant landed on (readmit)
+
+
+class ElasticPlanner:
+    """Decides how training continues when capacity shrinks.
+
+    Two consumers:
+
+    * the single-engine world asks :meth:`respec` for the ParallelismSpec of
+      a changed chip count (checkpoint restore handles the data move);
+    * the fleet router asks :meth:`plan_recovery` to drive re-admission of
+      the tenants orphaned by a hard instance loss onto survivors — highest
+      priority first, then most training progress (when not everyone fits,
+      the tenants with the most sunk work are placed before the shrunk
+      capacity runs out), leftovers explicitly queued rather than dropped.
+    """
+
+    def __init__(self, prefer_tp: int = 1):
+        self.prefer_tp = prefer_tp
+
+    def respec(self, old: ParallelismSpec,
+               new_total_chips: int) -> ParallelismSpec:
+        return elastic_respec(old, new_total_chips, self.prefer_tp)
+
+    def recovery_order(
+        self, orphans: Sequence[Tuple[str, int, int]]) -> List[str]:
+        """Re-admission order for ``(tenant_id, priority, steps_trained)``
+        triples: priority desc, steps trained desc, id for determinism."""
+        return [tid for tid, _, _ in
+                sorted(orphans, key=lambda o: (-o[1], -o[2], o[0]))]
+
+    def plan_recovery(
+        self,
+        orphans: Sequence[Tuple[str, int, int]],
+        place: Callable[[str], Optional[int]],
+    ) -> List[RecoveryAction]:
+        """Drive recovery: call ``place(tenant_id)`` for each orphan in
+        recovery order.  ``place`` performs the actual re-admission and
+        returns the landing instance id, or None when nothing feasible is
+        left (the caller queues the tenant).  Placement mutates capacity,
+        so the callback runs strictly in plan order."""
+        out: List[RecoveryAction] = []
+        for tid in self.recovery_order(orphans):
+            target = place(tid)
+            out.append(RecoveryAction(
+                tid, "readmit" if target is not None else "queue", target))
+        return out
 
 
 def elastic_respec(

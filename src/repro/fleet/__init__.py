@@ -7,7 +7,8 @@ in lockstep as the placement oracle.
 from repro.fleet.autoscaler import Autoscaler, AutoscalerConfig
 from repro.fleet.migration import (MigrationProtocol, MigrationReport,
                                    PHASES)
-from repro.fleet.router import (FleetInstance, FleetRouter, RouteDecision)
+from repro.fleet.router import (FleetInstance, FleetRouter, RecoveryReport,
+                                RouteDecision)
 
 __all__ = [
     "Autoscaler",
@@ -17,5 +18,6 @@ __all__ = [
     "MigrationProtocol",
     "MigrationReport",
     "PHASES",
+    "RecoveryReport",
     "RouteDecision",
 ]

@@ -78,12 +78,17 @@ class Autoscaler:
         if fleet.clock - self._last_scale_clock < c.cooldown_ticks:
             return
         n = len(fleet.instances)
-        pressure = c.queue_pressure and bool(fleet.queue)
+        # recovery-queued orphans (crash survivors with no feasible target)
+        # count as queue pressure: scale-up is how a shrunken fleet gets
+        # its capacity back
+        pressure = c.queue_pressure and bool(fleet.queue
+                                             or fleet.recovery_queue)
         if n < c.max_instances and (util > c.scale_up_util or pressure):
             with span("fleet.scale_up", track="fleet",
                       args={"utilization": util, "instances": n,
                             "queue_pressure": pressure}):
                 inst = fleet.spawn()
+                fleet._drain_recovery()
                 fleet._drain_queue()
             self._record(fleet, "up", inst.iid, util)
             return

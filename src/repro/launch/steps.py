@@ -21,7 +21,8 @@ from repro.configs import ArchConfig, ShapeSpec
 from repro.distributed.sharding import ShardingRules, activate_rules, logical_to_spec
 from repro.models.layers import abstract, is_spec_leaf, spec_logical_axes
 from repro.models.transformer import Model
-from repro.peft.adapters import AdapterConfig, LORA
+from repro.peft.adapters import LORA
+from repro.peft.methods import AdapterConfig
 from repro.peft.multitask import MultiTaskAdapters, TaskSegments
 from repro.train.optimizer import AdamWState, adamw_init, adamw_update, apply_updates
 

@@ -22,7 +22,8 @@ from repro.configs import get_config, smoke_config
 from repro.core import ExecutionPlanner, ModelGenerator, ParallelismSpec, PEFTEngine
 from repro.data import HTaskLoader, make_task
 from repro.distributed.fault_tolerance import SupervisorConfig, TrainSupervisor
-from repro.peft.adapters import LORA, AdapterConfig
+from repro.peft.adapters import LORA
+from repro.peft.methods import AdapterConfig
 from repro.peft.methods import resolve_kind
 
 

@@ -99,7 +99,7 @@ def quantized_param_count(cfg: ArchConfig) -> int:
     sites), for the Eq. 5 split accounting — the remainder (norms, embed,
     experts, direct-einsum leaves) stays at activation precision.  Analytic:
     per-layer BaseOp dims x layer count, clamped to the true total."""
-    from repro.peft.adapters import base_op_dims
+    from repro.peft.methods import base_op_dims
 
     per_layer = sum(din * dout for din, dout in base_op_dims(cfg).values())
     return min(per_layer * cfg.num_layers, cfg.param_count())

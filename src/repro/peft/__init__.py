@@ -14,26 +14,26 @@ from repro.peft.hooks import (  # noqa: F401
 from repro.peft.adapters import (  # noqa: F401
     ADAPTER_TUNING,
     BITFIT,
-    DEFAULT_TARGETS,
     DIFF_PRUNING,
     DORA,
     IA3,
     LORA,
     PREFIX_TUNING,
     VERA,
-    AdapterConfig,
     adapter_spec,
-    base_op_dims,
-    supports_attention_prefix,
 )
 from repro.peft.methods import (  # noqa: F401
+    DEFAULT_TARGETS,
+    AdapterConfig,
     ApplyContext,
     PEFTMethod,
     adapter_sites,
+    base_op_dims,
     get_method,
     method_names,
     register_method,
     resolve_kind,
+    supports_attention_prefix,
 )
 from repro.peft.multitask import MultiTaskAdapters, TaskSegments  # noqa: F401
 

@@ -1,31 +1,29 @@
-"""Adapter config + BaseOp dims + the PR-3 deprecation shim (§2.1, §3.2).
+"""Legacy kind constants — the retired PR-3 deprecation shim.
 
-The unified PEFT representation now lives in ``repro.peft.methods``: each
-method is a :class:`~repro.peft.methods.base.PEFTMethod` plugin declaring
-its ParamSpecs, Dispatch/Aggregate rules, Eq. 5 footprint, optimizer hints
-and checkpoint schema.  This module keeps:
+Everything real moved out of this module:
 
-  * :class:`AdapterConfig` — the per-task adapter hyperparams (kind names
-    resolve through the method registry, legacy aliases included);
-  * :func:`base_op_dims` — the architecture-level (d_in, d_out) inventory
-    of adapter-capable BaseOps (method-agnostic);
-  * legacy constants (``LORA``...) and thin deprecated wrappers
-    (``adapter_spec`` etc.) so pre-PR-3 callers keep working with guidance
-    instead of ImportError.
+  * :class:`AdapterConfig`, :func:`base_op_dims`,
+    :func:`supports_attention_prefix` and ``DEFAULT_TARGETS`` live in
+    ``repro.peft.methods`` (PR 10) — importing them from here still works,
+    but new code should import the registry package directly;
+  * the pre-PR-3 wrappers (``adapter_spec`` / ``adapter_param_count`` /
+    ``adapter_flops_per_token``) were deprecated-with-delegation for one
+    release and now RAISE with migration guidance.
 
-``PREFIX_TUNING`` notably now names REAL prefix-tuning (learned per-task
-k/v rows entering packed attention) — the old declared-but-faked
-IA3-style alias is gone; resolving the name warns once.
+Only the legacy kind constants are native to this module.  ``PREFIX_TUNING``
+notably names REAL prefix-tuning (learned per-task k/v rows entering packed
+attention) since PR 3; resolving the name warns once.
 """
 from __future__ import annotations
 
-import warnings
-from dataclasses import dataclass
-from typing import Dict, Tuple
-
-from repro.configs import ArchConfig
-from repro.models.layers import ParamSpec
-from repro.peft.methods import get_method, method_names, resolve_kind
+# re-exports for pre-PR-10 import sites (canonical home: repro.peft.methods)
+from repro.peft.methods import (  # noqa: F401
+    DEFAULT_TARGETS,
+    AdapterConfig,
+    base_op_dims,
+    method_names,
+    supports_attention_prefix,
+)
 
 LORA = "lora"
 ADAPTER_TUNING = "adapter"
@@ -46,104 +44,28 @@ def __getattr__(name):
         f"get_method(kind) / register_method(...).")
 
 
-DEFAULT_TARGETS = ("attn_q", "attn_k", "attn_v", "attn_o")
-
-
-@dataclass(frozen=True)
-class AdapterConfig:
-    kind: str = LORA
-    rank: int = 8            # lora rank / bottleneck / diff rows / prefix len
-    alpha: float = 16.0
-    targets: Tuple[str, ...] = DEFAULT_TARGETS
-    lr: float = 1e-4         # per-task learning rate (isolation: per-task optim)
-
-    def __post_init__(self):
-        # canonicalize through the registry: legacy aliases map to the new
-        # method names with a one-time warning; unknown kinds fail loudly.
-        object.__setattr__(self, "kind", resolve_kind(self.kind))
-
-    @property
-    def scale(self) -> float:
-        return self.alpha / max(self.rank, 1)
-
-
-def supports_attention_prefix(cfg: ArchConfig) -> bool:
-    """Whether the backbone has standard softmax attention that learned
-    prefix k/v rows can enter (pure-SSM / GLA cells do not)."""
-    return cfg.attention != "none"
-
-
-def base_op_dims(cfg: ArchConfig) -> Dict[str, Tuple[int, int]]:
-    """(d_in, d_out) of every adapter-capable BaseOp for this architecture."""
-    d, dh = cfg.d_model, cfg.resolved_head_dim()
-    dims: Dict[str, Tuple[int, int]] = {}
-    if cfg.attention != "none" or cfg.family == "ssm":
-        qd, kvd = cfg.q_dim, cfg.kv_dim
-        if cfg.family == "ssm":
-            # mLSTM q/k/v operate on the expanded inner dim
-            d_in_ssm = cfg.ssm_expand * d
-            qd = kvd = d_in_ssm
-            dims.update({
-                "attn_q": (d_in_ssm, qd), "attn_k": (d_in_ssm, kvd),
-                "attn_v": (d_in_ssm, kvd),
-            })
-        else:
-            dims.update({
-                "attn_q": (d, qd), "attn_k": (d, kvd), "attn_v": (d, kvd),
-                "attn_o": (qd, d),
-            })
-    if cfg.family == "moe":
-        if cfg.num_shared_experts:
-            ffs = cfg.num_shared_experts * cfg.expert_d_ff
-            dims.update({
-                "shared_mlp_gate": (d, ffs), "shared_mlp_up": (d, ffs),
-                "shared_mlp_down": (ffs, d),
-            })
-    elif cfg.d_ff:
-        if cfg.gated_mlp:
-            dims.update({
-                "mlp_gate": (d, cfg.d_ff), "mlp_up": (d, cfg.d_ff),
-                "mlp_down": (cfg.d_ff, d),
-            })
-        else:
-            dims.update({"mlp_fc1": (d, cfg.d_ff), "mlp_fc2": (cfg.d_ff, d)})
-    if cfg.family in ("hybrid", "ssm"):
-        d_in = cfg.ssm_expand * d
-        if cfg.family == "hybrid":
-            nh = d_in // cfg.ssm_head_dim
-            proj_out = 2 * d_in + 2 * cfg.ssm_state + nh
-            dims.update({"ssm_in": (d, proj_out), "ssm_out": (d_in, d)})
-        else:
-            dims.update({"ssm_in": (d, 2 * d_in), "ssm_out": (d_in, d)})
-    return dims
-
-
 # ---------------------------------------------------------------------------
-# Deprecated wrappers (pre-PR-3 API) — delegate to the method registry
+# Retired wrappers (pre-PR-3 API) — deprecated in PR 3, removed in PR 10
 # ---------------------------------------------------------------------------
 
 
-def _deprecated(old: str, new: str) -> None:
-    warnings.warn(
-        f"repro.peft.adapters.{old} is deprecated; use "
-        f"repro.peft.methods.get_method(kind).{new}", DeprecationWarning,
-        stacklevel=3)
+def _removed(old: str, new: str) -> None:
+    raise RuntimeError(
+        f"repro.peft.adapters.{old} was removed (deprecated since PR 3, "
+        f"retired in PR 10); use repro.peft.methods.get_method(kind).{new}")
 
 
 def adapter_spec(kind: str, rank: int, d_in: int, d_out: int,
-                 n_tasks: int) -> Dict[str, ParamSpec]:
-    """DEPRECATED: per-BaseOp adapter params, stacked over ``n_tasks``."""
-    _deprecated("adapter_spec", "param_specs(rank, d_in, d_out, capacity)")
-    return get_method(kind).param_specs(rank, d_in, d_out, n_tasks)
+                 n_tasks: int):
+    """REMOVED: use ``get_method(kind).param_specs(...)``."""
+    _removed("adapter_spec", "param_specs(rank, d_in, d_out, capacity)")
 
 
-def adapter_param_count(kind: str, rank: int, d_in: int, d_out: int) -> int:
-    """DEPRECATED: per-task trainable params of one adapter site."""
-    _deprecated("adapter_param_count", "param_count(rank, d_in, d_out)")
-    return get_method(kind).param_count(rank, d_in, d_out)
+def adapter_param_count(kind: str, rank: int, d_in: int, d_out: int):
+    """REMOVED: use ``get_method(kind).param_count(...)``."""
+    _removed("adapter_param_count", "param_count(rank, d_in, d_out)")
 
 
-def adapter_flops_per_token(kind: str, rank: int, d_in: int, d_out: int) -> int:
-    """DEPRECATED: forward FLOPs/token of one adapter application."""
-    _deprecated("adapter_flops_per_token", "flops_per_token(rank, d_in, d_out)")
-    return get_method(kind).flops_per_token(rank, d_in, d_out)
+def adapter_flops_per_token(kind: str, rank: int, d_in: int, d_out: int):
+    """REMOVED: use ``get_method(kind).flops_per_token(...)``."""
+    _removed("adapter_flops_per_token", "flops_per_token(rank, d_in, d_out)")

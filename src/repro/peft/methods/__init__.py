@@ -128,8 +128,18 @@ register_method(DoRA())
 register_method(VeRA())
 register_method(BitFit())
 
+# config lives with the registry it resolves through (PR 10; imported after
+# registration because AdapterConfig.__post_init__ canonicalizes kinds)
+from repro.peft.methods.config import (  # noqa: E402
+    DEFAULT_TARGETS,
+    AdapterConfig,
+    base_op_dims,
+    supports_attention_prefix,
+)
+
 __all__ = [
-    "ApplyContext", "PEFTMethod", "adapter_shared_params", "adapter_sites",
-    "get_method", "method_names", "register_method", "resolve_kind",
-    "shared_leaf",
+    "AdapterConfig", "ApplyContext", "DEFAULT_TARGETS", "PEFTMethod",
+    "adapter_shared_params", "adapter_sites", "base_op_dims", "get_method",
+    "method_names", "register_method", "resolve_kind", "shared_leaf",
+    "supports_attention_prefix",
 ]

@@ -1,0 +1,85 @@
+"""Per-task adapter hyperparams + the BaseOp dim inventory (§2.1, §3.2).
+
+Moved here from ``repro.peft.adapters`` in PR 10: the config travels with
+the method registry it resolves through, and the old module keeps only the
+legacy kind constants (its pre-PR-3 wrappers now raise).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+from repro.configs import ArchConfig
+
+DEFAULT_TARGETS = ("attn_q", "attn_k", "attn_v", "attn_o")
+
+
+@dataclass(frozen=True)
+class AdapterConfig:
+    kind: str = "lora"
+    rank: int = 8            # lora rank / bottleneck / diff rows / prefix len
+    alpha: float = 16.0
+    targets: Tuple[str, ...] = DEFAULT_TARGETS
+    lr: float = 1e-4         # per-task learning rate (isolation: per-task optim)
+
+    def __post_init__(self):
+        # canonicalize through the registry: legacy aliases map to the new
+        # method names with a one-time warning; unknown kinds fail loudly.
+        # (late import: this module is re-exported by the registry package)
+        from repro.peft.methods import resolve_kind
+        object.__setattr__(self, "kind", resolve_kind(self.kind))
+
+    @property
+    def scale(self) -> float:
+        return self.alpha / max(self.rank, 1)
+
+
+def supports_attention_prefix(cfg: ArchConfig) -> bool:
+    """Whether the backbone has standard softmax attention that learned
+    prefix k/v rows can enter (pure-SSM / GLA cells do not)."""
+    return cfg.attention != "none"
+
+
+def base_op_dims(cfg: ArchConfig) -> Dict[str, Tuple[int, int]]:
+    """(d_in, d_out) of every adapter-capable BaseOp for this architecture."""
+    d, dh = cfg.d_model, cfg.resolved_head_dim()
+    dims: Dict[str, Tuple[int, int]] = {}
+    if cfg.attention != "none" or cfg.family == "ssm":
+        qd, kvd = cfg.q_dim, cfg.kv_dim
+        if cfg.family == "ssm":
+            # mLSTM q/k/v operate on the expanded inner dim
+            d_in_ssm = cfg.ssm_expand * d
+            qd = kvd = d_in_ssm
+            dims.update({
+                "attn_q": (d_in_ssm, qd), "attn_k": (d_in_ssm, kvd),
+                "attn_v": (d_in_ssm, kvd),
+            })
+        else:
+            dims.update({
+                "attn_q": (d, qd), "attn_k": (d, kvd), "attn_v": (d, kvd),
+                "attn_o": (qd, d),
+            })
+    if cfg.family == "moe":
+        if cfg.num_shared_experts:
+            ffs = cfg.num_shared_experts * cfg.expert_d_ff
+            dims.update({
+                "shared_mlp_gate": (d, ffs), "shared_mlp_up": (d, ffs),
+                "shared_mlp_down": (ffs, d),
+            })
+    elif cfg.d_ff:
+        if cfg.gated_mlp:
+            dims.update({
+                "mlp_gate": (d, cfg.d_ff), "mlp_up": (d, cfg.d_ff),
+                "mlp_down": (cfg.d_ff, d),
+            })
+        else:
+            dims.update({"mlp_fc1": (d, cfg.d_ff), "mlp_fc2": (cfg.d_ff, d)})
+    if cfg.family in ("hybrid", "ssm"):
+        d_in = cfg.ssm_expand * d
+        if cfg.family == "hybrid":
+            nh = d_in // cfg.ssm_head_dim
+            proj_out = 2 * d_in + 2 * cfg.ssm_state + nh
+            dims.update({"ssm_in": (d, proj_out), "ssm_out": (d_in, d)})
+        else:
+            dims.update({"ssm_in": (d, 2 * d_in), "ssm_out": (d_in, d)})
+    return dims

@@ -30,13 +30,14 @@ import numpy as np
 
 from repro.configs import ArchConfig
 from repro.models.layers import ParamSpec, abstract, materialize
-from repro.peft.adapters import (
+from repro.peft.hooks import AdapterContext
+from repro.peft.methods import (
     AdapterConfig,
+    ApplyContext,
     base_op_dims,
+    get_method,
     supports_attention_prefix,
 )
-from repro.peft.hooks import AdapterContext
-from repro.peft.methods import ApplyContext, get_method
 
 
 @dataclass(frozen=True)

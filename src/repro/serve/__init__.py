@@ -12,6 +12,7 @@ from repro.serve.admission import (  # noqa: F401
 from repro.serve.service import (  # noqa: F401
     CANCELLED,
     COMPLETED,
+    LOST,
     MIGRATED,
     MigrationTicket,
     MuxTuneService,
@@ -19,6 +20,10 @@ from repro.serve.service import (  # noqa: F401
     REJECTED,
     RUNNING,
     TenantRecord,
+)
+from repro.serve.spec import (  # noqa: F401
+    RequestSpec,
+    TenantSpec,
 )
 from repro.serve.inference import (  # noqa: F401
     CoServeConfig,

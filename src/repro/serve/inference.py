@@ -99,6 +99,24 @@ class InferenceRequest:
     # set at retirement: did the request complete within its class deadline?
     slo_met: Optional[bool] = None
 
+    @classmethod
+    def from_spec(cls, spec, task_id: str, request_id: str,
+                  submit_clock: int = 0) -> "InferenceRequest":
+        """Build a request from a :class:`repro.serve.spec.RequestSpec` —
+        the durable record crash recovery re-creates requests from."""
+        return cls(
+            request_id=request_id,
+            task_id=task_id,
+            prompt=spec.prompt_array(),
+            max_new_tokens=int(spec.max_new_tokens),
+            submit_clock=int(submit_clock),
+            temperature=float(spec.temperature),
+            top_k=int(spec.top_k),
+            top_p=float(spec.top_p),
+            seed=int(spec.seed),
+            slo_class=int(spec.slo_class),
+        )
+
     @property
     def queue_wait(self) -> int:
         return self.bind_clock - self.submit_clock if self.bind_clock >= 0 else -1

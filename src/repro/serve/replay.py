@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import tempfile
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
@@ -38,9 +39,11 @@ from repro.core.task import ParallelismSpec, PEFTTask
 from repro.data.synthetic import make_task
 from repro.obs.log import get_logger
 from repro.obs.tracing import SpanTracer, set_tracer
-from repro.peft.adapters import ADAPTER_TUNING, LORA, AdapterConfig
+from repro.peft.adapters import ADAPTER_TUNING, LORA
+from repro.peft.methods import AdapterConfig
 from repro.serve.admission import AdmissionConfig
 from repro.serve.service import COMPLETED, RUNNING, MuxTuneService
+from repro.serve.spec import RequestSpec, TenantSpec
 
 _DATASETS = ("sst2", "qa", "rte")
 log = get_logger("replay")
@@ -109,14 +112,15 @@ def replay_trace(
         while pending and pending[0][1].t_min <= t:
             idx, arr = pending.pop(0)
             target = max(1, int(round(arr.duration_min * iters_per_min)))
-            service.submit(arrival_to_task(arr, idx), target_steps=target)
+            service.submit(TenantSpec(arrival_to_task(arr, idx),
+                                      target_steps=target))
         resident = [r.task_id for r in service.resident]
         for i in range(requests_per_min if resident else 0):
             tid = resident[(injected + i) % len(resident)]
             prompt = req_rng.randint(1, 64,
                                      size=int(req_rng.randint(3, 9)))
-            service.submit_request(tid, prompt, max_new_tokens=4,
-                                   slo_class=(injected + i) % 2)
+            service.submit_request(tid, RequestSpec(
+                prompt, max_new_tokens=4, slo_class=(injected + i) % 2))
         injected += requests_per_min if resident else 0
         for _ in range(max(1, int(round(iters_per_min)))):
             service.step()
@@ -206,6 +210,8 @@ def replay_fleet(
     autoscale: bool = False,
     autoscaler_config=None,
     force_migration: bool = False,
+    kill_instance: bool = False,
+    ckpt_cadence: int = 0,
 ) -> Dict:
     """Replay ``trace`` through an N-instance fleet: the ``FleetRouter``
     places arrivals with ``policy`` against live admission state (the
@@ -214,16 +220,26 @@ def replay_fleet(
     and retires instances while ``force_migration`` guarantees at least one
     live migration lands in the trace (smoke-run determinism).
 
+    Fault injection (PR 10): ``ckpt_cadence`` > 0 turns on per-tenant
+    async cadence checkpoints (every instance shares one fault directory);
+    ``kill_instance`` crashes the most-loaded instance once, mid-replay —
+    its tenants recover onto survivors from their latest committed
+    checkpoints and their in-flight requests are re-created there.
+
     Fusion stays off fleet-wide so a migrated tenant's data stream (and
     therefore its loss trajectory) is exactly its solo trajectory."""
     from repro.fleet import Autoscaler, FleetRouter
 
     cfg = cfg or smoke_config("llama3.2-3b")
     par = parallelism or ParallelismSpec()
+    fault_dir = (tempfile.mkdtemp(prefix="muxtune-fault-")
+                 if kill_instance or ckpt_cadence > 0 else None)
 
     def factory(iid: int) -> MuxTuneService:
         return MuxTuneService(cfg, par, admission=admission, seed=seed,
-                              reserve_slots=4, enable_fusion=False)
+                              reserve_slots=4, enable_fusion=False,
+                              fault_dir=fault_dir,
+                              ckpt_cadence=ckpt_cadence)
 
     fleet = FleetRouter(factory, n_instances=n_instances, policy=policy)
     if autoscale:
@@ -235,19 +251,26 @@ def replay_fleet(
     req_rng = np.random.RandomState(seed + 1)
     injected = 0
     forced: List = []
+    kills: List = []
     t = 0.0
     while t <= horizon:
         while pending and pending[0][1].t_min <= t:
             idx, arr = pending.pop(0)
             target = max(1, int(round(arr.duration_min * iters_per_min)))
-            fleet.submit(arrival_to_task(arr, idx), target_steps=target)
+            fleet.submit(TenantSpec(arrival_to_task(arr, idx),
+                                    target_steps=target))
         placed = sorted(fleet.placements)
         for i in range(requests_per_min if placed else 0):
             tid = placed[(injected + i) % len(placed)]
             prompt = req_rng.randint(1, 64, size=int(req_rng.randint(3, 9)))
-            fleet.submit_request(tid, prompt, max_new_tokens=4,
-                                 slo_class=(injected + i) % 2)
+            fleet.submit_request(tid, RequestSpec(
+                prompt, max_new_tokens=4, slo_class=(injected + i) % 2))
         injected += requests_per_min if placed else 0
+        if (kill_instance and not kills and t >= horizon / 2
+                and len(fleet.instances) >= 2):
+            victim = max(fleet.instances.values(),
+                         key=lambda i: (i.n_resident, i.iid))
+            kills.append(fleet.kill(victim.iid))
         if force_migration and not forced and t >= horizon / 2:
             rep = _try_force_migration(fleet)
             if rep is not None:
@@ -271,21 +294,31 @@ def replay_fleet(
             fleet.step()
 
     acct = fleet.accounting()
-    all_insts = list(fleet.instances.values()) + fleet.retired_instances
+    # survivors carry the authoritative post-recovery records; failed
+    # instances only contribute tenants that COMPLETED before the crash
+    survivors = list(fleet.instances.values()) + fleet.retired_instances
+    all_insts = survivors + fleet.failed_instances
     completed = {
         tid: rec
         for inst in all_insts
         for tid, rec in inst.service.tenants.items()
         if rec.state == COMPLETED
     }
-    # zero-drop guarantee: every request a migration moved must have
-    # completed (or still be live) on SOME instance — never cancelled
+    # zero-drop guarantee: every request a migration moved OR a recovery
+    # re-created must have completed (or still be live) on SOME surviving
+    # instance — never cancelled, never vanished
     moved_ids = {rid for m in fleet.migrations for rid in m.request_ids}
+    recovered_ids = {rid for r in fleet.recoveries
+                     for rid in r.requeued_requests}
     dropped = []
-    for inst in all_insts:
+    for inst in survivors:
         for rid, req in inst.service.coserve.requests.items():
-            if rid in moved_ids and req.state == "cancelled":
+            if rid in (moved_ids | recovered_ids) and req.state == "cancelled":
                 dropped.append(rid)
+    for rid in sorted(recovered_ids):
+        if not any(rid in inst.service.coserve.requests
+                   for inst in survivors):
+            dropped.append(rid)
     makespans = [r.makespan for r in completed.values() if r.makespan >= 0]
     out = {
         "fleet": acct,
@@ -301,6 +334,13 @@ def replay_fleet(
             "forced_migrations": len(forced),
             "requests_moved": sum(m.requests_moved for m in fleet.migrations),
             "dropped_moved_requests": dropped,
+            "failures": len(fleet.failed_instances),
+            "recovered_tenants": sorted(
+                tid for r in fleet.recoveries for tid in r.placed),
+            "cold_restarts": sorted(
+                tid for r in fleet.recoveries for tid in r.cold),
+            "requeued_requests": sorted(recovered_ids),
+            "recovery_queued": list(fleet.recovery_queue),
             "oracle_agreement": acct["oracle_agreement"],
             "scale_ups": (fleet.autoscaler.accounting()["scale_ups"]
                           if autoscale else 0),
@@ -312,7 +352,9 @@ def replay_fleet(
                 str(i.iid): {"admitted": i.admitted,
                              "migrated_in": i.migrated_in,
                              "migrated_out": i.migrated_out,
+                             "recovered": i.recovered,
                              "retired": i.retired,
+                             "failed": i in fleet.failed_instances,
                              "completed": sum(
                                  1 for r in i.service.tenants.values()
                                  if r.state == COMPLETED)}
@@ -351,6 +393,14 @@ def main() -> None:
     ap.add_argument("--force-migration", action="store_true",
                     help="guarantee >= 1 live migration during the replay "
                          "(--instances > 1; smoke-run determinism)")
+    ap.add_argument("--kill-instance", action="store_true",
+                    help="fault injection: crash the most-loaded instance "
+                         "mid-replay; its tenants recover onto survivors "
+                         "(--instances > 1)")
+    ap.add_argument("--ckpt-cadence", type=int, default=0,
+                    help="async per-tenant cadence checkpoints every N "
+                         "trained steps (0 disables; enables the warm "
+                         "recovery path under --kill-instance)")
     args = ap.parse_args()
     if args.philly:
         trace = philly_style_trace(horizon_min=args.tenants * 2.0,
@@ -372,7 +422,9 @@ def main() -> None:
                                   n_instances=args.instances,
                                   policy=args.policy,
                                   autoscale=args.autoscale,
-                                  force_migration=args.force_migration)
+                                  force_migration=args.force_migration,
+                                  kill_instance=args.kill_instance,
+                                  ckpt_cadence=args.ckpt_cadence)
         else:
             report = replay_trace(trace,
                                   requests_per_min=args.requests_per_min)

@@ -28,7 +28,8 @@ simulator's abstract predictions can be validated against real execution
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import os
+from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional
 
 import numpy as np
@@ -41,7 +42,7 @@ from repro.core.registry import ModelGenerator, load_task_tree, slice_task_tree
 from repro.core.task import ParallelismSpec, PEFTTask
 from repro.data.loader import HTaskLoader
 from repro.data.synthetic import token_stream
-from repro.distributed.checkpoint import restore_latest, save_checkpoint
+from repro.distributed.checkpoint import CheckpointStore
 from repro.train.optimizer import AdamWState
 from repro.obs.telemetry import TelemetryRegistry
 from repro.obs.tracing import instant, span
@@ -55,6 +56,12 @@ from repro.serve.inference import (
     DecodeScheduler,
     InferenceRequest,
 )
+from repro.serve.spec import (
+    RequestSpec,
+    TenantSpec,
+    coerce_request_spec,
+    coerce_tenant_spec,
+)
 
 QUEUED = "queued"
 RUNNING = "running"
@@ -62,6 +69,7 @@ COMPLETED = "completed"
 CANCELLED = "cancelled"
 REJECTED = "rejected"
 MIGRATED = "migrated"  # moved to another instance (fleet tier)
+LOST = "lost"          # instance died with the tenant attached (fleet tier)
 
 
 @dataclass
@@ -75,12 +83,17 @@ class MigrationTicket:
     generator — the target continues the training-data sequence exactly
     where the source left off, which is what makes the post-migration loss
     trajectory solo-parity — plus the drained inference requests awaiting
-    re-binding and the accounting the target record inherits."""
+    re-binding and the accounting the target record inherits.
 
-    task: PEFTTask
-    priority: int
-    target_steps: int
-    ckpt_dir: str
+    Crash recovery (PR 10) builds the same ticket WITHOUT a cooperating
+    source: the spec comes from the router's submission record, the
+    checkpoint directory is the tenant's latest committed cadence artifact
+    (None = nothing committed yet, cold restart), ``stream`` is None (a
+    fresh data stream — matching a solo restart from the same artifact)
+    and the requests are re-created from their ``RequestSpec`` records."""
+
+    spec: TenantSpec
+    ckpt_dir: Optional[str]
     steps_trained: int
     tokens: int
     effective_tokens: int
@@ -94,13 +107,26 @@ class MigrationTicket:
     # open at least as wide for the artifact to load exactly
     stack_rank: int = 0
 
+    @property
+    def task(self) -> PEFTTask:
+        return self.spec.task
+
+    @property
+    def task_id(self) -> str:
+        return self.spec.task_id
+
+    @property
+    def priority(self) -> int:
+        return self.spec.priority
+
+    @property
+    def target_steps(self) -> int:
+        return self.spec.target_steps
+
 
 @dataclass
 class TenantRecord:
-    task: PEFTTask
-    priority: int
-    target_steps: int
-    warm_start_dir: Optional[str] = None
+    spec: TenantSpec
     state: str = QUEUED
     reason: str = ""
     submit_step: int = 0          # service clock at submit
@@ -114,8 +140,24 @@ class TenantRecord:
     checkpoint_path: Optional[str] = None
 
     @property
+    def task(self) -> PEFTTask:
+        return self.spec.task
+
+    @property
+    def priority(self) -> int:
+        return self.spec.priority
+
+    @property
+    def target_steps(self) -> int:
+        return self.spec.target_steps
+
+    @property
+    def warm_start_dir(self) -> Optional[str]:
+        return self.spec.warm_start_dir
+
+    @property
     def task_id(self) -> str:
-        return self.task.task_id
+        return self.spec.task_id
 
     @property
     def queue_wait(self) -> int:
@@ -168,6 +210,8 @@ class MuxTuneService:
         drift_threshold: float = 1.0,
         drift_window: int = 8,
         telemetry: Optional[TelemetryRegistry] = None,
+        fault_dir: Optional[str] = None,
+        ckpt_cadence: int = 0,
     ):
         self.cfg = cfg
         self.parallelism = parallelism or ParallelismSpec()
@@ -184,6 +228,14 @@ class MuxTuneService:
         self.ckpt_dir = ckpt_dir
         self.seed = seed
         self.compact_threshold = compact_threshold
+        # fault tolerance (PR 10): every ``ckpt_cadence`` trained steps each
+        # resident tenant's full artifact (adapter + AdamW moments + slot
+        # step) is committed under <fault_dir>/<task_id> on a background
+        # thread — the latest committed artifact is what crash recovery
+        # warm-starts from, bounding lost work to one cadence interval
+        self.fault_dir = fault_dir
+        self.ckpt_cadence = int(ckpt_cadence)
+        self._fault_stores: Dict[str, CheckpointStore] = {}
 
         self.gen = ModelGenerator(cfg, seed=seed)
         self.gen.capacity_floor = reserve_slots
@@ -269,15 +321,19 @@ class MuxTuneService:
     # ------------------------------------------------------------------
     # tenant lifecycle
 
-    def submit(self, task: PEFTTask, priority: int = 0, target_steps: int = 10,
-               warm_start_dir: Optional[str] = None) -> TenantRecord:
+    def submit(self, spec, **legacy) -> TenantRecord:
+        """Admit, queue or reject one tenant.  New API: ``submit(TenantSpec)``
+        — the legacy ``submit(task, priority=..., target_steps=...,
+        warm_start_dir=...)`` form still works for one release (deprecation
+        warning)."""
+        spec = coerce_tenant_spec(spec, legacy, "MuxTuneService.submit")
+        task = spec.task
         if task.task_id in self.tenants:
             prev = self.tenants[task.task_id]
             if prev.state in (QUEUED, RUNNING):
                 raise ValueError(f"tenant {task.task_id} already live")
             self.retired.append(prev)  # resubmission keeps prior accounting
-        rec = TenantRecord(task, priority, target_steps, warm_start_dir,
-                           submit_step=self.clock)
+        rec = TenantRecord(spec, submit_step=self.clock)
         self.tenants[task.task_id] = rec
         instant("tenant.submit", track=f"tenant:{task.task_id}")
         decision = self.admission.check(self.resident, task)
@@ -286,7 +342,7 @@ class MuxTuneService:
             outcome = "admit"
         else:
             rec.reason = decision.reason
-            if self.queue.push(rec, priority):
+            if self.queue.push(rec, spec.priority):
                 outcome = "queue"
             else:
                 rec.state = REJECTED
@@ -298,12 +354,11 @@ class MuxTuneService:
                                reason=decision.reason).inc()
         return rec
 
-    def submit_request(self, task_id: str, prompt, max_new_tokens: int = 8,
-                       request_id: Optional[str] = None,
-                       temperature: float = 0.0, top_k: int = 0,
-                       top_p: float = 1.0, seed: int = 0,
-                       slo_class: int = 0) -> InferenceRequest:
+    def submit_request(self, task_id: str, prompt, **legacy
+                       ) -> InferenceRequest:
         """Submit an inference request against a tenant's adapter stack.
+        New API: ``submit_request(task_id, RequestSpec(prompt, ...))`` — the
+        legacy kwargs form still works for one release.
 
         The request queues for a decode-pool row and is served token-level
         interleaved with the training iterations (SLO-packed decode
@@ -314,13 +369,12 @@ class MuxTuneService:
         pool rows (FIFO within a class).  The tenant must be (or become)
         resident; requests of a departing tenant are cancelled with
         ``tenant_departed``."""
-        rid = request_id or f"req{len(self.coserve.requests)}-{task_id}"
-        req = InferenceRequest(rid, task_id,
-                               np.asarray(prompt, np.int32).reshape(-1),
-                               max_new_tokens, submit_clock=self.clock,
-                               temperature=float(temperature),
-                               top_k=int(top_k), top_p=float(top_p),
-                               seed=int(seed), slo_class=int(slo_class))
+        spec = coerce_request_spec(prompt, legacy,
+                                   "MuxTuneService.submit_request")
+        rid = (spec.request_id
+               or f"req{len(self.coserve.requests)}-{task_id}")
+        req = InferenceRequest.from_spec(spec, task_id, rid,
+                                         submit_clock=self.clock)
         if self.cfg.family not in ("dense", "vlm", "moe"):
             # the bind step's prefill-into-cache needs a full-depth KV stack;
             # reject up front instead of crashing the training iteration the
@@ -358,6 +412,39 @@ class MuxTuneService:
             raise ValueError(f"tenant {task_id} not running ({rec.state})")
         return self.coserve.drain_task(task_id)
 
+    def _tenant_artifact(self, task_id: str, include_optimizer: bool = True):
+        """(tree, extra) of one RESIDENT tenant's checkpoint artifact — THE
+        layout every checkpoint surface shares (PR 10): migration
+        checkpoint-out, completion checkpoints (adapter-only) and the fault-
+        tolerance cadence writes all serialize exactly this through one
+        ``CheckpointStore``, so any of them warm-starts any restore path."""
+        rec = self.tenants[task_id]
+        reg = self.gen.registered
+        gi = reg.task_index(task_id)
+        kind = rec.task.adapter.kind
+        sub: Any = slice_task_tree(self.cfg, reg.mta, reg.adapter_params, gi)
+        extra: Dict[str, Any] = {
+            "task_id": task_id,
+            "steps_trained": rec.steps_trained,
+            "losses": rec.losses[-8:],
+            "priority": rec.priority,
+            "target_steps": rec.target_steps,
+            # the rank-padded width the tenant trained at: crash recovery
+            # reads this from the manifest to re-open the restoring stack
+            # at least as wide (exact warm-start parity)
+            "stack_rank": int(reg.mta.kind_rank[kind]),
+        }
+        if include_optimizer:
+            sub = {
+                "params": sub,
+                "m": slice_task_tree(self.cfg, reg.mta, reg.opt_state.m, gi),
+                "v": slice_task_tree(self.cfg, reg.mta, reg.opt_state.v, gi),
+            }
+            slot = int(reg.mta.task_slot[gi])
+            extra["slot_step"] = float(
+                np.asarray(self.engine._slot_steps[kind])[slot])
+        return sub, extra
+
     def checkpoint_out_tenant(self, task_id: str, ckpt_dir: str,
                               include_optimizer: bool = True) -> str:
         """Migration phase 2 (checkpoint out): atomically checkpoint one
@@ -366,29 +453,43 @@ class MuxTuneService:
         migration warm-start restores for an exactly solo-parity loss
         trajectory on the target instance."""
         rec = self.tenants[task_id]
-        reg = self.gen.registered
-        gi = reg.task_index(task_id)
-        sub: Any = slice_task_tree(self.cfg, reg.mta, reg.adapter_params, gi)
-        extra: Dict[str, Any] = {"task_id": task_id,
-                                 "steps_trained": rec.steps_trained,
-                                 "losses": rec.losses[-8:]}
-        if include_optimizer:
-            sub = {
-                "params": sub,
-                "m": slice_task_tree(self.cfg, reg.mta, reg.opt_state.m, gi),
-                "v": slice_task_tree(self.cfg, reg.mta, reg.opt_state.v, gi),
-            }
-            kind = rec.task.adapter.kind
-            slot = int(reg.mta.task_slot[gi])
-            extra["slot_step"] = float(
-                np.asarray(self.engine._slot_steps[kind])[slot])
+        sub, extra = self._tenant_artifact(task_id, include_optimizer)
         with span("service.checkpoint_out", track="service",
                   args={"task": task_id, "optimizer": include_optimizer}):
-            path = save_checkpoint(ckpt_dir, rec.steps_trained, sub,
-                                   extra=extra)
+            path = CheckpointStore(ckpt_dir).save(rec.steps_trained, sub,
+                                                  extra=extra)
         rec.checkpoint_path = path
         self.telemetry.counter("service.checkpoint", direction="out").inc()
         return path
+
+    # ------------------------------------------------------------------
+    # fault-tolerance cadence checkpoints (PR 10)
+
+    def fault_store(self, task_id: str) -> Optional[CheckpointStore]:
+        """The tenant's cadence-checkpoint store (<fault_dir>/<task_id>),
+        or None when the service runs without a fault directory."""
+        if not self.fault_dir:
+            return None
+        st = self._fault_stores.get(task_id)
+        if st is None:
+            st = CheckpointStore(os.path.join(self.fault_dir, task_id),
+                                 keep=2)
+            self._fault_stores[task_id] = st
+        return st
+
+    def _cadence_checkpoint(self, rec: TenantRecord) -> None:
+        """Commit one tenant's full artifact asynchronously: the device
+        slices are host-copied now (one sync), serialization and the atomic
+        rename happen on the store's background thread — the training loop
+        never blocks on checkpoint IO."""
+        sub, extra = self._tenant_artifact(rec.task_id,
+                                           include_optimizer=True)
+        with span("service.checkpoint_cadence", track="service",
+                  args={"task": rec.task_id, "step": rec.steps_trained}):
+            self.fault_store(rec.task_id).save_async(rec.steps_trained, sub,
+                                                     extra=extra)
+        self.telemetry.counter("service.checkpoint",
+                               direction="cadence").inc()
 
     def release_tenant(self, task_id: str, ckpt_dir: str,
                        requests: Optional[List[InferenceRequest]] = None,
@@ -403,8 +504,7 @@ class MuxTuneService:
         stream = self._streams.get(task_id)
         kind = rec.task.adapter.kind
         ticket = MigrationTicket(
-            task=rec.task, priority=rec.priority,
-            target_steps=rec.target_steps, ckpt_dir=ckpt_dir,
+            spec=rec.spec, ckpt_dir=ckpt_dir,
             steps_trained=rec.steps_trained, tokens=rec.tokens,
             effective_tokens=rec.effective_tokens,
             decode_tokens=rec.decode_tokens, losses=list(rec.losses),
@@ -434,8 +534,8 @@ class MuxTuneService:
         if not decision:
             raise ValueError(
                 f"migration target cannot admit {tid}: {decision.reason}")
-        rec = TenantRecord(task, ticket.priority, ticket.target_steps,
-                           warm_start_dir=ticket.ckpt_dir,
+        rec = TenantRecord(replace(ticket.spec,
+                                   warm_start_dir=ticket.ckpt_dir),
                            submit_step=self.clock)
         rec.steps_trained = ticket.steps_trained
         rec.tokens = ticket.tokens
@@ -529,17 +629,16 @@ class MuxTuneService:
         }
         # strict_shapes=False: the artifact keeps its SAVED rank-pad width
         # (cohort-dependent); load_task_tree owns the adaptation rules
+        store = CheckpointStore(rec.warm_start_dir)
         full, res = True, None
         try:
-            res = restore_latest(rec.warm_start_dir, like_full,
-                                 strict_shapes=False)
+            res = store.restore(like_full, strict_shapes=False)
         except (ValueError, KeyError, IOError):
             res = None
         if res is None:
             full = False
             try:
-                res = restore_latest(rec.warm_start_dir, like,
-                                     strict_shapes=False)
+                res = store.restore(like, strict_shapes=False)
             except (ValueError, KeyError, IOError):
                 rec.reason = "warm_start_shape_mismatch"
                 return
@@ -577,23 +676,21 @@ class MuxTuneService:
 
     def _detach(self, recs: List[TenantRecord], checkpoint: bool) -> None:
         assert self.engine is not None
-        reg = self.gen.registered
         if checkpoint and self.ckpt_dir:
             for r in recs:
-                gi = reg.task_index(r.task_id)
-                sub = slice_task_tree(self.cfg, reg.mta, reg.adapter_params, gi)
-                with span("service.checkpoint_out", track="service",
-                          args={"task": r.task_id}):
-                    path = save_checkpoint(
-                        f"{self.ckpt_dir}/{r.task_id}", r.steps_trained, sub,
-                        extra={"task_id": r.task_id,
-                               "steps_trained": r.steps_trained,
-                               "losses": r.losses[-8:]})
-                r.checkpoint_path = path
-                self.telemetry.counter("service.checkpoint",
-                                       direction="out").inc()
+                # completion artifacts stay adapter-only: a completed tenant
+                # resubmits into a DIFFERENT optimizer (moments restart), so
+                # only the adapter values travel
+                self.checkpoint_out_tenant(
+                    r.task_id, f"{self.ckpt_dir}/{r.task_id}",
+                    include_optimizer=False)
         ids = [r.task_id for r in recs]
         for tid in ids:
+            # join any in-flight cadence write before the tenant leaves, so
+            # its last committed artifact is durable (and errors surface)
+            st = self._fault_stores.pop(tid, None)
+            if st is not None:
+                st.wait()
             self._streams.pop(tid, None)
             self.coserve.drop_task(tid, self.clock)
             instant("tenant.detach", track=f"tenant:{tid}")
@@ -744,6 +841,14 @@ class MuxTuneService:
             rec.effective_tokens += eff
             if rec.steps_trained >= rec.target_steps:
                 completed.append(rec)
+        if self.fault_dir and self.ckpt_cadence > 0:
+            for task in self.plan.tasks:
+                rec = self.tenants[task.task_id]
+                # completing tenants get their (durable, synchronous)
+                # completion checkpoint in _detach below instead
+                if (rec.steps_trained < rec.target_steps
+                        and rec.steps_trained % self.ckpt_cadence == 0):
+                    self._cadence_checkpoint(rec)
         if completed:
             for r in completed:
                 r.state = COMPLETED

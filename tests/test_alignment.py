@@ -7,7 +7,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.alignment import align_tasks, chunk_size_for, pow2_divisor
 from repro.core.task import PEFTTask
-from repro.peft.adapters import AdapterConfig
+from repro.peft.methods import AdapterConfig
 
 
 def _task(tid, lens, mb, pad):

@@ -18,7 +18,7 @@ from repro.core.cost_model import (
 from repro.core.fusion import build_htask
 from repro.core.task import ParallelismSpec
 from repro.data.synthetic import make_task
-from repro.peft.adapters import AdapterConfig
+from repro.peft.methods import AdapterConfig
 
 CFG = smoke_config("llama3.2-3b")
 PAR = ParallelismSpec()

@@ -8,12 +8,14 @@ import pytest
 
 from repro.distributed.checkpoint import (
     AsyncCheckpointer,
+    CheckpointStore,
     latest_step,
     prune_checkpoints,
     restore_checkpoint,
     save_checkpoint,
 )
 from repro.distributed.fault_tolerance import (
+    ElasticPlanner,
     StragglerMitigator,
     SupervisorConfig,
     TrainSupervisor,
@@ -21,6 +23,7 @@ from repro.distributed.fault_tolerance import (
     simulated_failure,
 )
 from repro.core.task import ParallelismSpec
+from repro.peft.methods import get_method, method_names
 
 
 def _tree(key):
@@ -108,6 +111,97 @@ def test_elastic_restore_respec():
     assert new.tp == 16
     new2 = elastic_respec(old, 24, prefer_tp=16)
     assert new2.total_chips == 24
+
+
+@pytest.mark.parametrize("kind", sorted(method_names()))
+def test_store_roundtrip_every_peft_method(tmp_path, kind):
+    """The unified CheckpointStore round-trips every registered method's
+    declared artifact layout (the checkpoint_schema contract)."""
+    schema = get_method(kind).checkpoint_schema(4, 16, 12)
+    rng = np.random.RandomState(hash(kind) % (2 ** 31))
+    tree = {
+        leaf: rng.randn(*meta["shape"]).astype(meta["dtype"])
+        if meta["shape"] else np.asarray(rng.randn(), meta["dtype"])
+        for leaf, meta in schema.items()
+    }
+    store = CheckpointStore(str(tmp_path))
+    store.save(7, tree, extra={"kind": kind, "steps_trained": 7})
+    like = {k: np.zeros_like(v) for k, v in tree.items()}
+    step, out, extra = store.restore(like)
+    assert step == 7 and extra["kind"] == kind
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(out[k]), tree[k])
+
+
+def test_store_kill_mid_write_atomic(tmp_path, key, monkeypatch):
+    """A crash inside save() — before the rename commit — must leave
+    restore_latest() on the previous committed step, never a torn one."""
+    tree = _tree(key)
+    store = CheckpointStore(str(tmp_path))
+    store.save(1, tree, extra={"steps_trained": 1})
+
+    real_rename = os.rename
+
+    def dying_rename(src, dst):
+        raise simulated_failure()
+
+    monkeypatch.setattr(os, "rename", dying_rename)
+    with pytest.raises(RuntimeError):
+        store.save(2, tree, extra={"steps_trained": 2})
+    monkeypatch.setattr(os, "rename", real_rename)
+    assert store.latest_step() == 1
+    assert store.read_extra()["steps_trained"] == 1
+    step, out, _ = store.restore(jax.tree.map(jnp.zeros_like, tree))
+    assert step == 1
+
+
+def test_store_kill_mid_serialization_atomic(tmp_path, key, monkeypatch):
+    """Dying while leaves are still being serialized (before the manifest
+    exists) is equally invisible to readers."""
+    tree = _tree(key)
+    store = CheckpointStore(str(tmp_path))
+    store.save(3, tree)
+
+    real_save = np.save
+    calls = {"n": 0}
+
+    def dying_save(f, arr, **kw):
+        calls["n"] += 1
+        if calls["n"] > 1:  # die mid-way through the leaf files
+            raise simulated_failure()
+        return real_save(f, arr, **kw)
+
+    monkeypatch.setattr(np, "save", dying_save)
+    with pytest.raises(RuntimeError):
+        store.save(4, tree)
+    monkeypatch.setattr(np, "save", real_save)
+    assert store.latest_step() == 3
+    assert store.restore(jax.tree.map(jnp.zeros_like, tree))[0] == 3
+
+
+def test_store_async_ordering_and_errors(tmp_path, key):
+    tree = _tree(key)
+    store = CheckpointStore(str(tmp_path), keep=2)
+    for s in (1, 2, 3):
+        store.save_async(s, tree, extra={"steps_trained": s})
+    store.wait()
+    assert store.latest_step() == 3
+    assert store.read_extra()["steps_trained"] == 3
+    committed = [n for n in os.listdir(str(tmp_path))
+                 if n.startswith("step_") and not n.endswith(".tmp")]
+    assert len(committed) == 2  # keep=2 pruned step 1
+
+
+def test_elastic_planner_recovery_order_and_plan():
+    planner = ElasticPlanner()
+    # priority first, then progress, then id (deterministic)
+    orphans = [("a", 0, 9), ("b", 1, 2), ("c", 0, 9), ("d", 1, 5)]
+    assert planner.recovery_order(orphans) == ["d", "b", "a", "c"]
+    capacity = {"d": 1, "b": None, "a": 0, "c": None}
+    actions = planner.plan_recovery(orphans, lambda tid: capacity[tid])
+    assert [(a.tenant_id, a.action, a.target) for a in actions] == [
+        ("d", "readmit", 1), ("b", "queue", None),
+        ("a", "readmit", 0), ("c", "queue", None)]
 
 
 def test_straggler_rebalance():

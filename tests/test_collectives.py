@@ -92,7 +92,8 @@ def test_opt_shardings_task_axis():
     the data-parallel mesh axis (ROADMAP item: moments were replicated)."""
     from repro.configs import smoke_config
     from repro.launch.steps import opt_shardings
-    from repro.peft.adapters import LORA, AdapterConfig
+    from repro.peft.adapters import LORA
+    from repro.peft.methods import AdapterConfig
     from repro.peft.multitask import MultiTaskAdapters
     from repro.train.optimizer import adamw_init
 

@@ -26,7 +26,7 @@ from repro.configs import smoke_config
 from repro.core.task import ParallelismSpec
 from repro.data.synthetic import make_task
 from repro.models.transformer import build_model
-from repro.peft.adapters import AdapterConfig
+from repro.peft.methods import AdapterConfig
 from repro.peft.methods import get_method, method_names
 from repro.peft.multitask import MultiTaskAdapters, TaskSegments
 from repro.serve import CoServeConfig, MuxTuneService

@@ -14,7 +14,8 @@ import pytest
 from repro.configs import smoke_config
 from repro.core import ExecutionPlanner, ModelGenerator, ParallelismSpec, PEFTEngine
 from repro.data import HTaskLoader, make_task
-from repro.peft.adapters import LORA, AdapterConfig
+from repro.peft.adapters import LORA
+from repro.peft.methods import AdapterConfig
 
 CFG = smoke_config("llama3.2-3b")
 

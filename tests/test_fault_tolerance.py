@@ -1,0 +1,269 @@
+"""Elastic fault tolerance under live serving (PR 10 acceptance).
+
+Four guarantees:
+
+  (a) CADENCE CHECKPOINTS — a service with a fault directory commits each
+      tenant's full artifact (adapter + AdamW moments + per-slot step
+      count) every ``ckpt_cadence`` trained steps, asynchronously, through
+      the unified ``CheckpointStore`` (atomic, latest-committed-wins).
+  (b) KILL + RECOVERY LOSS PARITY — an instance killed mid-replay loses
+      its tenants at most one cadence interval of progress; each recovers
+      onto a survivor from its latest committed checkpoint, and the
+      post-recovery loss trajectory matches a solo service warm-started
+      from the SAME artifact at rtol 2e-4 (recovery is a restart, not an
+      approximation).
+  (c) DECODE SURVIVAL — an in-flight decode request on the killed
+      instance is re-created from its fleet-side ``RequestSpec`` record on
+      the tenant's new owner and completes with seeded-sampling tokens
+      identical to a no-kill control; nothing is ever cancelled.
+  (d) SPEC SUBMISSION API — ``TenantSpec``/``RequestSpec`` submissions are
+      warning-free; the legacy kwargs forms still work for one release
+      with a DeprecationWarning; mixing spec + kwargs is a TypeError.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.task import ParallelismSpec
+from repro.data.synthetic import make_task
+from repro.distributed.checkpoint import CheckpointStore
+from repro.obs.tracing import SpanTracer, set_tracer, validate_chrome_trace
+from repro.peft.adapters import LORA
+from repro.peft.methods import AdapterConfig
+from repro.serve import (COMPLETED, LOST, CoServeConfig, MuxTuneService,
+                         RequestSpec, TenantSpec)
+from repro.serve import spec as spec_mod
+from repro.serve.spec import coerce_request_spec, coerce_tenant_spec
+from repro.fleet import FleetRouter
+
+CFG = smoke_config("llama3.2-3b")
+
+
+def _task(tid, dataset="sst2", rank=4, seed=0, **adapter_kw):
+    return make_task(tid, dataset, micro_batch=1,
+                     adapter=AdapterConfig(LORA, rank=rank, **adapter_kw),
+                     seed=seed)
+
+
+def _service(fault_dir=None, cadence=0, coserve=None, lr=5e-3):
+    return MuxTuneService(CFG, ParallelismSpec(), lr=lr, n_micro=1,
+                          enable_fusion=False, reserve_slots=4, seed=0,
+                          coserve=coserve, fault_dir=fault_dir,
+                          ckpt_cadence=cadence)
+
+
+def _factory(fault_dir=None, cadence=0, coserve=None, lr=5e-3):
+    def make(iid):
+        return _service(fault_dir, cadence, coserve, lr)
+    return make
+
+
+# ---------------------------------------------------------------------------
+# (a) cadence checkpoints
+
+
+def test_cadence_checkpoints_commit_full_artifact(tmp_path):
+    svc = _service(fault_dir=str(tmp_path), cadence=2)
+    svc.submit(TenantSpec(_task("t0"), target_steps=5))
+    for _ in range(5):
+        svc.step()
+    assert svc.tenants["t0"].state == COMPLETED
+    store = CheckpointStore(str(tmp_path / "t0"))
+    # cadence hits at steps 2 and 4 (step 5 completes -> completion
+    # checkpoint path, not the cadence store)
+    assert store.latest_step() == 4
+    extra = store.read_extra()
+    assert extra["steps_trained"] == 4
+    assert extra["stack_rank"] == 4
+    assert extra["slot_step"] == 4.0
+    assert len(extra["losses"]) == 4
+    # full-artifact layout: adapter params + AdamW moments
+    import json
+    with open(tmp_path / "t0" / "step_00000004" / "manifest.json") as f:
+        manifest_keys = {k.split("/")[0]
+                         for k in json.load(f)["leaves"]}
+    assert manifest_keys == {"params", "m", "v"}
+
+
+def test_cadence_store_prunes_to_keep(tmp_path):
+    """Every trained step commits under cadence 1; the per-tenant store
+    keeps only the latest 2 artifacts (bounded disk) and latest wins."""
+    svc = _service(fault_dir=str(tmp_path), cadence=1)
+    svc.submit(TenantSpec(_task("t0"), target_steps=4))
+    for _ in range(4):
+        svc.step()
+    store = CheckpointStore(str(tmp_path / "t0"))
+    assert store.latest_step() == 3  # keep=2 prunes older cadence steps
+    assert store.read_extra()["steps_trained"] == 3
+
+
+# ---------------------------------------------------------------------------
+# (b) kill + recovery loss parity
+
+
+def test_killed_instance_recovers_with_loss_parity(tmp_path):
+    """Acceptance: kill at step 5 with cadence 2 -> the tenant resumes
+    from the step-4 artifact (1 step lost <= cadence), completes, and its
+    post-recovery losses match a solo warm start from the same artifact."""
+    fault_dir = str(tmp_path / "fault")
+    fleet = FleetRouter(_factory(fault_dir, cadence=2), n_instances=2,
+                        policy="fcfs")
+    fleet.submit(TenantSpec(_task("t0", seed=0), target_steps=8))
+    for _ in range(5):
+        fleet.step()
+    src = fleet.placements["t0"]
+    assert fleet.record("t0").steps_trained == 5
+    # quiesce checkpoint IO before the kill: a real crash may also lose
+    # the still-in-flight async commit (then the bound is two intervals);
+    # the acceptance bound below is about the latest COMMITTED artifact
+    for st in fleet.instances[src].service._fault_stores.values():
+        st.wait()
+
+    tracer = SpanTracer()
+    prev = set_tracer(tracer)
+    try:
+        report = fleet.kill(src)
+    finally:
+        set_tracer(prev)
+    assert report.orphans == ["t0"] and report.placed["t0"] != src
+    assert report.cold == [] and report.queued == []
+    stats = validate_chrome_trace(
+        tracer.chrome_trace(),
+        require_phases=["fleet.recover", "fleet.recover.plan",
+                        "fleet.recover.warm_start"])
+    assert stats["phases"]["fleet.recover.warm_start"] == 1
+
+    rec = fleet.record("t0")
+    assert rec.steps_trained == 4, "resumed from latest committed artifact"
+    lost = 5 - rec.steps_trained
+    assert 0 < lost <= 2, "loses at most one cadence interval"
+    # post-mortem record on the dead instance
+    dead = fleet.failed_instances[0].service.tenants["t0"]
+    assert dead.state == LOST and dead.reason == "instance_failure"
+
+    fleet.run(max_iters=32)
+    rec = fleet.record("t0")
+    assert rec.state == COMPLETED and rec.steps_trained == 8
+
+    # solo control: a fresh service warm-started from the SAME artifact
+    solo = _service()
+    solo.submit(TenantSpec(_task("t0", seed=0), target_steps=4,
+                           warm_start_dir=str(tmp_path / "fault" / "t0")))
+    for _ in range(8):
+        solo.step()
+    srec = solo.tenants["t0"]
+    assert srec.state == COMPLETED and srec.steps_trained == 4
+    np.testing.assert_allclose(rec.losses[-4:], srec.losses,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_recovery_queues_without_capacity_then_drains(tmp_path):
+    """Orphans with no feasible survivor wait in the recovery queue and
+    re-admit when capacity returns (here: an explicit spawn)."""
+    fleet = FleetRouter(_factory(str(tmp_path), cadence=2), n_instances=1,
+                        policy="fcfs")
+    fleet.submit(TenantSpec(_task("t0"), target_steps=6))
+    for _ in range(3):
+        fleet.step()
+    report = fleet.kill(fleet.placements["t0"])
+    assert report.placed == {} and report.queued == ["t0"]
+    assert fleet.recovery_queue == ["t0"]
+    assert fleet.has_work()
+    fleet.spawn()
+    fleet.step()
+    assert fleet.recovery_queue == []
+    assert "t0" in fleet.placements
+    fleet.run(max_iters=32)
+    assert fleet.record("t0").state == COMPLETED
+
+
+# ---------------------------------------------------------------------------
+# (c) decode request survival
+
+
+def test_inflight_decode_request_survives_kill():
+    """A partially-decoded request on the killed instance is re-created on
+    the tenant's new owner from its RequestSpec and finishes with tokens
+    identical to a no-kill control (lr=0 -> same weights; cold recovery
+    re-initializes the adapter deterministically)."""
+    prompt = np.arange(1, 6)
+    rspec = RequestSpec(prompt, max_new_tokens=6, temperature=0.7, top_k=5,
+                        seed=11, request_id="r0")
+
+    def run(kill):
+        fleet = FleetRouter(
+            _factory(coserve=CoServeConfig(max_tokens_per_iter=1), lr=0.0),
+            n_instances=2, policy="fcfs")
+        fleet.submit(TenantSpec(_task("t0", lr=0.0, seed=0),
+                                target_steps=10))
+        req = fleet.submit_request("t0", rspec)
+        fleet.step()  # partial decode: 1 token out, 5 pending
+        assert req.state == "decoding"
+        if kill:
+            report = fleet.kill(fleet.placements["t0"])
+            assert report.requeued_requests == ["r0"]
+        for _ in range(24):
+            fleet.step()
+            for inst in fleet.instances.values():
+                live = inst.service.coserve.requests.get("r0")
+                if live is not None:
+                    req = live  # recovery re-creates the request object
+            if req.state == "done":
+                break
+        return req
+
+    control = run(kill=False)
+    moved = run(kill=True)
+    assert control.state == moved.state == "done"
+    assert moved.reason != "tenant_departed"
+    np.testing.assert_array_equal(control.tokens_out, moved.tokens_out)
+
+
+# ---------------------------------------------------------------------------
+# (d) unified submission spec API
+
+
+def _clear_warn_cache():
+    spec_mod._WARNED.clear()
+
+
+def test_spec_submissions_are_warning_free():
+    _clear_warn_cache()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        t = coerce_tenant_spec(TenantSpec(_task("t0"), priority=2), {},
+                               "caller")
+        r = coerce_request_spec(RequestSpec((1, 2, 3), seed=7), {}, "caller")
+    assert t.priority == 2 and r.seed == 7
+    assert r.prompt == (1, 2, 3)
+    np.testing.assert_array_equal(r.prompt_array(),
+                                  np.asarray([1, 2, 3], np.int32))
+
+
+def test_legacy_kwargs_warn_once_per_callsite():
+    _clear_warn_cache()
+    task = _task("t0")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        s1 = coerce_tenant_spec(task, {"priority": 1, "target_steps": 3},
+                                "svc.submit")
+        coerce_tenant_spec(task, {"priority": 1}, "svc.submit")
+        coerce_request_spec([1, 2], {"max_new_tokens": 4}, "svc.request")
+    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 2  # once per caller name, not per call
+    assert s1.priority == 1 and s1.target_steps == 3
+    assert isinstance(s1, TenantSpec)
+
+
+def test_spec_plus_kwargs_is_a_type_error():
+    _clear_warn_cache()
+    with pytest.raises(TypeError, match="not accepted"):
+        coerce_tenant_spec(TenantSpec(_task("t0")), {"priority": 1}, "c")
+    with pytest.raises(TypeError, match="not accepted"):
+        coerce_request_spec(RequestSpec((1,)), {"seed": 3}, "c")
+    with pytest.raises(TypeError, match="unknown"):
+        coerce_tenant_spec(_task("t0"), {"no_such_arg": 1}, "c")
+    with pytest.raises(TypeError, match="unknown"):
+        coerce_request_spec([1], {"no_such_arg": 1}, "c")

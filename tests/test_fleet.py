@@ -28,7 +28,8 @@ from repro.configs import smoke_config
 from repro.core.task import ParallelismSpec
 from repro.data.synthetic import make_task
 from repro.obs.tracing import SpanTracer, set_tracer, validate_chrome_trace
-from repro.peft.adapters import AdapterConfig, LORA
+from repro.peft.adapters import LORA
+from repro.peft.methods import AdapterConfig
 from repro.serve import CoServeConfig, MuxTuneService
 from repro.serve.admission import AdmissionConfig
 from repro.serve.replay import replay_fleet, tiny_trace

@@ -592,7 +592,8 @@ def test_quant_matmul_op_tier_vs_xla(key):
 def _train_step_grads(cfg_name, targets, key, seq_len=32):
     from repro.configs import smoke_config
     from repro.models.transformer import build_model
-    from repro.peft.adapters import LORA, AdapterConfig
+    from repro.peft.adapters import LORA
+    from repro.peft.methods import AdapterConfig
     from repro.peft.multitask import MultiTaskAdapters, TaskSegments
 
     cfg = smoke_config(cfg_name)
@@ -667,7 +668,8 @@ def test_engine_step_signature_is_impl_sensitive():
     from repro.core import (ExecutionPlanner, ModelGenerator, ParallelismSpec,
                             PEFTEngine)
     from repro.data import make_task
-    from repro.peft.adapters import LORA, AdapterConfig
+    from repro.peft.adapters import LORA
+    from repro.peft.methods import AdapterConfig
 
     cfg = smoke_config("llama3.2-3b")
     tasks = [make_task("t0", "sst2", 2, AdapterConfig(LORA, rank=4), seed=0)]

@@ -7,7 +7,8 @@ import pytest
 
 from repro.configs import ARCH_NAMES, dryrun_cells, get_config, smoke_config
 from repro.models.transformer import build_model
-from repro.peft.adapters import AdapterConfig, LORA
+from repro.peft.adapters import LORA
+from repro.peft.methods import AdapterConfig
 from repro.peft.multitask import MultiTaskAdapters, TaskSegments
 
 

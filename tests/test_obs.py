@@ -241,7 +241,7 @@ def test_service_emits_spans_metrics_and_stays_bounded():
     from repro.configs import smoke_config
     from repro.core.task import ParallelismSpec
     from repro.data.synthetic import make_task
-    from repro.peft.adapters import AdapterConfig
+    from repro.peft.methods import AdapterConfig
     from repro.serve import CoServeConfig, MuxTuneService
 
     telemetry = TelemetryRegistry(ring_cap=8)

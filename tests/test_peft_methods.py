@@ -62,14 +62,29 @@ def test_legacy_shim_constants_and_kinds():
     assert set(KINDS) == set(KINDS2) == set(method_names())
 
 
-def test_deprecated_adapter_spec_warns_but_works():
-    from repro.peft.adapters import adapter_spec
+def test_retired_adapter_spec_raises_with_guidance():
+    """PR 3 deprecated the pre-registry wrappers with delegation for one
+    release; PR 10 retires them — they now raise with migration guidance."""
+    from repro.peft.adapters import (adapter_flops_per_token,
+                                     adapter_param_count, adapter_spec)
 
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        spec = adapter_spec("lora", 4, 32, 16, 3)
-    assert any(issubclass(w.category, DeprecationWarning) for w in rec)
-    assert spec["a"].shape == (3, 32, 4)
+    for fn, args in ((adapter_spec, ("lora", 4, 32, 16, 3)),
+                     (adapter_param_count, ("lora", 4, 32, 16)),
+                     (adapter_flops_per_token, ("lora", 4, 32, 16))):
+        with pytest.raises(RuntimeError, match="repro.peft.methods"):
+            fn(*args)
+
+
+def test_config_helpers_import_from_methods():
+    """AdapterConfig and friends moved to repro.peft.methods (PR 10); the
+    old adapters import path keeps re-exporting the same objects."""
+    from repro.peft import adapters, methods
+
+    assert adapters.AdapterConfig is methods.AdapterConfig
+    assert adapters.DEFAULT_TARGETS is methods.DEFAULT_TARGETS
+    assert adapters.base_op_dims is methods.base_op_dims
+    assert adapters.supports_attention_prefix is methods.supports_attention_prefix
+    assert methods.supports_attention_prefix(smoke_config("llama3.2-3b"))
 
 
 def test_unknown_kind_fails_loudly_with_guidance():

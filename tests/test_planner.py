@@ -27,7 +27,8 @@ from repro.core.subgraph import (
 )
 from repro.core.task import Bucket
 from repro.data import make_task
-from repro.peft.adapters import AdapterConfig, LORA
+from repro.peft.adapters import LORA
+from repro.peft.methods import AdapterConfig
 
 CFG = smoke_config("llama3.2-3b")
 PAR = ParallelismSpec(num_stages=4, chips_per_stage=1, tp=2)

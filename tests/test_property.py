@@ -14,7 +14,8 @@ from repro.core.pipeline_template import generate_template, simulate
 from repro.core.task import Bucket, PEFTTask
 from repro.data.synthetic import DATASETS, make_task
 from repro.distributed.collectives import compression_error
-from repro.peft.adapters import AdapterConfig, LORA
+from repro.peft.adapters import LORA
+from repro.peft.methods import AdapterConfig
 from repro.peft.multitask import TaskSegments
 from repro.train.optimizer import adamw_init, adamw_update, apply_updates
 

@@ -20,7 +20,8 @@ from repro.core.registry import slice_task_tree
 from repro.core.task import ParallelismSpec
 from repro.data.synthetic import make_task
 from repro.distributed.checkpoint import restore_latest
-from repro.peft.adapters import LORA, AdapterConfig
+from repro.peft.adapters import LORA
+from repro.peft.methods import AdapterConfig
 from repro.peft.multitask import MultiTaskAdapters
 from repro.serve import (
     CANCELLED,

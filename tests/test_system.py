@@ -8,7 +8,8 @@ import pytest
 from repro.configs import smoke_config
 from repro.core import ExecutionPlanner, ModelGenerator, ParallelismSpec, PEFTEngine
 from repro.data import HTaskLoader, make_task
-from repro.peft.adapters import ADAPTER_TUNING, IA3, LORA, AdapterConfig
+from repro.peft.adapters import ADAPTER_TUNING, IA3, LORA
+from repro.peft.methods import AdapterConfig
 from repro.peft.multitask import MultiTaskAdapters, TaskSegments
 from repro.train.optimizer import adamw_init, adamw_update, apply_updates
 
